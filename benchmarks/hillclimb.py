@@ -1,0 +1,94 @@
+"""§Perf hillclimbing driver: run named variants of selected cells and
+print the roofline deltas (hypothesis -> change -> before -> after).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell tinyllama-train
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Each variant: (name, run_cell kwargs). 'base' comes from the main sweep.
+CELLS = {
+    # memory-bound dense train cell; the fake-quant fusion story
+    "tinyllama-train": dict(
+        arch="tinyllama-1.1b", shape="train_4k", multi_pod=False,
+        variants=[
+            ("paperfaithful", dict(quant_impl="residual")),
+            ("noquant", dict(recipe_overrides=dict(quant_enabled=False))),
+            ("gatherbf16", dict(recipe_overrides=dict(
+                gather_dtype="bfloat16"))),
+        ],
+    ),
+    # worst roofline fraction + most collective-bound cell
+    "arctic-train": dict(
+        arch="arctic-480b", shape="train_4k", multi_pod=False,
+        variants=[
+            ("paperfaithful", dict(quant_impl="residual")),
+            ("gatherbf16", dict(recipe_overrides=dict(
+                gather_dtype="bfloat16"))),
+            ("gatherbf16mb8", dict(recipe_overrides=dict(
+                gather_dtype="bfloat16", microbatches=8))),
+        ],
+    ),
+    # decode cell: most collective-bound serving case (whole-model FSDP
+    # gather per token); levers: bf16 weights, TP-resident placement
+    "qwen110b-decode": dict(
+        arch="qwen1.5-110b", shape="decode_32k", multi_pod=False,
+        variants=[
+            ("servebf16", dict(serve_dtype="bfloat16")),
+            ("servebf16resident", dict(
+                serve_dtype="bfloat16",
+                plan_overrides=dict(serve_resident=True))),
+        ],
+    ),
+}
+
+
+def run(cell_key: str, only: str | None = None):
+    from repro.launch.dryrun import ART, run_cell
+
+    cell = CELLS[cell_key]
+    base_name = (f"{cell['arch']}__{cell['shape']}__"
+                 f"{'pod2x16x16' if cell['multi_pod'] else 'pod16x16'}__base.json")
+    base_path = os.path.join(ART, base_name)
+    base = json.load(open(base_path)) if os.path.exists(base_path) else None
+
+    rows = []
+    if base:
+        rows.append(("base", base))
+    for name, kw in cell["variants"]:
+        if only and name != only:
+            continue
+        print(f"--- variant {name} ---", flush=True)
+        rec = run_cell(cell["arch"], cell["shape"], cell["multi_pod"],
+                       variant=name, **kw)
+        rows.append((name, rec))
+
+    print(f"\n=== {cell_key} ===")
+    print(f"{'variant':16s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'dominant':>10s} {'peakGiB':>8s}")
+    for name, rec in rows:
+        rf = rec["roofline"]
+        print(f"{name:16s} {rf['compute_s']:10.3f} {rf['memory_s']:10.3f} "
+              f"{rf['collective_s']:10.3f} {rf['dominant']:>10s} "
+              f"{rec['per_device']['peak_hint_bytes']/2**30:8.1f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--alt-plan", action="store_true")
+    args = ap.parse_args()
+    run(args.cell, args.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Shared driver for the paper's experimental tables (MNIST / LeNet-5).
+
+Table 1: CGMQ (dir_1..3 x {layer, indiv}) vs FP32 at bound 0.40% RBOP.
+Table 2: dir_1..3, layer gates, bounds {0.40, 0.90, 1.40, 2.00, 5.00}%.
+Table 3: dir_1..3, indiv gates, same bounds.
+
+The FP32 pretrained model and the learned quantization ranges are shared
+across all CGMQ variants, exactly as in the paper ("All different choices of
+CGMQ start with the same pre-trained model and the same learned quantization
+ranges"). Bundles are cached under artifacts/bundles/.
+
+Data is the deterministic synthetic digit set (MNIST stand-in — no dataset
+downloads in this environment; see DESIGN.md §7). Scale tiers:
+
+  quick : CI-sized smoke (minutes)        — run.py default
+  paper : paper-shaped epoch counts (hours on 1 CPU core) — --tier paper
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.controller import CGMQConfig  # noqa: E402
+from repro.core.pipeline import (  # noqa: E402
+    PipelineConfig,
+    PretrainedBundle,
+    prepare_bundle,
+    run_cgmq_stage,
+)
+from repro.core.sites import PER_TENSOR, PER_WEIGHT, QuantConfig  # noqa: E402
+from repro.data.synthetic import digits  # noqa: E402
+from repro.models import lenet  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+TIERS = {
+    # (ntrain, ntest, pretrain, range, cgmq epochs, batch)
+    "smoke": (600, 200, 4, 2, 8, 64),
+    "quick": (2000, 500, 12, 3, 25, 128),
+    "paper": (10000, 2000, 250, 20, 250, 128),
+}
+
+GATE_LR = {"dir1": 0.01, "dir2": 0.01, "dir3": 0.001, "dir4": 0.01}
+GRAN = {"layer": PER_TENSOR, "indiv": PER_WEIGHT}
+BOUNDS = (0.004, 0.009, 0.014, 0.020, 0.050)
+
+
+@dataclasses.dataclass
+class Row:
+    method: str
+    hyperpar: str
+    acc: float
+    rgbop: float
+    bound: float
+    satisfied: bool
+    seconds: float
+
+    def fmt(self):
+        return (
+            f"{self.method:6s} {self.hyperpar:14s} acc={self.acc*100:6.2f}% "
+            f"RGBOP={self.rgbop*100:6.3f}% bound={self.bound*100:5.2f}% "
+            f"sat={'Y' if self.satisfied else 'N'} ({self.seconds:.0f}s)"
+        )
+
+    def csv(self):
+        return (
+            f"{self.method},{self.hyperpar},{self.acc:.4f},{self.rgbop:.6f},"
+            f"{self.bound:.4f},{int(self.satisfied)},{self.seconds:.1f}"
+        )
+
+
+def _data(tier):
+    ntr, nte, *_ = TIERS[tier]
+    xtr, ytr = digits(ntr, split="train")
+    xte, yte = digits(nte, split="test")
+    return (
+        (jnp.asarray(xtr), jnp.asarray(ytr)),
+        (jnp.asarray(xte), jnp.asarray(yte)),
+    )
+
+
+def _pcfg(tier, log=print):
+    ntr, nte, pe, re, ce, bs = TIERS[tier]
+    return PipelineConfig(
+        pretrain_epochs=pe, range_epochs=re, cgmq_epochs=ce,
+        batch_size=bs, eval_every=max(1, ce // 3), log=log,
+    )
+
+
+def get_bundle(tier: str, gran: str, *, log=print, cache=True) -> PretrainedBundle:
+    os.makedirs(os.path.join(ART, "bundles"), exist_ok=True)
+    path = os.path.join(ART, "bundles", f"lenet_{tier}_{gran}.pkl")
+    if cache and os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    train, test = _data(tier)
+    params = lenet.init_params(jax.random.PRNGKey(0))
+    # share FP32 pretraining across granularities via its own cache
+    fp_path = os.path.join(ART, "bundles", f"lenet_{tier}_fp32.pkl")
+    pretrained = None
+    if cache and os.path.exists(fp_path):
+        with open(fp_path, "rb") as f:
+            pretrained = pickle.load(f)
+    bundle = prepare_bundle(
+        lenet.forward, lenet.weight_lookup, params, train, test,
+        QuantConfig(granularity=GRAN[gran]), _pcfg(tier, log),
+        pretrained_params=pretrained,
+    )
+    if cache:
+        with open(fp_path, "wb") as f:
+            pickle.dump(jax.device_get(bundle.params), f)
+        with open(path, "wb") as f:
+            pickle.dump(jax.device_get(bundle), f)
+    return bundle
+
+
+def run_variant(
+    tier: str,
+    direction: str,
+    gran: str,
+    bound: float,
+    *,
+    log=lambda s: None,
+) -> Row:
+    bundle = get_bundle(tier, gran, log=log)
+    train, test = _data(tier)
+    t0 = time.time()
+    res = run_cgmq_stage(
+        lenet.forward, bundle, train, test,
+        CGMQConfig(budget_rbop=bound, direction=direction,
+                   gate_lr=GATE_LR[direction]),
+        _pcfg(tier, log),
+    )
+    return Row(
+        method="CGMQ",
+        hyperpar=f"{direction}, {gran}",
+        acc=res.final_test_acc,
+        rgbop=res.final_rbop,
+        bound=bound,
+        satisfied=res.satisfied,
+        seconds=time.time() - t0,
+    )
+
+
+def fp32_row(tier: str) -> Row:
+    bundle = get_bundle(tier, "layer", log=lambda s: None)
+    return Row("FP32", "-", bundle.fp32_test_acc, 1.0, 1.0, True, 0.0)
+
+
+def table1(tier="quick", directions=("dir1", "dir2", "dir3"), log=print):
+    rows = [fp32_row(tier)]
+    for gran in ("layer", "indiv"):
+        for d in directions:
+            rows.append(run_variant(tier, d, gran, 0.004))
+            log(rows[-1].fmt())
+    return rows
+
+
+def table_bounds(gran: str, tier="quick", directions=("dir1", "dir2", "dir3"),
+                 bounds=BOUNDS, log=print):
+    rows = []
+    for bound in bounds:
+        for d in directions:
+            rows.append(run_variant(tier, d, gran, bound))
+            log(rows[-1].fmt())
+    return rows
+
+
+def save_rows(rows, name):
+    os.makedirs(os.path.join(ART, "tables"), exist_ok=True)
+    path = os.path.join(ART, "tables", f"{name}.csv")
+    with open(path, "w") as f:
+        f.write("method,hyperpar,acc,rgbop,bound,satisfied,seconds\n")
+        for r in rows:
+            f.write(r.csv() + "\n")
+    return path

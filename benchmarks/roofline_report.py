@@ -1,0 +1,84 @@
+"""Render the §Roofline table from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--variant base]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(variant="base", out_dir=ART):
+    recs = []
+    if not os.path.isdir(out_dir):
+        return recs
+    for name in sorted(os.listdir(out_dir)):
+        if not name.endswith(f"__{variant}.json"):
+            continue
+        with open(os.path.join(out_dir, name)) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED: "
+                f"{r.get('error','?')[:40]} | | | | | |")
+    rf = r["roofline"]
+    uf = rf.get("useful_flops_ratio")
+    frac = rf.get("roofline_fraction")
+    peak = r["per_device"]["peak_hint_bytes"] / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {rf['compute_s']*1e3:9.1f} | {rf['memory_s']*1e3:9.1f} "
+        f"| {rf['collective_s']*1e3:9.1f} | {rf['dominant']:10s} "
+        f"| {'' if uf is None else f'{uf:.2f}'} "
+        f"| {'' if frac is None else f'{frac*100:.1f}%'} "
+        f"| {peak:6.1f} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | compute ms | memory ms | collective ms | "
+    "dominant | useful-flops | roofline-frac | peak GiB/dev |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.variant)
+    if args.csv:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+              "useful_flops,roofline_frac,peak_gib")
+        for r in recs:
+            if not r.get("ok"):
+                print(f"{r['arch']},{r['shape']},{r['mesh']},,,,FAILED,,,")
+                continue
+            rf = r["roofline"]
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{rf['compute_s']:.4g},{rf['memory_s']:.4g},"
+                  f"{rf['collective_s']:.4g},{rf['dominant']},"
+                  f"{rf.get('useful_flops_ratio') or ''},"
+                  f"{rf.get('roofline_fraction') or ''},"
+                  f"{r['per_device']['peak_hint_bytes']/2**30:.2f}")
+        return
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    oks = [r for r in recs if r.get("ok")]
+    print(f"\n{len(oks)}/{len(recs)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Benchmark harness entry point — one function per paper table + kernel
+micro-benchmarks + the roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
+metric) and writes full tables under artifacts/tables/.
+
+    PYTHONPATH=src python -m benchmarks.run [--tier smoke|quick|paper]
+                                            [--skip-tables]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def _time(fn, *args, iters=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+# Paper tables (Table 1 / 2 / 3)
+# ---------------------------------------------------------------------------
+
+
+def bench_table1(tier: str):
+    """Paper Table 1: CGMQ (dir x granularity) vs FP32 at bound 0.40%."""
+    from benchmarks.repro_tables import save_rows, table1
+
+    t0 = time.time()
+    rows = table1(tier=tier, log=lambda s: print("   ", s))
+    path = save_rows(rows, f"table1_{tier}")
+    dt = (time.time() - t0) * 1e6
+    best = max((r for r in rows if r.method == "CGMQ"), key=lambda r: r.acc)
+    print(f"table1_{tier},{dt:.0f},best_acc={best.acc:.4f}@rbop="
+          f"{best.rgbop*100:.3f}%")
+    return rows, path
+
+
+def bench_table_bounds(tier: str, gran: str, tableno: int):
+    """Paper Tables 2/3: dir x bound sweeps (layer / indiv gates)."""
+    from benchmarks.repro_tables import save_rows, table_bounds
+
+    t0 = time.time()
+    rows = table_bounds(gran, tier=tier, log=lambda s: print("   ", s))
+    path = save_rows(rows, f"table{tableno}_{tier}")
+    dt = (time.time() - t0) * 1e6
+    sat = sum(r.satisfied for r in rows)
+    print(f"table{tableno}_{tier},{dt:.0f},satisfied={sat}/{len(rows)}")
+    return rows, path
+
+
+# ---------------------------------------------------------------------------
+# Kernel micro-benchmarks (interpret-mode correctness + XLA-path timing)
+# ---------------------------------------------------------------------------
+
+
+def bench_fake_quant():
+    """Fused fake-quant vs the unfused 5-level residual chain (XLA path).
+
+    On CPU we time the jnp reference paths; the derived metric is the
+    bytes-moved ratio the fusion eliminates (the kernel's raison d'etre).
+    """
+    from repro.core.gates import gated_fake_quant, residual_fake_quant
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2048, 2048)),
+                    jnp.float32)
+    g = jnp.asarray(2.5)
+    b = jnp.asarray(1.0)
+    fused = jax.jit(lambda x: gated_fake_quant(x, g, b, True))
+    unfused = jax.jit(lambda x: residual_fake_quant(x, g, b, True))
+    t_f = _time(fused, x)
+    t_u = _time(unfused, x)
+    print(f"kernel_fake_quant_fused,{t_f:.0f},speedup_vs_residual="
+          f"{t_u/t_f:.2f}x")
+
+
+def bench_quant_matmul():
+    """int8 dequant GEMM (jnp path) vs fp32 GEMM — weight-bytes ratio."""
+    from repro.core.quantizer import quantize_to_int
+    from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(256, 2048)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2048, 2048)), jnp.float32)
+    codes, scale, bias = quantize_to_int(w, 8, jnp.max(jnp.abs(w), axis=0), True)
+    qmm = jax.jit(lambda x: quant_matmul_ref(x, codes, scale, bias))
+    mm = jax.jit(lambda x: x @ w)
+    t_q = _time(qmm, x)
+    t_m = _time(mm, x)
+    print(f"kernel_quant_matmul,{t_q:.0f},weight_bytes_ratio=0.25"
+          f";fp32_ref_us={t_m:.0f}")
+
+
+def bench_flash_attention():
+    """Interpret-mode flash attention vs dense reference (correctness run)."""
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    t_ref = _time(jax.jit(lambda q, k, v: attention_ref(q, k, v)), q, k, v,
+                  iters=3, warmup=1)
+    got = flash_attention_op(q, k, v)
+    want = attention_ref(q, k, v)
+    err = float(jnp.abs(got - want).max())
+    print(f"kernel_flash_attention,{t_ref:.0f},interpret_max_err={err:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# Roofline summary (reads dry-run artifacts)
+# ---------------------------------------------------------------------------
+
+
+def bench_roofline():
+    from benchmarks.roofline_report import load_records
+
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok")]
+    if not ok:
+        print("roofline,0,no_dryrun_artifacts")
+        return
+    fracs = [r["roofline"]["roofline_fraction"] for r in ok
+             if r["roofline"].get("roofline_fraction")]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    med = float(np.median(fracs)) if fracs else 0.0
+    print(f"roofline,{len(ok)},cells_ok={len(ok)}/{len(recs)};"
+          f"median_train_roofline_frac={med*100:.1f}%;dominants={doms}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", default="smoke",
+                    choices=["smoke", "quick", "paper"])
+    ap.add_argument("--skip-tables", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    bench_fake_quant()
+    bench_quant_matmul()
+    bench_flash_attention()
+    if not args.skip_tables:
+        bench_table1(args.tier)
+        bench_table_bounds(args.tier, "layer", 2)
+        bench_table_bounds(args.tier, "indiv", 3)
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

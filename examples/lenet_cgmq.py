@@ -1,0 +1,38 @@
+"""Paper reproduction driver: LeNet-5 + CGMQ on the synthetic digit set.
+
+    PYTHONPATH=src python examples/lenet_cgmq.py --tier smoke \
+        --direction dir1 --gran layer --bound 0.004
+
+Tiers (see benchmarks/repro_tables.py): smoke | quick | paper.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.repro_tables import fp32_row, run_variant  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", default="smoke", choices=["smoke", "quick", "paper"])
+    ap.add_argument("--direction", default="dir1",
+                    choices=["dir1", "dir2", "dir3", "dir4"])
+    ap.add_argument("--gran", default="layer", choices=["layer", "indiv"])
+    ap.add_argument("--bound", type=float, default=0.004)
+    args = ap.parse_args()
+
+    print(fp32_row(args.tier).fmt())
+    row = run_variant(args.tier, args.direction, args.gran, args.bound,
+                      log=print)
+    print(row.fmt())
+    if not row.satisfied:
+        print("NOTE: cost constraint not yet satisfied at this tier's epoch "
+              "budget — use a higher tier (the guarantee needs enough steps).")
+
+
+if __name__ == "__main__":
+    main()

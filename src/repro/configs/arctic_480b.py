@@ -1,0 +1,5 @@
+"""--arch arctic-480b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import ARCTIC_480B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("arctic-480b")

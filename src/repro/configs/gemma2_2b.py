@@ -1,0 +1,5 @@
+"""--arch gemma2-2b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import GEMMA2_2B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("gemma2-2b")

@@ -1,0 +1,5 @@
+"""--arch mamba2-1.3b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import MAMBA2_1B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("mamba2-1.3b")

@@ -1,0 +1,5 @@
+"""--arch mixtral-8x22b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import MIXTRAL_8X22B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("mixtral-8x22b")

@@ -1,0 +1,5 @@
+"""--arch musicgen-large — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import MUSICGEN_LARGE as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("musicgen-large")

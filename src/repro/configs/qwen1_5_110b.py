@@ -1,0 +1,5 @@
+"""--arch qwen1.5-110b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import QWEN15_110B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("qwen1.5-110b")

@@ -1,0 +1,5 @@
+"""--arch qwen2-vl-72b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import QWEN2VL_72B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("qwen2-vl-72b")

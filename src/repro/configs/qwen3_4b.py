@@ -1,0 +1,5 @@
+"""--arch qwen3-4b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import QWEN3_4B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("qwen3-4b")

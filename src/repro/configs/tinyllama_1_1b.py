@@ -1,0 +1,5 @@
+"""--arch tinyllama-1.1b — re-export of the registry entry (see configs/__init__)."""
+from repro.configs import TINYLLAMA_1B as CONFIG  # noqa: F401
+from repro.configs import get_smoke_config
+
+SMOKE = get_smoke_config("tinyllama-1.1b")

@@ -1,0 +1,29 @@
+"""CGMQ core: the paper's contribution as a composable JAX module.
+
+Public surface:
+  quantizer   -- Eq. 1 fake quantization with STE + learnable ranges
+  gates       -- Eq. 2-4 gate variables, T / G_b, residual decomposition
+  sites       -- QuantContext threaded through model forwards; site registry
+  bop         -- Eq. (BOP) cost model and RBOP helpers
+  directions  -- dir_1..dir_3 (paper) and dir_4 (beyond-paper, scale-free)
+  controller  -- Sat/Unsat window protocol + gate SGD (the guarantee of §3)
+  calibration -- range calibration pipeline (paper §2.4)
+"""
+
+from . import bop, calibration, controller, directions, gates, quantizer, sites  # noqa: F401
+from .controller import CGMQConfig, CGMQState, controller_update, init_state  # noqa: F401
+from .gates import gate_to_bits, gated_fake_quant, residual_fake_quant  # noqa: F401
+from .quantizer import fake_quant, quantize, quantize_to_int  # noqa: F401
+from .sites import (  # noqa: F401
+    PER_CHANNEL,
+    PER_TENSOR,
+    PER_WEIGHT,
+    QuantConfig,
+    QuantContext,
+    collect_sites,
+    init_gates,
+    init_probes,
+    init_ranges_from_weights,
+    merge_ranges,
+    split_learnable_ranges,
+)

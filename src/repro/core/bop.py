@@ -1,0 +1,148 @@
+"""BOP (Bit-Operations) cost model (paper §2.5).
+
+For a dense layer ``l(x) = W^T x + a`` the paper defines::
+
+    BOP(l) = < sum_j b_W[j, :], b_a >
+
+i.e. for every output activation, the product of the output activation's
+bit-width with the sum of the bit-widths of the weights that produce it. With
+per-tensor gates this reduces to ``MACs * b_w * b_a`` (the Uhlich/Baskin BOP
+count). Convolutions multiply by the number of output positions.
+
+Conventions (documented in DESIGN.md §3/§7):
+  * Sites whose output stays floating point (the network head; paper §4.2
+    "the activation of the output layer is not taken into account for the BOP
+    count") are excluded from both the quantized and FP32 counts. This
+    reproduces the paper's stated theoretical lower bound RBOP ~= 4/1024 =
+    0.3906% for an all-2-bit LeNet-5 (paper: 0.392%).
+  * MoE sites are scaled by ``active_frac = top_k / n_experts`` — BOP is a
+    deployment-cost metric, so only activated expert MACs count; per-expert
+    gates enter through the sum over experts scaled by ``active_frac``.
+  * Attention score/value matmuls are activation-activation products with no
+    weight operand; the paper's constraint covers weighted layers only, so
+    they are not part of the constrained cost (KV-cache quantization for
+    serving is a separate, beyond-paper feature).
+
+All functions are jit-compatible: ``sites`` is static metadata, only gate
+arrays are traced.
+
+Gate array shapes per granularity (leading ``stack`` dim for scan-stacked
+sites): per-tensor ``()``/``(k,)``; per-channel ``(O,)``/``(k, O)``;
+per-weight ``weight_shape``/``(k, *weight_shape)`` with the output-channel
+axis last.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .gates import gate_to_bits
+from .sites import SiteInfo
+
+FP_BITS = 32.0
+
+
+def _per_out_weight_bits(bw: jnp.ndarray, site: SiteInfo) -> jnp.ndarray:
+    """``sum_j b_W[j, o]`` per output channel; keeps a stack dim if present.
+
+    Returns shape (), (k,), (O,), or (k, O) and is exact for every
+    granularity (scalar results mean "same value for every channel").
+    """
+    fan_in = float(site.fan_in)
+    stacked = site.stack > 1 and bw.ndim >= 1
+    core = bw.shape[1:] if stacked else bw.shape
+    if core == ():  # per-tensor
+        return fan_in * bw
+    if core == (site.out_features,):  # per-channel
+        return fan_in * bw
+    # per-weight: output axis last; sum every other non-stack axis.
+    red = tuple(range(1, bw.ndim - 1)) if stacked else tuple(range(bw.ndim - 1))
+    return bw.sum(axis=red)
+
+
+def site_bop(
+    site: SiteInfo,
+    w_gate: jnp.ndarray | None,
+    a_gate: jnp.ndarray | None,
+) -> jnp.ndarray:
+    """BOP of one site from its gates (either may be None -> fp32 bits)."""
+    if not site.act_quantized:
+        return jnp.asarray(0.0, jnp.float32)
+
+    bw = gate_to_bits(w_gate) if w_gate is not None else jnp.asarray(FP_BITS)
+    ba = gate_to_bits(a_gate) if a_gate is not None else jnp.asarray(FP_BITS)
+    out = float(site.out_features)
+    k = site.stack
+
+    wsum = _per_out_weight_bits(bw, site)
+
+    def _kind(arr):
+        """'scalar' (per-tensor view), 'stack', 'chan', or 'stack_chan'."""
+        if arr.ndim == 0:
+            return "scalar"
+        if k > 1 and arr.shape[0] == k:
+            return "stack" if arr.ndim == 1 else "stack_chan"
+        return "chan"
+
+    kw, ka = _kind(wsum), _kind(ba)
+    # Align shapes to (stack, chan) broadcasting space.
+    def _lift(arr, kind):
+        if kind == "scalar":
+            return arr.reshape(1, 1)
+        if kind == "stack":
+            return arr.reshape(-1, 1)
+        if kind == "chan":
+            return arr.reshape(1, -1)
+        return arr  # (k, O)
+
+    prod = _lift(wsum, kw) * _lift(ba, ka)  # (k?, O?)
+    total = jnp.sum(prod)
+    # Multiply out the dims that stayed broadcast-collapsed.
+    if kw in ("scalar", "stack") and ka in ("scalar", "stack"):
+        total = total * out
+    if kw == "scalar" and ka in ("scalar", "chan") and k > 1:
+        # metadata says stacked but the gates carry no stack dim
+        total = total * k
+    return total * float(site.positions) * float(site.active_frac)
+
+
+def model_bop(
+    sites: dict[str, SiteInfo], gates: dict[str, jnp.ndarray]
+) -> jnp.ndarray:
+    """Total BOP of the model under the current gates."""
+    total = jnp.asarray(0.0, jnp.float32)
+    for s in sites.values():
+        wg = gates.get(s.name + ".w")
+        ag = gates.get(s.name + ".a")
+        total = total + site_bop(s, wg, ag)
+    return total
+
+
+def fp32_bop(sites: dict[str, SiteInfo]) -> float:
+    """BOP of the all-32-bit model (the RBOP denominator). Static."""
+    total = 0.0
+    for s in sites.values():
+        if not s.act_quantized:
+            continue
+        total += s.macs_per_token * s.stack * FP_BITS * FP_BITS
+    return total
+
+
+def min_bop(sites: dict[str, SiteInfo]) -> float:
+    """All-2-bit lower bound (paper: no pruning => b >= 2)."""
+    total = 0.0
+    for s in sites.values():
+        if not s.act_quantized:
+            continue
+        total += s.macs_per_token * s.stack * 2.0 * 2.0
+    return total
+
+
+def rbop(sites: dict[str, SiteInfo], gates: dict[str, jnp.ndarray]):
+    """Relative BOP: quantized cost / fp32 cost (paper §4.2)."""
+    return model_bop(sites, gates) / fp32_bop(sites)
+
+
+def budget_from_rbop(sites: dict[str, SiteInfo], rbop_bound: float) -> float:
+    """Absolute BOP budget B_BOP from a relative bound (e.g. 0.004 = 0.4%)."""
+    return float(rbop_bound) * fp32_bop(sites)

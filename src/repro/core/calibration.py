@@ -1,0 +1,92 @@
+"""Quantization-range calibration (paper §2.4).
+
+Pipeline stage 2: given an FP32-pretrained model, determine initial
+quantization ranges before range learning and CGMQ:
+
+  * weights: per-group max/|min| (``alpha = -beta`` when any value is
+    negative, ``alpha = 0`` otherwise) — computed directly from the weights.
+  * activations: running mean of the per-batch max statistic with momentum
+    0.1 (paper: "a running mean is used to update the ranges. The momentum of
+    this running mean is 0.1"), aggregated over calibration batches; the sign
+    flag comes from whether any negative activation was observed.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sites import PER_CHANNEL, QuantConfig, QuantContext, SiteInfo
+
+MOMENTUM = 0.1
+
+
+def calibrate_activations(
+    forward: Callable,
+    batches,
+    cfg: QuantConfig,
+    momentum: float = MOMENTUM,
+) -> dict[str, dict[str, Any]]:
+    """Run calibration batches through ``forward(qc, batch)``.
+
+    Returns {act_key: {'beta': running max, 'signed': bool}}. The forward is
+    jitted once; stats are returned functionally from the traced context.
+    """
+
+    @jax.jit
+    def _run(batch):
+        qc = QuantContext(mode="calibrate", cfg=cfg)
+        forward(qc, batch)
+        return qc.act_stats
+
+    running: dict[str, dict[str, Any]] = {}
+    for batch in batches:
+        stats = jax.device_get(_run(batch))
+        for key, st in stats.items():
+            per_ch = cfg.act_granularity == PER_CHANNEL
+            mx = st["max_per_ch"] if per_ch else st["max"]
+            neg = bool(np.any(np.asarray(st["min"]) < 0))
+            if key not in running:
+                running[key] = {"beta": np.asarray(mx, np.float32), "signed": neg}
+            else:
+                r = running[key]
+                r["beta"] = (1 - momentum) * r["beta"] + momentum * np.asarray(
+                    mx, np.float32
+                )
+                r["signed"] = r["signed"] or neg
+    return {
+        k: {"beta": jnp.asarray(v["beta"]), "signed": bool(v["signed"])}
+        for k, v in running.items()
+    }
+
+
+def apply_act_calibration(
+    ranges: dict[str, Any], act_ranges: dict[str, dict[str, Any]]
+) -> dict[str, Any]:
+    """Overwrite placeholder activation ranges with calibrated ones."""
+    out = dict(ranges)
+    for key, v in act_ranges.items():
+        if key in out:
+            base = out[key]
+            beta = jnp.broadcast_to(
+                jnp.asarray(v["beta"], jnp.float32), jnp.shape(base["beta"])
+            )
+            out[key] = {"beta": beta, "signed": bool(v["signed"])}
+    return out
+
+
+def stack_act_ranges(
+    per_layer: list[dict[str, dict[str, Any]]]
+) -> dict[str, dict[str, Any]]:
+    """Stack per-layer calibration results for scan-stacked sites."""
+    keys = per_layer[0].keys()
+    out = {}
+    for k in keys:
+        out[k] = {
+            "beta": jnp.stack([jnp.asarray(p[k]["beta"]) for p in per_layer]),
+            "signed": any(bool(p[k]["signed"]) for p in per_layer),
+        }
+    return out

@@ -1,0 +1,136 @@
+"""Gate-update directions (paper §2.3).
+
+A direction ``dir`` replaces the (identically zero) gradient of the loss with
+respect to a gate variable. SGD applies ``g <- g - lr * dir``, so the two
+required properties are:
+
+  (i)  constraint Unsat  =>  dir > 0   (gates shrink, bit-widths decrease)
+  (ii) constraint Sat    =>  dir <= 0  (gates may grow, bit-widths recover)
+
+Inputs per gate group (produced by the probe/stat machinery in ``sites.py``):
+
+  grad_stat : |(1/N_b) sum_i grad L(x_i)|, group-reduced  (weights and acts)
+  mag_stat  : group-reduced |w| for weight gates; |(1/N_b) sum_i a(x_i)| for
+              activation gates
+  gate      : the gate value itself
+
+The three paper directions::
+
+  dir_1: Unsat  1 / grad_stat                  Sat  -|g|
+  dir_2: Unsat  1 / (grad_stat + mag_stat)     Sat  -(|g| + mag_stat)
+  dir_3: Unsat  1 / (grad_stat + mag_stat)     Sat  -(grad_stat + mag_stat)
+
+plus a beyond-paper scale-free variant::
+
+  dir_4: Unsat  1 / (1 + t / median(t))        Sat  -t / (t + median(t)),
+         t = grad_stat + mag_stat
+
+dir_4 is bounded in (0, 1] / [-1, 0) by construction, so a single gate
+learning rate works across tensors of wildly different scales (the paper had
+to lower the lr for dir_3 for exactly this reason, §4.2). The median is taken
+over all gate groups of the model.
+
+An optional ``clip`` bounds the Unsat branch of dir_1..3 into
+``[eps, clip]`` — explicitly permitted by the paper ("any method ... as long
+as the two properties above are satisfied"; the bounded-direction remark at
+the end of §2.3). Off by default to stay paper-literal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DIRECTIONS = ("dir1", "dir2", "dir3", "dir4")
+
+
+def _global_median(stats: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    flat = jnp.concatenate([jnp.ravel(v) for v in stats.values()])
+    return jnp.median(flat)
+
+
+def compute_directions(
+    kind: str,
+    sat: jnp.ndarray,
+    gates: dict[str, jnp.ndarray],
+    grad_stats: dict[str, jnp.ndarray],
+    mag_stats: dict[str, jnp.ndarray],
+    eps: float = 1e-12,
+    clip: float | None = None,
+) -> dict[str, jnp.ndarray]:
+    """Directions for every gate. ``sat`` is a traced boolean scalar."""
+    assert kind in DIRECTIONS, kind
+    med = None
+    if kind == "dir4":
+        med = _global_median(
+            {k: grad_stats[k] + mag_stats[k] for k in gates}
+        ) + eps
+
+    dirs = {}
+    for key, g in gates.items():
+        gs = grad_stats[key].astype(jnp.float32)
+        ms = mag_stats[key].astype(jnp.float32)
+        ga = jnp.abs(jnp.asarray(g, jnp.float32))
+        if kind == "dir1":
+            unsat = 1.0 / (gs + eps)
+            satd = -ga
+        elif kind == "dir2":
+            unsat = 1.0 / (gs + ms + eps)
+            satd = -(ga + ms)
+        elif kind == "dir3":
+            unsat = 1.0 / (gs + ms + eps)
+            satd = -(gs + ms)
+        else:  # dir4
+            t = gs + ms
+            unsat = 1.0 / (1.0 + t / med)
+            satd = -t / (t + med)
+        if clip is not None and kind != "dir4":
+            unsat = jnp.clip(unsat, eps, clip)
+            satd = -jnp.clip(-satd, 0.0, clip)
+        d = jnp.where(sat, satd, unsat)
+        dirs[key] = jnp.broadcast_to(d, jnp.shape(g)).astype(jnp.float32)
+    return dirs
+
+
+def build_stats(
+    gates: dict[str, jnp.ndarray],
+    probe_grads: dict[str, jnp.ndarray],
+    weight_stats: dict[str, jnp.ndarray],
+    act_stats: dict[str, dict[str, jnp.ndarray]],
+):
+    """Assemble (grad_stats, mag_stats) keyed like ``gates``.
+
+    ``probe_grads`` holds dL/dprobe for both weight probes (key ``*.w``) and
+    activation probes (key ``*.a``); with mean-over-batch loss these equal the
+    paper's ``(1/N_b) sum_i grad`` exactly (group-summed).
+    """
+    grad_stats, mag_stats = {}, {}
+    for key in gates:
+        pg = probe_grads.get(key)
+        if pg is None:
+            grad_stats[key] = jnp.zeros_like(jnp.asarray(gates[key], jnp.float32))
+        else:
+            grad_stats[key] = jnp.abs(jnp.asarray(pg, jnp.float32))
+        if key.endswith(".w"):
+            mag_stats[key] = jnp.asarray(
+                weight_stats.get(key, jnp.zeros(())), jnp.float32
+            )
+        else:
+            st = act_stats.get(key, {})
+            mag_stats[key] = jnp.asarray(st.get("mean_abs", jnp.zeros(())), jnp.float32)
+        mag_stats[key] = jnp.broadcast_to(
+            mag_stats[key], jnp.shape(gates[key])
+        )
+        grad_stats[key] = jnp.broadcast_to(
+            grad_stats[key], jnp.shape(gates[key])
+        )
+    return grad_stats, mag_stats
+
+
+def check_direction_properties(dirs: dict[str, jnp.ndarray], sat: bool) -> bool:
+    """Property (i)/(ii) checker used by tests and debug assertions."""
+    ok = True
+    for v in dirs.values():
+        v = jax.device_get(v)
+        ok &= bool((v <= 0).all()) if sat else bool((v > 0).all())
+    return ok

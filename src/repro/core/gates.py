@@ -1,0 +1,89 @@
+"""Gate variables (paper §2.1, Eqs. 2-4).
+
+A gate ``g`` is a free real variable; ``T(g)`` (Eq. 4) maps it onto a
+bit-width in {0, 2, 4, 8, 16, 32}; the binary gate functions
+``G_b(g) = [T(g) >= b]`` assemble the quantized value from the power-of-2
+residual decomposition (Eq. 3)::
+
+    x_q = G2 * (x_2 + G4 * (eps_4 + G8 * (eps_8 + G16 * (eps_16 + G32*eps_32))))
+
+Because ``eps_j := x_j - x_{j/2}`` the chain telescopes exactly to
+``x_q = Q(x, T(g))`` — ``gated_fake_quant`` uses that identity (one rounding
+pass instead of five; see DESIGN.md §3), while ``residual_fake_quant`` keeps
+the paper's literal form as the reference implementation. Equality of the two
+is property-tested in ``tests/test_gates.py``.
+
+Pruning (T = 0) is out of scope for the paper; gates are clamped to
+``g >= GATE_MIN = 0.5`` after every update ("as soon as a value g < 0.5 is
+obtained, it is replaced with 0.5").
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quantizer import LEVELS, fake_quant
+
+# Paper: gates below 0.5 are reset to 0.5 (no pruning), so T(g) >= 2.
+GATE_MIN = 0.5
+# Initial gate value (paper §4.2): T(5.5) = 32-bit at the start of training.
+GATE_INIT = 5.5
+# Upper clamp (framework addition): everything above 4 is 32-bit already;
+# capping keeps cost-free gates from drifting far and slows oscillation.
+GATE_MAX = 6.0
+
+# Thresholds of T (Eq. 4): g in (k-1, k] -> bits; g > 4 -> 32.
+_T_EDGES = (0.0, 1.0, 2.0, 3.0, 4.0)
+_T_BITS = (0.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+
+
+def transform(g: jnp.ndarray) -> jnp.ndarray:
+    """``T(g)`` (Eq. 4): piecewise-constant map from gate to bit-width."""
+    g = jnp.asarray(g, jnp.float32)
+    bits = jnp.full_like(g, _T_BITS[0])
+    for edge, b in zip(_T_EDGES, _T_BITS[1:]):
+        bits = jnp.where(g > edge, b, bits)
+    return bits
+
+
+def gate_fn(g: jnp.ndarray, b: int) -> jnp.ndarray:
+    """``G_b(g) = 1[T(g) >= b]`` (binary gate of Eq. 3)."""
+    return (transform(g) >= b).astype(jnp.float32)
+
+
+def gate_to_bits(g: jnp.ndarray) -> jnp.ndarray:
+    """Bit-width implied by a (clamped) gate. Minimum is 2 (no pruning)."""
+    return transform(jnp.maximum(g, GATE_MIN))
+
+
+def clamp_gate(g: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(g, GATE_MIN, GATE_MAX)
+
+
+def gated_fake_quant(x, g, beta, signed: bool):
+    """Optimized fake quantization at bit-width ``T(g)`` (telescoped Eq. 3)."""
+    bits = gate_to_bits(g)
+    return fake_quant(x, bits, beta, signed)
+
+
+def residual_fake_quant(x, g, beta, signed: bool):
+    """Paper-literal Eq. 3: explicit residual chain with binary gates.
+
+    Reference implementation (used by tests and available via
+    ``QuantConfig.impl='residual'``); numerically identical to
+    ``gated_fake_quant``.
+    """
+    g = jnp.maximum(jnp.asarray(g, jnp.float32), GATE_MIN)
+    # x_b for every level b in {2, 4, 8, 16, 32}.
+    xs = {b: fake_quant(x, jnp.asarray(float(b)), beta, signed) for b in LEVELS}
+    # eps_j = x_j - x_{j/2}
+    eps = {b: xs[b] - xs[b // 2] for b in LEVELS[1:]}
+    out = xs[LEVELS[-1]] - xs[LEVELS[-1]]  # zeros with correct dtype/shape
+    # Build innermost-out: G32*eps32 -> +eps16 ... -> x2 * G2.
+    acc = gate_fn(g, 32) * eps[32]
+    acc = gate_fn(g, 16) * (eps[16] + acc)
+    acc = gate_fn(g, 8) * (eps[8] + acc)
+    acc = gate_fn(g, 4) * (eps[4] + acc)
+    out = gate_fn(g, 2) * (xs[2] + acc)
+    # G2 is always 1 after clamping (no pruning), so `out` == Q(x, T(g)).
+    return out

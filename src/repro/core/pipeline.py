@@ -1,0 +1,314 @@
+"""The four-stage CGMQ pipeline (paper §2.4 / §4.2).
+
+  1. FP32 pretraining                        (paper: 250 epochs)
+  2. Range calibration at 32-bit fake quant  (paper: 1 epoch, momentum 0.1)
+  3. Range learning                          (paper: 20 epochs)
+  4. CGMQ: weights + ranges + gates jointly  (paper: 250 epochs)
+
+Generic over any model exposing ``forward(qc, params, x) -> logits`` and a
+``weight_lookup(params)`` site resolver. Used by the LeNet-5 reproduction,
+the benchmark tables, and (with the LM loss) the LLM-scale examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adam import AdamConfig, adam, apply_updates
+
+from . import bop as bop_lib
+from . import controller as ctrl
+from .calibration import apply_act_calibration, calibrate_activations
+from .sites import (
+    QuantConfig,
+    QuantContext,
+    collect_sites,
+    init_gates,
+    init_probes,
+    init_ranges_from_weights,
+    merge_ranges,
+    split_learnable_ranges,
+)
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    pretrain_epochs: int = 250
+    range_epochs: int = 20
+    cgmq_epochs: int = 250
+    batch_size: int = 128
+    lr: float = 1e-3          # weights + ranges (paper §4.2)
+    eval_every: int = 10
+    log: Callable[[str], None] = print
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+@dataclasses.dataclass
+class PretrainedBundle:
+    """Stages 1-3 output, shared across CGMQ variants (paper §4.2: 'All
+    different choices of CGMQ start with the same pre-trained model and the
+    same learned quantization ranges')."""
+
+    params: Any
+    betas: Any
+    signed: dict
+    gates: dict
+    probes: dict
+    sites: dict
+    qcfg: QuantConfig
+    fp32_test_acc: float
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    params: Any
+    betas: Any
+    signed: dict
+    state: ctrl.CGMQState
+    sites: dict
+    budget_bop: float
+    history: list
+    fp32_test_acc: float
+    final_test_acc: float
+
+    @property
+    def final_rbop(self) -> float:
+        gates = ctrl.export_gates(self.state)
+        return float(
+            jax.device_get(bop_lib.model_bop(self.sites, gates))
+        ) / bop_lib.fp32_bop(self.sites)
+
+    @property
+    def satisfied(self) -> bool:
+        return ctrl.guarantee_satisfied(self.state, self.sites, self.budget_bop)
+
+
+def _epoch_batches(data, batch_size, rng):
+    xs, ys = data
+    order = rng.permutation(xs.shape[0])
+    for i in range(0, xs.shape[0] - batch_size + 1, batch_size):
+        idx = order[i : i + batch_size]
+        yield xs[idx], ys[idx]
+
+
+def prepare_bundle(
+    forward: Callable,
+    weight_lookup_fn: Callable,
+    params: Any,
+    train_data,
+    test_data,
+    qcfg: QuantConfig,
+    pcfg: PipelineConfig,
+    *,
+    loss_fn: Callable = cross_entropy,
+    seed: int = 0,
+    pretrained_params: Any = None,
+) -> PretrainedBundle:
+    """Stages 1-3: FP32 pretrain -> calibrate -> range learning."""
+    log = pcfg.log
+    rng = np.random.default_rng(seed)
+    opt_init, opt_update = adam(AdamConfig(lr=pcfg.lr))
+
+    # ---------------- stage 1: FP32 pretraining ----------------
+    @jax.jit
+    def fp_step(params, opt_state, x, y):
+        def _loss(p):
+            qc = QuantContext(mode="off")
+            return loss_fn(forward(qc, p, x), y)
+
+        loss, grads = jax.value_and_grad(_loss)(params)
+        upd, opt_state = opt_update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss
+
+    @jax.jit
+    def fp_eval(params, x, y):
+        qc = QuantContext(mode="off")
+        logits = forward(qc, params, x)
+        return accuracy(logits, y)
+
+    if pretrained_params is None:
+        opt_state = opt_init(params)
+        t0 = time.time()
+        for epoch in range(pcfg.pretrain_epochs):
+            for x, y in _epoch_batches(train_data, pcfg.batch_size, rng):
+                params, opt_state, loss = fp_step(params, opt_state, x, y)
+            if (epoch + 1) % pcfg.eval_every == 0 or epoch == pcfg.pretrain_epochs - 1:
+                acc = float(fp_eval(params, *test_data))
+                log(f"[pretrain] epoch {epoch+1} loss {float(loss):.4f} acc {acc:.4f}"
+                    f" ({time.time()-t0:.1f}s)")
+    else:
+        params = pretrained_params
+    fp32_acc = float(fp_eval(params, *test_data))
+    log(f"[pretrain] FP32 test accuracy: {fp32_acc:.4f}")
+
+    # ---------------- stage 2: site collection + calibration ----------------
+    sites = collect_sites(
+        lambda qc, p, x: forward(qc, p, x),
+        params,
+        jax.ShapeDtypeStruct((pcfg.batch_size,) + train_data[0].shape[1:], jnp.float32),
+        cfg=qcfg,
+    )
+    gates = init_gates(sites, qcfg)
+    probes = init_probes(sites, qcfg)
+    for s in sites.values():  # weight gradient taps
+        probes[s.name + ".w"] = jnp.zeros_like(
+            jnp.asarray(gates[s.name + ".w"], jnp.float32)
+        )
+    ranges = init_ranges_from_weights(sites, qcfg, weight_lookup_fn(params))
+
+    calib_batches = (
+        x for x, _ in _epoch_batches(train_data, pcfg.batch_size, rng)
+    )
+    act_ranges = calibrate_activations(
+        lambda qc, batch: forward(qc, params, batch), calib_batches, qcfg
+    )
+    ranges = apply_act_calibration(ranges, act_ranges)
+    betas, signed = split_learnable_ranges(ranges)
+    log(f"[calibrate] {len(sites)} sites, "
+        f"{sum(np.prod(np.shape(g)) if np.ndim(g) else 1 for g in gates.values()):.0f} gates")
+
+    # ---------------- stage 3: range learning (32-bit FQ) ----------------
+    @jax.jit
+    def range_step(params, betas, opt_state, x, y):
+        def _loss(pb):
+            p, b = pb
+            qc = QuantContext(
+                mode="train", cfg=qcfg, gates=gates,
+                ranges=merge_ranges(b, signed), probes={},
+            )
+            return loss_fn(forward(qc, p, x), y)
+
+        loss, grads = jax.value_and_grad(_loss)((params, betas))
+        upd, opt_state = opt_update(grads, opt_state, (params, betas))
+        (params, betas) = apply_updates((params, betas), upd)
+        return params, betas, opt_state, loss
+
+    opt_state = opt_init((params, betas))
+    for epoch in range(pcfg.range_epochs):
+        for x, y in _epoch_batches(train_data, pcfg.batch_size, rng):
+            params, betas, opt_state, loss = range_step(params, betas, opt_state, x, y)
+    log(f"[ranges] learned for {pcfg.range_epochs} epochs, loss {float(loss):.4f}")
+
+    return PretrainedBundle(
+        params=params, betas=betas, signed=signed, gates=gates, probes=probes,
+        sites=sites, qcfg=qcfg, fp32_test_acc=fp32_acc,
+    )
+
+
+def run_cgmq_stage(
+    forward: Callable,
+    bundle: PretrainedBundle,
+    train_data,
+    test_data,
+    ccfg: ctrl.CGMQConfig,
+    pcfg: PipelineConfig,
+    *,
+    loss_fn: Callable = cross_entropy,
+    seed: int = 0,
+) -> PipelineResult:
+    """Stage 4: CGMQ joint training of weights + ranges + gates."""
+    log = pcfg.log
+    rng = np.random.default_rng(seed + 1000)
+    opt_init, opt_update = adam(AdamConfig(lr=pcfg.lr))
+    history = []
+    params, betas = bundle.params, bundle.betas
+    signed, gates, probes = bundle.signed, bundle.gates, bundle.probes
+    sites, qcfg = bundle.sites, bundle.qcfg
+
+    budget = bop_lib.budget_from_rbop(sites, ccfg.budget_rbop)
+    state = ctrl.init_state(gates, sites)
+    steps_per_epoch = max(1, train_data[0].shape[0] // pcfg.batch_size)
+    # paper: Sat checked at the END of each epoch
+    ccfg = dataclasses.replace(ccfg, check_every=steps_per_epoch)
+
+    @jax.jit
+    def cgmq_step(params, betas, opt_state, state, x, y):
+        def _loss(pbp):
+            p, b, pr = pbp
+            qc = QuantContext(
+                mode="train", cfg=qcfg, gates=state.gates,
+                ranges=merge_ranges(b, signed), probes=pr,
+            )
+            logits = forward(qc, p, x)
+            return loss_fn(logits, y), (qc.act_stats, qc.weight_stats, logits)
+
+        (loss, (astats, wstats, logits)), grads = jax.value_and_grad(
+            _loss, has_aux=True
+        )((params, betas, probes))
+        gp, gb, gprobe = grads
+        upd, opt_state = opt_update((gp, gb), opt_state, (params, betas))
+        (params, betas) = apply_updates((params, betas), upd)
+        state = ctrl.controller_update(
+            state, ccfg, sites, gprobe, wstats, astats, budget
+        )
+        return params, betas, opt_state, state, loss
+
+    @jax.jit
+    def q_eval(params, betas, gates, x, y):
+        qc = QuantContext(
+            mode="train", cfg=qcfg, gates=gates,
+            ranges=merge_ranges(betas, signed), probes={},
+        )
+        return accuracy(forward(qc, params, x), y)
+
+    opt_state = opt_init((params, betas))
+    t0 = time.time()
+    for epoch in range(pcfg.cgmq_epochs):
+        for x, y in _epoch_batches(train_data, pcfg.batch_size, rng):
+            params, betas, opt_state, state, loss = cgmq_step(
+                params, betas, opt_state, state, x, y
+            )
+        if (epoch + 1) % pcfg.eval_every == 0 or epoch == pcfg.cgmq_epochs - 1:
+            acc = float(q_eval(params, betas, state.gates, *test_data))
+            cur_rbop = float(state.bop) / bop_lib.fp32_bop(sites)
+            history.append(dict(epoch=epoch + 1, loss=float(loss), acc=acc,
+                                rbop=cur_rbop, sat=bool(state.sat)))
+            log(f"[cgmq] epoch {epoch+1} loss {float(loss):.4f} acc {acc:.4f} "
+                f"rbop {cur_rbop*100:.3f}% sat={bool(state.sat)} "
+                f"({time.time()-t0:.1f}s)")
+
+    final_acc = float(q_eval(params, betas, ctrl.export_gates(state), *test_data))
+    return PipelineResult(
+        params=params, betas=betas, signed=signed, state=state, sites=sites,
+        budget_bop=budget, history=history, fp32_test_acc=bundle.fp32_test_acc,
+        final_test_acc=final_acc,
+    )
+
+
+def run_pipeline(
+    forward: Callable,
+    weight_lookup_fn: Callable,
+    params: Any,
+    train_data,
+    test_data,
+    qcfg: QuantConfig,
+    ccfg: ctrl.CGMQConfig,
+    pcfg: PipelineConfig,
+    *,
+    loss_fn: Callable = cross_entropy,
+    seed: int = 0,
+    pretrained_params: Any = None,
+) -> PipelineResult:
+    """All four stages in sequence (convenience wrapper)."""
+    bundle = prepare_bundle(
+        forward, weight_lookup_fn, params, train_data, test_data, qcfg, pcfg,
+        loss_fn=loss_fn, seed=seed, pretrained_params=pretrained_params,
+    )
+    return run_cgmq_stage(
+        forward, bundle, train_data, test_data, ccfg, pcfg,
+        loss_fn=loss_fn, seed=seed,
+    )

@@ -1,0 +1,154 @@
+"""Fake quantization primitives (paper Eq. 1) with STE and learnable ranges.
+
+The quantizer maps a float ``x`` in ``[alpha, beta]`` onto a ``b``-bit uniform
+grid::
+
+    Q(x, b, alpha, beta) = alpha + s * round((clip(x) - alpha) / s),
+    s = (beta - alpha) / (2^b - 1)
+
+which is algebraically identical to the paper's Eq. 1 (the paper writes the
+``alpha = -beta`` / ``alpha = 0`` cases with the offset folded in; we keep the
+explicit affine form so both cases share one code path).
+
+Design notes (TPU adaptation, see DESIGN.md §3):
+  * ``bits`` may be a traced array (per-element mixed precision) — every op is
+    elementwise, so the same code path serves per-tensor, per-channel and
+    per-weight gate granularities.
+  * ``bits >= 32`` is treated as identity: rounding at scale ``2^32 - 1``
+    exceeds the fp32 mantissa, and ``x_32 == x`` to below fp32 eps by
+    construction, so the pass-through is bit-exact for all practical purposes.
+  * Backward pass: straight-through estimator for ``x`` (gradient masked to the
+    clip range, as in Bengio et al. 2013 / LSQ), and the STE-consistent
+    derivative w.r.t. the learnable range ``beta`` (round treated as constant).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Bit-width levels considered by the paper (B in Eq. 2, plus the base 2).
+LEVELS = (2, 4, 8, 16, 32)
+# Quantization at >= this many bits is an exact pass-through in fp32.
+PASSTHROUGH_BITS = 32
+
+
+def _num_steps(bits: jnp.ndarray) -> jnp.ndarray:
+    """``2^b - 1`` computed in float32; safe for b <= 31."""
+    return jnp.exp2(bits.astype(jnp.float32)) - 1.0
+
+
+def quantize(
+    x: jnp.ndarray,
+    bits: jnp.ndarray | int,
+    beta: jnp.ndarray,
+    signed: bool,
+) -> jnp.ndarray:
+    """Pure quantization (no STE). ``alpha = -beta`` if signed else ``0``.
+
+    ``bits``/``beta`` broadcast against ``x``. ``bits >= 32`` passes through.
+    """
+    out_dtype = x.dtype
+    # fp32 internals regardless of input dtype: rounding against a 2^16-step
+    # grid in bf16 (8-bit mantissa) would corrupt codes, and bf16 weights are
+    # exactly what the half-precision FSDP gather path feeds us.
+    x = x.astype(jnp.float32)
+    bits = jnp.asarray(bits, jnp.float32)
+    beta = jnp.maximum(jnp.asarray(beta, jnp.float32), 1e-8)
+    alpha = -beta if signed else jnp.zeros_like(beta)
+    span = beta - alpha
+    # Clamp bits into [2, 31] for the arithmetic; pass-through selected below.
+    b_eff = jnp.clip(bits, 2.0, 31.0)
+    n = _num_steps(b_eff)
+    s = span / n
+    xc = jnp.clip(x, alpha, beta)
+    q = alpha + s * jnp.round((xc - alpha) / s)
+    return jnp.where(bits >= PASSTHROUGH_BITS, x, q).astype(out_dtype)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant(x: jnp.ndarray, bits: jnp.ndarray, beta: jnp.ndarray, signed: bool):
+    """STE fake quantization: forward = ``quantize``; backward below."""
+    return quantize(x, bits, beta, signed)
+
+
+def _fq_fwd(x, bits, beta, signed):
+    q = quantize(x, bits, beta, signed)
+    return q, (x, bits, beta)
+
+
+def _fq_bwd(signed, res, ct):
+    x, bits, beta = res
+    bits = jnp.asarray(bits, jnp.float32)
+    beta_c = jnp.maximum(jnp.asarray(beta, x.dtype), jnp.asarray(1e-8, x.dtype))
+    alpha = -beta_c if signed else jnp.zeros_like(beta_c)
+    passthrough = bits >= PASSTHROUGH_BITS
+
+    # --- STE w.r.t. x: identity inside [alpha, beta], zero outside. ---
+    in_range = jnp.logical_and(x >= alpha, x <= beta_c)
+    dx = jnp.where(jnp.logical_or(in_range, passthrough), ct, jnp.zeros_like(ct))
+
+    # --- LSQ-style derivative w.r.t. beta (round-as-constant). ---
+    # q = alpha(beta) + s(beta) * n  with  n = round((clip(x)-alpha)/s) const.
+    #   signed:   alpha' = -1, s' = 2/(2^b-1)  -> dq/dbeta = -1 + 2n/(2^b-1)
+    #   unsigned: alpha' = 0,  s' = 1/(2^b-1)  -> dq/dbeta = n/(2^b-1)
+    # Clipped regions: top -> +1; bottom -> alpha' (= -1 signed, 0 unsigned).
+    b_eff = jnp.clip(bits, 2.0, 31.0)
+    nsteps = _num_steps(b_eff).astype(x.dtype)
+    span = beta_c - alpha
+    s = span / nsteps
+    xc = jnp.clip(x, alpha, beta_c)
+    n = jnp.round((xc - alpha) / s)
+    frac = n / nsteps
+    if signed:
+        dq_db_in = -1.0 + 2.0 * frac
+        dq_db_lo = jnp.asarray(-1.0, x.dtype)
+    else:
+        dq_db_in = frac
+        dq_db_lo = jnp.asarray(0.0, x.dtype)
+    dq_db = jnp.where(x > beta_c, 1.0, jnp.where(x < alpha, dq_db_lo, dq_db_in))
+    dq_db = jnp.where(passthrough, 0.0, dq_db)
+    dbeta_full = ct * dq_db
+    # Sum the cotangent down to beta's shape (beta broadcasts against x).
+    beta_arr = jnp.asarray(beta)
+    if beta_arr.ndim == 0:
+        dbeta = dbeta_full.sum()
+    else:
+        extra = dbeta_full.ndim - beta_arr.ndim
+        axes = tuple(range(extra)) + tuple(
+            extra + i for i, d in enumerate(beta_arr.shape) if d == 1
+        )
+        dbeta = dbeta_full.sum(axis=axes, keepdims=False)
+        dbeta = dbeta.reshape(beta_arr.shape)
+    dbeta = dbeta.astype(beta_arr.dtype)
+
+    # No gradient for bits (handled by CGMQ directions).
+    return dx, None, dbeta
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantize_to_int(
+    x: jnp.ndarray, bits: int, beta: jnp.ndarray, signed: bool
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Export path: integer codes + affine dequantization terms.
+
+    Returns ``(codes, scale, bias)`` with ``x ≈ codes * scale + bias``; codes
+    are centered so ``bits <= 8`` fits int8 (range ``[-2^(b-1), 2^(b-1)-1]``
+    covers the ``2^b - 1``-step grid after centering). Used when freezing a
+    CGMQ-trained model for deployment (serving engine / quant_matmul kernel).
+    """
+    beta = jnp.maximum(beta, 1e-8)
+    alpha = -beta if signed else jnp.zeros_like(beta)
+    n = float(2**bits - 1)
+    s = (beta - alpha) / n
+    raw = jnp.round((jnp.clip(x, alpha, beta) - alpha) / s)  # in [0, 2^b-1]
+    offset = float(2 ** (bits - 1))
+    codes = raw - offset  # in [-2^(b-1), 2^(b-1)-1]
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    bias = alpha + offset * s
+    return codes.astype(dtype), s, bias

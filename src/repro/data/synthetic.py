@@ -1,0 +1,144 @@
+"""Deterministic synthetic datasets (no network access in this environment).
+
+Two generators:
+
+  * ``digits(...)`` — a procedurally rendered 28x28 10-class digit set used as
+    the MNIST stand-in for the paper reproduction. Digits are drawn from
+    seven-segment stroke skeletons with per-sample random affine jitter,
+    stroke thickness, and Gaussian pixel noise. The distribution is fixed by
+    the seed, so experiments are exactly reproducible. (MNIST itself is not
+    bundled offline; DESIGN.md §7 documents that the paper's *claims* —
+    constraint guarantee and parity with the FP32 baseline — are validated
+    relative to an FP32 model on identical data.)
+
+  * ``lm_tokens(...)`` — an infinite deterministic LM token stream with a
+    learnable affine-Markov structure, used by the LLM-scale CGMQ examples
+    and the training-loop tests. Cross-entropy has a known floor (the noise
+    rate), so learning progress is verifiable.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Synthetic digits
+# ---------------------------------------------------------------------------
+
+# Seven-segment endpoints on the unit square.
+_TL, _TR = (0.25, 0.18), (0.75, 0.18)
+_ML, _MR = (0.25, 0.50), (0.75, 0.50)
+_BL, _BR = (0.25, 0.82), (0.75, 0.82)
+_SEGS = {
+    "A": (_TL, _TR),
+    "B": (_TR, _MR),
+    "C": (_MR, _BR),
+    "D": (_BL, _BR),
+    "E": (_ML, _BL),
+    "F": (_TL, _ML),
+    "G": (_ML, _MR),
+}
+_DIGIT_SEGS = {
+    0: "ABCDEF",
+    1: "BC",
+    2: "ABGED",
+    3: "ABGCD",
+    4: "FGBC",
+    5: "AFGCD",
+    6: "AFGEDC",
+    7: "ABC",
+    8: "ABCDEFG",
+    9: "ABCDFG",
+}
+IMG = 28
+
+
+def _render(label: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one digit with random affine + thickness + noise."""
+    segs = np.array([[_SEGS[s][0], _SEGS[s][1]] for s in _DIGIT_SEGS[label]])
+    pts = segs.reshape(-1, 2) - 0.5
+    theta = rng.uniform(-0.25, 0.25)
+    scale = rng.uniform(0.8, 1.15)
+    shear = rng.uniform(-0.15, 0.15)
+    rot = np.array(
+        [[np.cos(theta), -np.sin(theta)], [np.sin(theta), np.cos(theta)]]
+    )
+    aff = rot @ np.array([[1.0, shear], [0.0, 1.0]]) * scale
+    pts = pts @ aff.T + 0.5 + rng.uniform(-0.08, 0.08, size=(1, 2))
+    segs = pts.reshape(-1, 2, 2)
+
+    ys, xs = np.mgrid[0:IMG, 0:IMG]
+    grid = np.stack([xs, ys], axis=-1).reshape(-1, 2) / (IMG - 1.0)
+
+    a = segs[:, 0][:, None, :]          # (S,1,2)
+    b = segs[:, 1][:, None, :]
+    ab = b - a
+    t = ((grid[None] - a) * ab).sum(-1) / np.maximum((ab * ab).sum(-1), 1e-9)
+    t = np.clip(t, 0.0, 1.0)[..., None]
+    proj = a + t * ab
+    d = np.linalg.norm(grid[None] - proj, axis=-1).min(axis=0)  # (P,)
+
+    sigma = rng.uniform(0.018, 0.032)
+    img = np.exp(-0.5 * (d / sigma) ** 2).reshape(IMG, IMG)
+    img = img * rng.uniform(0.85, 1.0)
+    img += rng.normal(0.0, 0.035, size=img.shape)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def digits(n: int, *, split: str = "train", seed: int = 0):
+    """Return (images (n,28,28,1) float32 in [0,1], labels (n,) int32)."""
+    base = {"train": 0x5EED0000, "test": 0x7E570000}[split] + seed
+    imgs = np.empty((n, IMG, IMG, 1), np.float32)
+    labels = np.empty((n,), np.int32)
+    for i in range(n):
+        rng = np.random.default_rng(base + i)
+        lab = i % 10
+        labels[i] = lab
+        imgs[i, :, :, 0] = _render(lab, rng)
+    # normalize to mean 0.5 / std 0.5 as the paper does for MNIST
+    imgs = (imgs - 0.5) / 0.5
+    return imgs, labels
+
+
+# ---------------------------------------------------------------------------
+# Synthetic LM token stream
+# ---------------------------------------------------------------------------
+
+
+def lm_tokens(
+    n_seqs: int,
+    seq_len: int,
+    vocab: int,
+    *,
+    seed: int = 0,
+    noise: float = 0.1,
+):
+    """Deterministic next-token-predictable sequences.
+
+    ``x[t+1] = (a * x[t] + b) mod vocab`` with probability ``1 - noise``,
+    uniform otherwise; (a, b) fixed per stream. Returns int32 (n, seq_len+1)
+    so callers can split into inputs/targets.
+    """
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(2, max(3, vocab - 1))) | 1  # odd -> full-period-ish
+    b = int(rng.integers(1, vocab))
+    out = np.empty((n_seqs, seq_len + 1), np.int64)
+    x = rng.integers(0, vocab, size=(n_seqs,))
+    out[:, 0] = x
+    for t in range(1, seq_len + 1):
+        nxt = (a * out[:, t - 1] + b) % vocab
+        flip = rng.random(n_seqs) < noise
+        nxt = np.where(flip, rng.integers(0, vocab, size=(n_seqs,)), nxt)
+        out[:, t] = nxt
+    return out.astype(np.int32)
+
+
+def batches(arrays, batch_size: int, *, seed: int = 0, epochs: int = 1):
+    """Shuffled minibatch iterator over aligned arrays."""
+    n = arrays[0].shape[0]
+    for e in range(epochs):
+        rng = np.random.default_rng(seed + e)
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i : i + batch_size]
+            yield tuple(a[idx] for a in arrays)

@@ -1,0 +1,142 @@
+"""Fault tolerance: supervised training loop, straggler detection, preemption.
+
+``TrainSupervisor`` wraps a step function with the failure model of a
+large fleet:
+
+  * crash / node-failure recovery — every exception inside the step loop
+    triggers restore-from-last-checkpoint and replay; a failure injector
+    (``inject_failure_at``) exercises the path in tests;
+  * preemption — SIGTERM/SIGINT set a flag; the loop checkpoints at the next
+    step boundary and exits cleanly (maintenance-event behavior on TPU pods);
+  * straggler mitigation — per-step wall times feed an EWMA + MAD detector;
+    a step slower than ``straggler_z`` deviations is logged and counted, and
+    a pluggable callback lets the launcher trade the slow host out (on a real
+    fleet: re-slice; here: the hook is tested with a synthetic delay);
+  * elastic scaling — on restore the checkpoint re-shards onto whatever mesh
+    the restarted job has (Checkpointer handles topology changes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    checkpoint_dir: str
+    checkpoint_every: int = 50
+    keep: int = 3
+    max_restarts: int = 5
+    straggler_z: float = 4.0
+    straggler_window: int = 32
+    handle_signals: bool = False  # opt-in: tests drive preemption directly
+
+
+class StragglerDetector:
+    """EWMA/MAD step-time anomaly detector."""
+
+    def __init__(self, window: int = 32, z: float = 4.0):
+        self.times: list[float] = []
+        self.window = window
+        self.z = z
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        hist = self.times[-self.window:]
+        self.times.append(dt)
+        if len(hist) < 8:
+            return False
+        med = float(np.median(hist))
+        mad = float(np.median(np.abs(np.asarray(hist) - med))) + 1e-9
+        if dt > med + self.z * 1.4826 * mad and dt > 1.2 * med:
+            self.flagged.append((step, dt))
+            return True
+        return False
+
+
+class TrainSupervisor:
+    def __init__(self, cfg: SupervisorConfig, *,
+                 on_straggler: Callable[[int, float], None] | None = None,
+                 log: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.ckpt = Checkpointer(cfg.checkpoint_dir, keep=cfg.keep)
+        self.detector = StragglerDetector(cfg.straggler_window, cfg.straggler_z)
+        self.on_straggler = on_straggler
+        self.log = log
+        self.preempted = False
+        self.restarts = 0
+        self.inject_failure_at: int | None = None  # test hook
+        if cfg.handle_signals:
+            signal.signal(signal.SIGTERM, self._handle)
+            signal.signal(signal.SIGINT, self._handle)
+
+    def _handle(self, signum, frame):
+        self.log(f"[supervisor] received signal {signum}: preempting")
+        self.preempted = True
+
+    def preempt(self):
+        """Programmatic preemption (what the SIGTERM handler sets)."""
+        self.preempted = True
+
+    # ------------------------------------------------------------------
+    def run(self, state: Any, step_fn: Callable, batches, *,
+            start_step: int = 0, shardings: Any = None,
+            metrics_cb: Callable | None = None):
+        """Supervised loop. ``batches`` is an indexable step -> batch source
+        (replayable, so restarts resume deterministically)."""
+        step = start_step
+        # resume if a checkpoint exists
+        if self.ckpt.latest_step() is not None:
+            state, step, _ = self.ckpt.restore(
+                jax.eval_shape(lambda: state), shardings=shardings)
+            self.log(f"[supervisor] resumed from step {step}")
+
+        while True:
+            if self.preempted:
+                self.ckpt.save(step, state, blocking=True,
+                               extra={"reason": "preempt"})
+                self.log(f"[supervisor] checkpointed step {step} on "
+                         "preemption; exiting")
+                return state, step, "preempted"
+            batch = batches(step)
+            if batch is None:
+                self.ckpt.save(step, state, blocking=True,
+                               extra={"reason": "final"})
+                return state, step, "done"
+            t0 = time.time()
+            try:
+                if self.inject_failure_at is not None and \
+                        step == self.inject_failure_at:
+                    self.inject_failure_at = None
+                    raise RuntimeError("injected node failure")
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics)
+            except Exception as e:  # noqa: BLE001 — fleet failure model
+                self.restarts += 1
+                self.log(f"[supervisor] step {step} failed ({e}); "
+                         f"restart {self.restarts}/{self.cfg.max_restarts}")
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                if self.ckpt.latest_step() is not None:
+                    state, step, _ = self.ckpt.restore(
+                        jax.eval_shape(lambda: state), shardings=shardings)
+                    self.log(f"[supervisor] restored step {step}")
+                continue
+            dt = time.time() - t0
+            if self.detector.observe(step, dt):
+                self.log(f"[supervisor] straggler at step {step}: {dt:.3f}s")
+                if self.on_straggler is not None:
+                    self.on_straggler(step, dt)
+            step += 1
+            if metrics_cb is not None:
+                metrics_cb(step, metrics)
+            if step % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(step, state)  # async

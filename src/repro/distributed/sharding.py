@@ -1,0 +1,250 @@
+"""ShardingPlan: FSDP x TP (x EP) placement rules for every architecture.
+
+Mesh axes (launch/mesh.py): single-pod ``(data=16, model=16)``; multi-pod
+``(pod=2, data=16, model=16)``. Rules (DESIGN.md §4):
+
+  * Weights: TP dim over ``model`` (attention/MLP output features, vocab,
+    expert dim when divisible); the other large dim FSDP-sharded over
+    ``data`` (+``pod``). GSPMD inserts the per-layer all-gathers and gradient
+    reduce-scatters (MaxText-style "automatic FSDP").
+  * Feature-dim TP for attention: q/k/v/o projections shard the *fused*
+    (heads*head_dim) feature axis — divisible by 16 for every assigned arch,
+    sidestepping head-count divisibility (gemma2 8H, arctic 56H,
+    recurrentgemma 10H). Attention activations shard heads over ``model``
+    only when the head count divides; otherwise Q-sequence sharding with
+    gathered KV.
+  * Activations: batch over (``pod``,)``data``; batch=1 decode shards the
+    cache sequence axis over all axes instead.
+  * MoE: expert-parallel over ``model`` when n_experts divides (arctic
+    128/16); otherwise TP inside the expert FFN (mixtral).
+  * Scalars / norms / gates / ranges / probes: replicated.
+
+The plan degrades to no-ops without a mesh, so model code is unchanged on a
+single device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _divisible(n: int, k: int) -> bool:
+    return n > 0 and n % k == 0
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    cfg: ModelConfig
+    batch_axes: tuple[str, ...]   # ('data',) or ('pod', 'data')
+    model_axis: str = "model"
+    seq_shard_batch1: bool = False  # long_500k: shard cache seq instead of batch
+    serve_resident: bool = False    # serving: TP-only weights, no FSDP gathers
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def fsdp(self):
+        return self.batch_axes if len(self.batch_axes) == 1 else self.batch_axes
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def heads_shardable(self) -> bool:
+        return _divisible(self.cfg.n_heads, self.tp_size)
+
+    @property
+    def experts_shardable(self) -> bool:
+        return _divisible(self.cfg.n_experts, self.tp_size)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def _c(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+    # ---- parameter placement -------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """Sharding spec for a parameter, by name convention + shape."""
+        fsdp = None if self.serve_resident else self.fsdp
+        m = self.model_axis
+        last = path.split("/")[-1]
+        if len(shape) <= 1:
+            return P()  # norms, biases, scalars: replicated
+        if last == "embed":
+            # vocab over model; d replicated — the mask-psum lookup
+            # (launch/steps.sharded_embed_lookup) needs whole rows per shard
+            return P(m, None)
+        if last == "head":
+            return P(fsdp, m)
+        if last in ("wq", "wk", "wv", "wx", "wy", "gate_a", "gate_x",
+                    "in_proj", "w_gate", "w_up", "w_in"):
+            if len(shape) == 3:  # stacked (R, in, out)
+                return P(None, fsdp, m)
+            return P(fsdp, m)
+        if last in ("wo", "w_down", "w_out", "out_proj"):
+            if len(shape) == 3:
+                return P(None, m, fsdp)
+            return P(m, fsdp)
+        if last == "router":
+            return P(None, fsdp, None) if len(shape) == 3 else P(fsdp, None)
+        # conv filters, lambdas, other small tensors: replicated
+        return P()
+
+    def moe_spec(self, path: str, shape: tuple[int, ...]) -> P | None:
+        """Expert-weight placement; returns None if not an expert tensor."""
+        last = path.split("/")[-1]
+        if last not in ("w_gate", "w_up", "w_down"):
+            return None
+        # expert tensors have an E dim: (E, a, b) or stacked (R, E, a, b)
+        if len(shape) not in (3, 4):
+            return None
+        e_idx = 0 if len(shape) == 3 else 1
+        if shape[e_idx] != self.cfg.n_experts or not self.cfg.n_experts:
+            return None
+        m = self.model_axis
+        fsdp = None if self.serve_resident else self.fsdp
+        lead = (None,) * e_idx
+        if self.experts_shardable:
+            return P(*lead, m, fsdp, None)
+        # TP inside expert: shard d_ff; w_down's ff is dim -2
+        if last == "w_down":
+            return P(*lead, None, m, fsdp)
+        return P(*lead, None, fsdp, m)
+
+    def params_shardings(self, params: Any) -> Any:
+        """NamedSharding pytree matching a params pytree."""
+
+        def _one(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            spec = self.moe_spec(pstr, leaf.shape)
+            if spec is None:
+                spec = self.param_spec(pstr, leaf.shape)
+            return self.named(spec)
+
+        return jax.tree_util.tree_map_with_path(_one, params)
+
+    def replicated(self, tree: Any) -> Any:
+        return jax.tree.map(lambda _: self.named(P()), tree)
+
+    # ---- activation constraints (called from model code) ----------------------
+    def shard_hidden(self, h):
+        """Block-boundary residual stream: batch over data, seq over model
+        (Megatron-style sequence parallelism — shrinks the scan backward
+        carries by tp_size; attention/MLP internals re-shard as needed)."""
+        if h.ndim != 3:
+            return h
+        b, s, _ = h.shape
+        bspec = self.batch_axes if b > 1 else None
+        sspec = self.model_axis if (s > 1 and s % self.tp_size == 0) else None
+        return self._c(h, P(bspec, sspec, None))
+
+    def shard_attn_qkv(self, q, k, v):
+        bspec = self.batch_axes if q.shape[0] > 1 else None
+        if self.heads_shardable:
+            spec = P(bspec, None, self.model_axis, None)
+        else:
+            # Q-sequence sharding; KV gathered by GSPMD at the einsum
+            spec = P(bspec, self.model_axis, None, None)
+        return self._c(q, spec), self._c(k, spec if self.heads_shardable else
+                                         P(bspec, None, None, None)), \
+            self._c(v, spec if self.heads_shardable else
+                    P(bspec, None, None, None))
+
+    def cache_spec(self, kind_shape: tuple[int, ...]) -> P:
+        """KV-cache (B, slots, KV, hd): batch over data, slots over model;
+        batch=1 shards slots over every axis."""
+        b = kind_shape[0]
+        if b == 1:
+            axes = tuple(self.batch_axes) + (self.model_axis,)
+            return P(None, axes, None, None)
+        return P(self.batch_axes, self.model_axis, None, None)
+
+    def shard_cache(self, c):
+        if c.ndim != 4:
+            return c
+        return self._c(c, self.cache_spec(c.shape))
+
+    def shard_moe(self, t):
+        """(ng, E, C, d) dispatch tensors."""
+        if t.ndim != 4:
+            return t
+        espec = self.model_axis if self.experts_shardable else None
+        return self._c(t, P(self.batch_axes, espec, None, None))
+
+    # ---- io specs ---------------------------------------------------------------
+    def batch_spec(self, shape: tuple[int, ...]) -> P:
+        if shape[0] == 1:
+            return P(*((None,) * len(shape)))
+        return P(self.batch_axes, *((None,) * (len(shape) - 1)))
+
+    def data_shardings(self, tree: Any) -> Any:
+        return jax.tree.map(
+            lambda leaf: self.named(self.batch_spec(leaf.shape)), tree
+        )
+
+    def batch_dict_shardings(self, batch: dict) -> dict:
+        """Key-aware input shardings (mrope is (3, B, S): batch at dim 1)."""
+        out = {}
+        for k, v in batch.items():
+            if k == "mrope":
+                spec = (P(None, self.batch_axes, None) if v.shape[1] > 1
+                        else P(None, None, None))
+            else:
+                spec = self.batch_spec(v.shape)
+            out[k] = self.named(spec)
+        return out
+
+    def cache_shardings(self, cache: Any) -> Any:
+        """Shardings for the decode cache pytree (keyed by cache kind)."""
+        m = self.model_axis
+        dp = self.dp_size
+
+        def _one(path, leaf):
+            shp = leaf.shape
+            keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+            kind = keys[-1]
+            if kind in ("k", "v"):
+                # (R, B, slots, KV, hd) stacked or (B, slots, KV, hd)
+                if len(shp) == 5:
+                    return self.named(P(None, *self.cache_spec(shp[1:])))
+                return self.named(self.cache_spec(shp))
+            if kind == "pos":
+                return self.named(P())
+            # recurrent states: (R?, B, ...feature dims...)
+            bdim = 1 if len(shp) >= 3 and kind in ("conv", "ssm", "h") and \
+                shp[0] != shp[1] and len(shp) >= 4 else 0
+            # stacked when the pytree level above was stacked: detect via a
+            # leading dim equal among siblings is fragile; use ndim heuristic
+            # per kind instead:
+            nd = {"conv": 3, "ssm": 4, "h": 2}.get(kind)
+            bdim = len(shp) - nd if nd else 0
+            spec = [None] * len(shp)
+            if shp[bdim] > 1 and shp[bdim] % dp == 0:
+                spec[bdim] = self.batch_axes
+            # shard the widest feature dim over model when divisible
+            feat = max(range(bdim + 1, len(shp)), key=lambda i: shp[i],
+                       default=None) if len(shp) > bdim + 1 else None
+            if feat is not None and shp[feat] % self.tp_size == 0 and \
+                    shp[feat] >= self.tp_size:
+                spec[feat] = m
+            return self.named(P(*spec))
+
+        return jax.tree_util.tree_map_with_path(_one, cache)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused fake-quant kernel.
+
+Matches core.quantizer/gates semantics exactly: bits = T(max(g, 0.5)),
+alpha = -beta (signed) or 0, b >= 32 passes through.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.gates import gate_to_bits
+from repro.core.quantizer import quantize
+
+
+def fake_quant_ref(x: jnp.ndarray, gate: jnp.ndarray, beta: jnp.ndarray,
+                   signed: bool) -> jnp.ndarray:
+    """x: (M, N); gate/beta: (N,) per-channel (broadcast by caller)."""
+    bits = gate_to_bits(gate)[None, :]
+    return quantize(x, bits, beta[None, :], signed)

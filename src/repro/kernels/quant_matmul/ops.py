@@ -1,0 +1,45 @@
+"""Jit'd wrapper for the fused dequant GEMM.
+
+Folds the per-channel bias into the GEMM exactly by augmenting ``x`` with a
+ones column and ``codes`` with one extra row holding ``bias / scale``:
+
+    y = scale * ([x, 1] @ [[codes], [bias/scale]])
+      = scale * (x @ codes) + bias * rowsum-of-ones = x @ (codes*scale + bias)
+
+(The extra row is fp-valued; it rides in a separate fp32 row tensor so codes
+stay int8 in HBM — implemented by augmenting AFTER dequant-free accumulation
+would lose exactness, so we simply add the rank-1 term outside the kernel:
+``y += rowsum(x) ⊗ bias``, one cheap VPU pass.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .quant_matmul import quant_matmul_pallas
+from .ref import quant_matmul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quant_matmul_op(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = x @ (codes*scale + bias); x: (..., K), codes: (K, N) int8."""
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    if use_pallas:
+        y = quant_matmul_pallas(x2, codes, scale, bias, interpret=interpret)
+        # exact rank-1 bias term (see module docstring)
+        y = y + jnp.sum(x2.astype(jnp.float32), axis=1, keepdims=True) * bias[None, :]
+    else:
+        y = quant_matmul_ref(x2, codes, scale, bias)
+    return y.reshape(orig[:-1] + (codes.shape[1],))

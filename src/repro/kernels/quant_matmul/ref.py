@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused dequant GEMM."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                     bias: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K) fp; codes: (K, N) int8; scale/bias: (N,).
+
+    y = x @ (codes * scale + bias) computed exactly in fp32.
+    """
+    w = codes.astype(jnp.float32) * scale[None, :] + bias[None, :]
+    return x.astype(jnp.float32) @ w

@@ -1,0 +1,245 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (required deliverable (e)).
+
+For every (architecture x input shape x mesh) cell: build the production
+mesh, attach shardings to abstract inputs (ShapeDtypeStruct — nothing is
+allocated), ``jax.jit(step).lower(...).compile()``, and record
+``memory_analysis()`` / ``cost_analysis()`` / the collective bytes parsed
+from the compiled HLO into artifacts/dryrun/<cell>.json.
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first backend init); nothing else in the package sets it.
+
+Cost accounting: XLA's cost analysis counts a ``while``-loop body ONCE
+(verified empirically), so the scanned full-depth program under-reports
+flops/bytes/collectives by ~n_layers. We therefore compile three variants
+per cell:
+
+  full   — real depth, scanned: memory_analysis (peak bytes are exact:
+           the backward carries scale with depth) + compile sanity;
+  d1/d2  — depth = P+rem / 2P+rem pattern repeats with the scan fully
+           unrolled: per-repeat costs are depth-independent, so
+           ``cost_full = cost_d1 + (R-1) * (cost_d2 - cost_d1)`` is exact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, shape_cells  # noqa: E402
+from repro.configs.base import flops_per_token_train, tokens_per_batch  # noqa: E402
+from repro.distributed.sharding import ShardingPlan  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import batch_axes_of, make_production_mesh  # noqa: E402
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts",
+                   "dryrun")
+
+
+def _compile_variant(cfg, shape, plan, *, quant_impl, scan_unroll,
+                     variant_overrides=None, serve_dtype=None):
+    """Lower+compile one step program; returns (compiled, cost, coll, mem)."""
+    recipe = steps_lib.make_recipe(cfg, shape, quant_impl=quant_impl,
+                                   scan_unroll=scan_unroll,
+                                   **(variant_overrides or {}))
+    if shape.kind == "train":
+        state, batch = steps_lib.abstract_train_args(recipe, shape, plan)
+        step = steps_lib.make_train_step(recipe, plan)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+    elif shape.kind == "prefill":
+        params, _, _ = steps_lib.abstract_serve_args(
+            recipe, shape, plan, max_seq=shape.seq_len,
+            serve_dtype=serve_dtype)
+        batch = steps_lib._abstract_batch(
+            cfg, shape.global_batch, shape.seq_len, targets=False)
+        batch_sh = plan.batch_dict_shardings(batch)
+        batch = {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=batch_sh[k])
+            for k, v in batch.items()
+        }
+        step = steps_lib.make_prefill_step(recipe, plan, max_seq=shape.seq_len)
+        lowered = jax.jit(step).lower(params, batch)
+    else:  # decode
+        params, cache, tokens = steps_lib.abstract_serve_args(
+            recipe, shape, plan, max_seq=shape.seq_len,
+            serve_dtype=serve_dtype)
+        step = steps_lib.make_decode_step(recipe, plan)
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            params, cache, tokens)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    cost = {"flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0)}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return compiled, cost, coll, mem
+
+
+def _depth_cfg(cfg, repeats: int):
+    pat = len(cfg.block_pattern)
+    rem = cfg.n_layers % pat
+    return dataclasses.replace(cfg, n_layers=pat * repeats + rem)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             quant_impl: str = "direct", variant: str = "base",
+             seq_shard_batch1: bool = True, out_dir: str = ART,
+             recipe_overrides=None, plan_overrides=None,
+             serve_dtype=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    def _plan(c):
+        kw = dict(
+            mesh=mesh, cfg=c, batch_axes=batch_axes_of(mesh),
+            seq_shard_batch1=(shape.global_batch == 1 and seq_shard_batch1),
+        )
+        kw.update(plan_overrides or {})
+        return ShardingPlan(**kw)
+
+    t0 = time.time()
+    # full-depth scanned compile: memory truth + proof the cell lowers
+    _, cost_raw, coll_raw, mem = _compile_variant(
+        cfg, shape, _plan(cfg), quant_impl=quant_impl, scan_unroll=False,
+        variant_overrides=recipe_overrides, serve_dtype=serve_dtype)
+    t_full = time.time() - t0
+    print(mem)  # proves it fits (per-device bytes)
+
+    # depth-extrapolated exact costs
+    reps = cfg.pattern_repeats
+    c1 = _depth_cfg(cfg, 1)
+    c2 = _depth_cfg(cfg, 2)
+    _, cost1, coll1, _ = _compile_variant(
+        c1, shape, _plan(c1), quant_impl=quant_impl, scan_unroll=True,
+        variant_overrides=recipe_overrides, serve_dtype=serve_dtype)
+    _, cost2, coll2, _ = _compile_variant(
+        c2, shape, _plan(c2), quant_impl=quant_impl, scan_unroll=True,
+        variant_overrides=recipe_overrides, serve_dtype=serve_dtype)
+
+    def _extrap(a, b):
+        return a + (reps - 1) * (b - a)
+
+    flops = _extrap(cost1["flops"], cost2["flops"])
+    byts = _extrap(cost1["bytes_accessed"], cost2["bytes_accessed"])
+    coll = {k: _extrap(coll1[k], coll2[k])
+            for k in coll1 if isinstance(coll1[k], (int, float))}
+    print({"flops": flops, "bytes_accessed": byts,
+           "collective_total": coll.get("total")})
+
+    n_chips = 512 if multi_pod else 256
+    tokens_n = tokens_per_batch(shape)
+    model_flops = (
+        flops_per_token_train(cfg, shape.seq_len) * tokens_n
+        if shape.kind == "train" else None
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "variant": variant,
+        "quant_impl": quant_impl,
+        "chips": n_chips,
+        "ok": True,
+        "compile_s": {"full": round(t_full, 1),
+                      "total": round(time.time() - t0, 1)},
+        "per_device": {
+            "flops": flops,
+            "bytes_accessed": byts,
+            "collective_bytes": coll,
+            "flops_raw_scanned": cost_raw["flops"],
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hint_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "model_flops_global": model_flops,
+        "tokens": tokens_n,
+    }
+    rec["roofline"] = roofline_terms(rec)
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape_name}__{rec['mesh']}__{variant}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant-impl", default="direct",
+                    choices=["direct", "residual"])
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        shapes = shape_cells(arch) if args.shape is None else [args.shape]
+        for sh in shapes:
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    results = []
+    for arch, sh, mp in cells:
+        mesh_tag = "pod2x16x16" if mp else "pod16x16"
+        label = f"{arch} x {sh} x {mesh_tag}"
+        path = os.path.join(args.out,
+                            f"{arch}__{sh}__{mesh_tag}__{args.variant}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                old = json.load(f)
+            if old.get("ok"):
+                print(f"skip {label} (exists)", flush=True)
+                results.append((label, "ok"))
+                continue
+        print(f"=== {label} ===", flush=True)
+        try:
+            rec = run_cell(arch, sh, mp, quant_impl=args.quant_impl,
+                           variant=args.variant, out_dir=args.out)
+            dom = rec["roofline"]["dominant"]
+            print(f"ok  {label}: compile {rec['compile_s']['total']}s "
+                  f"dominant={dom}", flush=True)
+            results.append((label, "ok"))
+        except Exception as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            os.makedirs(args.out, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": sh, "mesh": mesh_tag,
+                           "ok": False, "error": f"{type(e).__name__}: {e}"},
+                          f, indent=1)
+            results.append((label, f"FAIL {type(e).__name__}"))
+
+    print("\n=== summary ===")
+    for label, status in results:
+        print(f"{status:28s} {label}")
+    if any(s != "ok" for _, s in results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Attention: GQA with global / sliding-window kinds, softcap, qk-norm, M-RoPE.
+
+Two code paths (DESIGN.md §4):
+
+  * train/prefill — dense masked attention with KV heads materialized to the
+    full head count (keeps the head axis uniformly shardable over `model`).
+  * decode — grouped-query attention against a KV cache; the cache sequence
+    axis is sharded (FlashDecoding-style split-KV falls out of GSPMD's
+    partial-reduction handling), heads stay replicated.
+
+Local attention uses a ring-buffer cache of ``window`` slots at decode time so
+sliding-window archs (mixtral, gemma2 local layers, recurrentgemma) stay O(w)
+memory at 500k context.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sites import QuantContext
+
+from .layers import COMPUTE_DTYPE, apply_mrope, apply_rope, qmatmul, rms_norm, softcap
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    k = jax.random.split(key, 4)
+
+    def w(key, shape, fan_in):
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    p = {
+        "wq": w(k[0], (d, h * hd), d),
+        "wk": w(k[1], (d, kv * hd), d),
+        "wv": w(k[2], (d, kv * hd), d),
+        "wo": w(k[3], (h * hd, d), h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(qc: QuantContext, p, x, cfg: ModelConfig, positions, mrope_pos):
+    """Shared q/k/v projection + norm + rope. x: (B, S, d)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = qmatmul(qc, "attn_q", x, p["wq"])
+    k = qmatmul(qc, "attn_k", x, p["wk"])
+    v = qmatmul(qc, "attn_v", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(t, groups: int):
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd)."""
+    b, s, kv, hd = t.shape
+    t = jnp.broadcast_to(t[:, :, :, None, :], (b, s, kv, groups, hd))
+    return t.reshape(b, s, kv * groups, hd)
+
+
+def attention_train(
+    qc: QuantContext,
+    p,
+    x,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions=None,
+    mrope_pos=None,
+    plan=None,
+):
+    """Causal (optionally sliding-window) attention. Returns (y, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(qc, p, x, cfg, positions, mrope_pos)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k_r, v_r = _repeat_kv(k, groups), _repeat_kv(v, groups)
+    if plan is not None:
+        q, k_r, v_r = plan.shard_attn_qkv(q, k_r, v_r)
+
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(COMPUTE_DTYPE), k_r.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = qi >= ki
+    if kind == "local":
+        mask &= (qi - ki) < cfg.window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_r,
+                     preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    # NOTE: the QK^T / PV products are activation-activation matmuls with no
+    # weight operand — not BOP-constrained sites (DESIGN.md §3).
+    y = qmatmul(qc, "attn_o", out, p["wo"])
+    y = qc.act("attn_o", y)
+    return y, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16):
+    slots = min(cfg.window, max_seq) if kind == "local" else max_seq
+    shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def attention_decode(
+    qc: QuantContext,
+    p,
+    x,
+    cache: dict,
+    pos,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    mrope_pos=None,
+    plan=None,
+):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (tokens so far).
+
+    Local layers treat the cache as a ring buffer of ``window`` slots.
+    Returns (y, new_cache).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    mp = None
+    if cfg.mrope_sections is not None:
+        mp = (
+            mrope_pos
+            if mrope_pos is not None
+            else jnp.broadcast_to(positions[None], (3, b, 1))
+        )
+    q, k, v = _project_qkv(qc, p, x, cfg, positions, mp)
+
+    slots = cache["k"].shape[1]
+    slot = pos % slots if kind == "local" else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    if plan is not None:
+        ck = plan.shard_cache(ck)
+        cv = plan.shard_cache(cv)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, groups, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(COMPUTE_DTYPE), ck.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    sids = jnp.arange(slots)
+    if kind == "local":
+        # ring buffer: slot s holds absolute position ap with ap % slots == s
+        # and ap <= pos; valid iff pos - ap < window and ap <= pos.
+        ap = pos - ((pos - sids) % slots)
+        valid = (ap >= 0) & (ap <= pos) & ((pos - ap) < cfg.window)
+    else:
+        valid = sids <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv,
+                     preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    y = qmatmul(qc, "attn_o", out, p["wo"])
+    y = qc.act("attn_o", y)
+    return y, {"k": ck, "v": cv}
+
+
+def fill_cache_from_prefill(cfg: ModelConfig, kind: str, k, v, max_seq: int):
+    """Build a decode cache from full prefill K/V ((B, S, KV, hd))."""
+    b, s, kv, hd = k.shape
+    cache = init_attn_cache(cfg, kind, b, max_seq, dtype=COMPUTE_DTYPE)
+    slots = cache["k"].shape[1]
+    if kind == "local":
+        # place the last `min(s, slots)` tokens at their ring positions
+        take = min(s, slots)
+        idx = (jnp.arange(s - take, s)) % slots
+        cache["k"] = cache["k"].at[:, idx].set(k[:, s - take:].astype(COMPUTE_DTYPE))
+        cache["v"] = cache["v"].at[:, idx].set(v[:, s - take:].astype(COMPUTE_DTYPE))
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(COMPUTE_DTYPE), (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(COMPUTE_DTYPE), (0, 0, 0, 0))
+    return cache

@@ -1,0 +1,105 @@
+"""LeNet-5 (classic LeCun variant) with CGMQ quantization sites.
+
+The paper's experimental network (§4.1, "LeNet-5 as is done by Liu et al.").
+Conv/FC weights and all hidden activations carry quantization sites; the
+head's output stays floating point and the input is quantized to a fixed 8
+bits (paper §4.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sites import QuantContext
+
+# (name, kind, params) — the classic 28x28 LeNet-5.
+#   conv1: 1->6 5x5 same, relu, maxpool2   -> 14x14x6
+#   conv2: 6->16 5x5 valid, relu, maxpool2 -> 5x5x16
+#   fc1: 400->120 relu; fc2: 120->84 relu; fc3: 84->10 (fp head)
+
+
+def init_params(key) -> dict:
+    k = jax.random.split(key, 5)
+
+    def he(k, shape, fan_in):
+        return (jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)).astype(
+            jnp.float32
+        )
+
+    return {
+        "conv1_w": he(k[0], (5, 5, 1, 6), 25),
+        "conv1_b": jnp.zeros((6,)),
+        "conv2_w": he(k[1], (5, 5, 6, 16), 150),
+        "conv2_b": jnp.zeros((16,)),
+        "fc1_w": he(k[2], (400, 120), 400),
+        "fc1_b": jnp.zeros((120,)),
+        "fc2_w": he(k[3], (120, 84), 120),
+        "fc2_b": jnp.zeros((84,)),
+        "fc3_w": he(k[4], (84, 10), 84),
+        "fc3_b": jnp.zeros((10,)),
+    }
+
+
+def _conv(x, w, padding):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(qc: QuantContext, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, 28, 28, 1) normalized images -> (B, 10) logits."""
+    x = qc.input(x)
+
+    w = qc.weight("conv1", params["conv1_w"])
+    qc.register_matmul("conv1", params["conv1_w"].shape, fan_in=5 * 5 * 1,
+                       out_features=6, positions=28 * 28)
+    h = _conv(x, w, "SAME") + params["conv1_b"]
+    h = jax.nn.relu(h)
+    h = qc.act("conv1", h)
+    h = _maxpool2(h)  # 14x14x6
+
+    w = qc.weight("conv2", params["conv2_w"])
+    qc.register_matmul("conv2", params["conv2_w"].shape, fan_in=5 * 5 * 6,
+                       out_features=16, positions=10 * 10)
+    h = _conv(h, w, "VALID") + params["conv2_b"]
+    h = jax.nn.relu(h)
+    h = qc.act("conv2", h)
+    h = _maxpool2(h)  # 5x5x16
+
+    h = h.reshape(h.shape[0], -1)  # 400
+
+    w = qc.weight("fc1", params["fc1_w"])
+    qc.register_matmul("fc1", params["fc1_w"].shape, fan_in=400, out_features=120)
+    h = jax.nn.relu(h @ w + params["fc1_b"])
+    h = qc.act("fc1", h)
+
+    w = qc.weight("fc2", params["fc2_w"])
+    qc.register_matmul("fc2", params["fc2_w"].shape, fan_in=120, out_features=84)
+    h = jax.nn.relu(h @ w + params["fc2_b"])
+    h = qc.act("fc2", h)
+
+    w = qc.weight("fc3", params["fc3_w"])
+    qc.register_matmul("fc3", params["fc3_w"].shape, fan_in=84, out_features=10,
+                       act_quantized=False)  # fp head (paper §4.2)
+    return h @ w + params["fc3_b"]
+
+
+WEIGHT_LOOKUP = {
+    "conv1": "conv1_w",
+    "conv2": "conv2_w",
+    "fc1": "fc1_w",
+    "fc2": "fc2_w",
+    "fc3": "fc3_w",
+}
+
+
+def weight_lookup(params):
+    return lambda name: params.get(WEIGHT_LOOKUP.get(name, ""), None)

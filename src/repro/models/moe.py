@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style capacity dispatch.
+
+Two implementations selected by config:
+
+  * ``capacity`` (default) — tokens grouped into fixed-size groups; per-group
+    dispatch/combine einsums with capacity ``C = group * top_k * cf / E``.
+    Static shapes, GSPMD-friendly (the expert axis shards over `model` when
+    divisible — arctic's 128 experts — otherwise experts ride the grouped-GEMM
+    batch dim with d_ff sharded — mixtral's 8). Overflow tokens are dropped
+    (standard GShard semantics), which vanishes as cf grows.
+  * ``dense_all`` — every expert computes every token, masked combine. Exact
+    routing semantics, E/k-times the FLOPs; used by small smoke tests and as
+    the oracle in tests/test_moe.py.
+
+Router weights stay fp32 and are NOT quantization sites (tiny, precision
+critical — DESIGN.md §5); expert weights carry per-expert gates, so CGMQ can
+assign different bit-widths to different experts (beyond-paper extension).
+
+BOP accounting: ``active_frac = top_k / n_experts`` — deployment cost counts
+activated expert MACs only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sites import QuantContext
+
+from .layers import COMPUTE_DTYPE
+
+
+def init_moe(key, cfg: ModelConfig):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_dff
+    k = jax.random.split(key, 4)
+
+    def w(key, shape, fan_in):
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    return {
+        "router": w(k[0], (d, e), d),
+        "w_gate": w(k[1], (e, d, f), d),
+        "w_up": w(k[2], (e, d, f), d),
+        "w_down": w(k[3], (e, f, d), f),
+    }
+
+
+def _register_expert_sites(qc: QuantContext, cfg: ModelConfig):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_dff
+    frac = cfg.top_k / cfg.n_experts
+    for nm, shp, fi, of in (
+        ("moe_gate", (e, d, f), d, f),
+        ("moe_up", (e, d, f), d, f),
+        ("moe_down", (e, f, d), f, d),
+    ):
+        # positions=e: the stacked expert dim multiplies the MAC count; the
+        # active fraction then scales it down to activated experts.
+        qc.register_matmul(nm, shp, fan_in=fi, out_features=of, positions=e,
+                           active_frac=frac)
+
+
+def _expert_ffn(qc: QuantContext, p, x):
+    """Batched expert GLU-FFN. x: (E, C, d) -> (E, C, d)."""
+    wg = qc.weight("moe_gate", p["w_gate"]).astype(COMPUTE_DTYPE)
+    wu = qc.weight("moe_up", p["w_up"]).astype(COMPUTE_DTYPE)
+    wd = qc.weight("moe_down", p["w_down"]).astype(COMPUTE_DTYPE)
+    x = x.astype(COMPUTE_DTYPE)
+    g = jnp.einsum("ecd,edf->ecf", x, wg, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(COMPUTE_DTYPE)
+    h = qc.act("moe_up", h)
+    y = jnp.einsum("ecf,efd->ecd", h.astype(COMPUTE_DTYPE), wd,
+                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    y = qc.act("moe_down", y)
+    return y
+
+
+def _router(qc: QuantContext, p, x, cfg: ModelConfig):
+    """Top-k softmax router. x: (T, d) -> (weights (T,k), idx (T,k))."""
+    logits = x.astype(jnp.float32) @ p["router"]  # fp32, not a quant site
+    topv, topi = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(topv, axis=-1)  # mixtral-style renormalized top-k
+    return weights, topi
+
+
+def moe_ffn(qc: QuantContext, p, x, cfg: ModelConfig, *, impl: str = "capacity",
+            plan=None):
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    _register_expert_sites(qc, cfg)
+    xt = x.reshape(b * s, d)
+    weights, topi = _router(qc, p, xt, cfg)
+
+    if impl == "dense_all":
+        y = _moe_dense_all(qc, p, xt, weights, topi, cfg)
+    else:
+        y = _moe_capacity(qc, p, xt, weights, topi, cfg, plan)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+def _moe_dense_all(qc, p, xt, weights, topi, cfg):
+    t, d = xt.shape
+    e = cfg.n_experts
+    yo = _expert_ffn(qc, p, jnp.broadcast_to(xt[None], (e, t, d)))  # (E, T, d)
+    # combine: sum_k w_k * y[expert_k]
+    mask = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (T, k, E)
+    comb = jnp.einsum("tke,tk->et", mask, weights)
+    return jnp.einsum("et,etd->td", comb.astype(COMPUTE_DTYPE), yo,
+                      preferred_element_type=jnp.float32)
+
+
+def _moe_capacity(qc, p, xt, weights, topi, cfg, plan=None):
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group, t)
+    assert t % g == 0, (t, g)
+    ng = t // g
+    cap = max(1, int(g * k * cfg.capacity_factor / e))
+
+    xg = xt.reshape(ng, g, d)
+    wg = weights.reshape(ng, g, k)
+    ig = topi.reshape(ng, g, k)
+
+    onehot = jax.nn.one_hot(ig, e, dtype=jnp.float32)        # (ng, g, k, E)
+    # position of each token within its expert's queue (priority: slot 0 first)
+    pos = jnp.cumsum(onehot.reshape(ng, g * k, e), axis=1).reshape(ng, g, k, e)
+    pos = pos * onehot - 1.0                                  # -1 where unrouted
+    keep = ((pos >= 0) & (pos < cap)).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = ((onehot * keep)[..., None] * pos_oh).sum(axis=2)  # (ng, g, E, C)
+    # combine weights: dispatch slots weighted by router prob
+    comb = ((wg[..., None] * onehot * keep)[..., None] * pos_oh).sum(axis=2)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch.astype(COMPUTE_DTYPE),
+                           xg.astype(COMPUTE_DTYPE))          # (ng, E, C, d)
+    if plan is not None:
+        expert_in = plan.shard_moe(expert_in)
+    # fold groups into the expert token dim for one batched FFN call
+    ei = jnp.moveaxis(expert_in, 1, 0).reshape(e, ng * cap, d)    # (E, ng*C, d)
+    eo = _expert_ffn(qc, p, ei)                                   # (E, ng*C, d)
+    expert_out = jnp.moveaxis(eo.reshape(e, ng, cap, d), 1, 0)    # (ng, E, C, d)
+    if plan is not None:
+        expert_out = plan.shard_moe(expert_out)
+    y = jnp.einsum("ngec,necd->ngd", comb.astype(COMPUTE_DTYPE),
+                   expert_out.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+    return y.reshape(t, d)

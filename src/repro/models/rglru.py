@@ -1,0 +1,143 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+Block structure (the paper's "recurrent block"):
+
+    x-branch: linear -> causal conv1d(k=4) -> RG-LRU
+    y-branch: linear -> GeLU
+    merge:    elementwise product -> output linear
+
+RG-LRU recurrence (per channel):
+
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the affine maps
+(h -> a h + b is associative), giving log-depth HLO; decode is the one-step
+recurrence. The carried state is fp32 (DESIGN.md §5); all four projections
+are CGMQ sites.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sites import QuantContext
+
+from .layers import COMPUTE_DTYPE, qmatmul
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 5)
+
+    def mk(key, shape, fan_in):
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    # Lambda init so a^c spans (0.9, 0.999) as in the Griffin paper.
+    u = jax.random.uniform(ks[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "wx": mk(ks[0], (d, w), d),           # x-branch in
+        "wy": mk(ks[1], (d, w), d),           # y-branch in
+        "conv_w": 0.1 * jax.random.normal(ks[2], (cfg.conv_kernel, w)),
+        "conv_b": jnp.zeros((w,)),
+        "gate_a": mk(ks[3], (w, w), w),       # recurrence gate
+        "gate_a_b": jnp.zeros((w,)),
+        "gate_x": mk(jax.random.fold_in(ks[3], 1), (w, w), w),
+        "gate_x_b": jnp.zeros((w,)),
+        "lam": lam,
+        "wo": mk(jax.random.fold_in(ks[0], 2), (w, d), w),
+    }
+
+
+def _conv1d(x, conv_w, conv_b, conv_state=None):
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * conv_w[i][None, None, :] for i in range(k)
+    ) + conv_b[None, None, :]
+    return y, xp[:, -(k - 1) :, :]
+
+
+def _gates(qc: QuantContext, p, x):
+    """x: (B, L, w) -> (a_t, gated input) in fp32."""
+    r = qmatmul(qc, "lru_gate_a", x, p["gate_a"]) + p["gate_a_b"].astype(COMPUTE_DTYPE)
+    i = qmatmul(qc, "lru_gate_x", x, p["gate_x"]) + p["gate_x_b"].astype(COMPUTE_DTYPE)
+    r = jax.nn.sigmoid(r.astype(jnp.float32))
+    i = jax.nn.sigmoid(i.astype(jnp.float32))
+    r = qc.act("lru_gate_a", r).astype(jnp.float32)
+    i = qc.act("lru_gate_x", i).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]).astype(jnp.float32) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * x.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(
+    qc: QuantContext, p, xin, cfg: ModelConfig, *, conv_state=None, h0=None,
+    plan=None,
+):
+    """Full-sequence recurrent block. xin: (B, L, d) -> (y, (conv_st, h))."""
+    x = qmatmul(qc, "lru_x", xin, p["wx"])
+    x = qc.act("lru_x", x)
+    y_br = qmatmul(qc, "lru_y", xin, p["wy"])
+    y_br = jax.nn.gelu(y_br.astype(jnp.float32), approximate=True)
+    y_br = qc.act("lru_y", y_br.astype(COMPUTE_DTYPE))
+
+    x, new_conv = _conv1d(x, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _gates(qc, p, x)
+
+    if h0 is not None:
+        # fold the initial state into the first step: h1 = a1 h0 + b1
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_last = h[:, -1, :]
+
+    merged = (h.astype(COMPUTE_DTYPE)) * y_br  # recurrent output stays fp
+    out = qmatmul(qc, "lru_o", merged, p["wo"])
+    out = qc.act("lru_o", out)
+    return out, (new_conv, h_last)
+
+
+def rglru_decode_step(
+    qc: QuantContext, p, xin, conv_state, h, cfg: ModelConfig, *, plan=None
+):
+    """One-token step. xin: (B, 1, d). Returns (y, (conv_st, h))."""
+    x = qmatmul(qc, "lru_x", xin, p["wx"])
+    x = qc.act("lru_x", x)
+    y_br = qmatmul(qc, "lru_y", xin, p["wy"])
+    y_br = jax.nn.gelu(y_br.astype(jnp.float32), approximate=True)
+    y_br = qc.act("lru_y", y_br.astype(COMPUTE_DTYPE))
+
+    x, new_conv = _conv1d(x, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _gates(qc, p, x)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+
+    merged = h_new[:, None, :].astype(COMPUTE_DTYPE) * y_br
+    out = qmatmul(qc, "lru_o", merged, p["wo"])
+    out = qc.act("lru_o", out)
+    return out, (new_conv, h_new)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.lru_width), jnp.float32),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

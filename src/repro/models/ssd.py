@@ -1,0 +1,228 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+TPU adaptation (DESIGN.md §3): the chunked SSD algorithm maps naturally onto
+MXU matmuls — quadratic attention-like einsums within chunks, a short scan
+across chunk states. We implement:
+
+  * ``ssd_chunked``      — training/prefill forward (chunked dual form)
+  * ``ssd_decode_step``  — single-token recurrence for serving
+  * ``ssd_reference``    — naive O(L) recurrence oracle (tests)
+
+The carried SSM state and the decay chain stay fp32 (quantizing carried state
+feeds error back through time; see DESIGN.md §5); the in/out projections and
+their activations are CGMQ sites.
+
+Layout: heads H = d_inner / head_dim P, single B/C group (G=1), state size N.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sites import QuantContext
+
+from .layers import COMPUTE_DTYPE, qmatmul, rms_norm
+
+
+def init_ssd(key, cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 3)
+    proj_out = 2 * din + 2 * n + h  # [z, x, B, C, dt]
+
+    def w(key, shape, fan_in):
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    return {
+        "in_proj": w(ks[0], (d, proj_out), d),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_kernel, din + 2 * n)),
+        "conv_b": jnp.zeros((din + 2 * n,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "D": jnp.ones((h,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, h))),
+        "gate_norm": jnp.zeros((din,)),
+        "out_proj": w(ks[2], (din, d), din),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv along time. xbc: (B, L, C). Returns (y, state).
+
+    ``conv_state``: (B, k-1, C) trailing context (decode path).
+    """
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, L+k-1, C)
+    y = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(k)
+    ) + conv_b[None, None, :]
+    new_state = xp[:, -(k - 1) :, :]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(
+    qc: QuantContext, p, xin, cfg: ModelConfig, *, conv_state=None,
+    ssm_state=None, plan=None,
+):
+    """Full-sequence SSD forward. xin: (B, L, d). Returns (y, (conv_st, ssm_st)).
+
+    L must be a multiple of ``cfg.ssm_chunk`` (pad upstream if needed).
+    """
+    b, l, _ = xin.shape
+    din, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cs = min(cfg.ssm_chunk, l)
+    assert l % cs == 0, (l, cs)
+    nc = l // cs
+
+    zxbcdt = qmatmul(qc, "ssm_in", xin, p["in_proj"])
+    zxbcdt = qc.act("ssm_in", zxbcdt)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x = xbc[..., :din]
+    bmat = xbc[..., din : din + n]          # (B, L, N)
+    cmat = xbc[..., din + n :]              # (B, L, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B, L, H)
+    a = -jnp.exp(p["A_log"]).astype(jnp.float32)                     # (H,)
+    da = dt * a                                                      # (B, L, H)
+
+    xh = x.reshape(b, l, h, pdim).astype(jnp.float32)
+    # chunk views
+    xc = xh.reshape(b, nc, cs, h, pdim)
+    bc = bmat.reshape(b, nc, cs, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, cs, n).astype(jnp.float32)
+    dac = da.reshape(b, nc, cs, h)
+    dtc = dt.reshape(b, nc, cs, h)
+
+    # cumulative decay within chunks
+    seg = jnp.cumsum(dac, axis=2)                                    # (B,nc,cs,H)
+    # intra-chunk (quadratic) term: decay(i<-j) = exp(seg_i - seg_j)
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]              # (B,nc,i,j,H)
+    causal = jnp.tril(jnp.ones((cs, cs), bool))
+    # mask BEFORE exp: exp of the (positive) acausal region would overflow and
+    # poison gradients through jnp.where.
+    rel = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    decay = jnp.exp(rel)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)                   # (B,nc,i,j)
+    yd = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                    scores, decay, dtc, xc)                          # diag block
+
+    # chunk-final states: S_c = sum_j exp(seg_last - seg_j) dt_j B_j x_j^T
+    last = seg[:, :, -1:, :]                                         # (B,nc,1,H)
+    w_end = jnp.exp(last - seg) * dtc                                # (B,nc,cs,H)
+    chunk_states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w_end, bc, xc)
+
+    # inter-chunk recurrence over nc chunk states (small sequential scan)
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))                      # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        s_prev = carry
+        s_c, dec = inp
+        s_new = s_prev * dec[..., None, None] + s_c
+        return s_new, s_prev  # emit the state ENTERING this chunk
+
+    init = (
+        jnp.zeros((b, h, n, pdim), jnp.float32)
+        if ssm_state is None
+        else ssm_state.astype(jnp.float32)
+    )
+    s_final, s_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)                                  # (B,nc,H,N,P)
+
+    # inter-chunk contribution: y_i += C_i exp(seg_i) . S_in
+    yo = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, jnp.exp(seg), s_in)
+
+    y = (yd + yo).reshape(b, l, h, pdim)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, l, din)
+    # gated RMSNorm (mamba2): norm(y * silu(z)); stays fp (recurrent output,
+    # DESIGN.md §5) — the out-projection's OWN output is the quant site.
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["gate_norm"],
+                 cfg.norm_eps)
+    y = y.astype(COMPUTE_DTYPE)
+    out = qmatmul(qc, "ssm_out", y, p["out_proj"])
+    out = qc.act("ssm_out", out)
+    return out, (new_conv, s_final)
+
+
+def ssd_decode_step(
+    qc: QuantContext, p, xin, conv_state, ssm_state, cfg: ModelConfig, *, plan=None
+):
+    """One-token SSD step. xin: (B, 1, d). Returns (y, (conv_st, ssm_st))."""
+    b = xin.shape[0]
+    din, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = qmatmul(qc, "ssm_in", xin, p["in_proj"])
+    zxbcdt = qc.act("ssm_in", zxbcdt)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x = xbc[..., :din]
+    bvec = xbc[..., din : din + n].astype(jnp.float32)[:, 0]     # (B, N)
+    cvec = xbc[..., din + n :].astype(jnp.float32)[:, 0]         # (B, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B, H)
+    a = -jnp.exp(p["A_log"]).astype(jnp.float32)
+    decay = jnp.exp(dt * a)                                       # (B, H)
+
+    xh = x.reshape(b, h, pdim).astype(jnp.float32)
+    s = ssm_state.astype(jnp.float32)                             # (B,H,N,P)
+    s = s * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bvec, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cvec, s)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["gate_norm"],
+                 cfg.norm_eps)
+    y = y.astype(COMPUTE_DTYPE)
+    out = qmatmul(qc, "ssm_out", y, p["out_proj"])
+    out = qc.act("ssm_out", out)
+    return out, (new_conv, s)
+
+
+def ssd_reference(p, xin, cfg: ModelConfig):
+    """Naive per-step recurrence oracle (fp32, no quantization)."""
+    from repro.core.sites import QuantContext
+
+    qc = QuantContext(mode="off")
+    b, l, _ = xin.shape
+    conv_state = jnp.zeros((b, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.ssm_state))
+    ssm_state = jnp.zeros((b, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim))
+    ys = []
+    for t in range(l):
+        y, (conv_state, ssm_state) = ssd_decode_step(
+            qc, p, xin[:, t : t + 1], conv_state, ssm_state, cfg
+        )
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), ssm_state
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros(
+            (batch, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype
+        ),
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), dtype
+        ),
+    }

@@ -1,0 +1,492 @@
+"""Config-driven decoder model: the integration layer over all block kinds.
+
+Supports every assigned architecture through ``ModelConfig``:
+  * block kinds: 'global' / 'local' attention, 'ssm' (Mamba-2 SSD),
+    'recurrent' (RG-LRU) — cycled through ``cfg.block_pattern``.
+  * dense GLU MLPs, MoE (+ arctic's dense-residual), gemma2 sandwich norms
+    and softcaps, qwen M-RoPE / qk-norm / qkv-bias, modality-stub inputs.
+
+Layer stacking: the repeating pattern is scanned (``lax.scan`` over
+``R = n_layers // len(pattern)`` super-blocks, remat'd), which keeps the HLO
+compact for 80-layer models; remainder layers are unrolled. Quantization
+state (gates / ranges / probes) for scanned sites is stacked along the scan
+axis and sliced per layer inside the body; per-layer stats come back as scan
+outputs (see core/sites.py child-context protocol).
+
+Entry points:
+  init_params(cfg, key)
+  forward_train(qc, params, batch, cfg, ...)      -> logits
+  prefill(qc, params, batch, cfg, ...)            -> logits, cache
+  decode_step(qc, params, cache, tokens, pos, ...) -> logits, cache
+  init_cache(cfg, batch, max_seq)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sites import QuantContext
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import rglru as rglru_lib
+from . import ssd as ssd_lib
+from .layers import COMPUTE_DTYPE, glu_mlp, init_glu_mlp, qmatmul, rms_norm, softcap
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,))}
+    if kind in ("global", "local"):
+        p["attn"] = attn.init_attn(ks[0], cfg)
+        p["ln2"] = jnp.zeros((cfg.d_model,))
+        if cfg.n_experts:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg)
+            if cfg.dense_residual:
+                p["mlp"] = init_glu_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp)
+        else:
+            p["mlp"] = init_glu_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp)
+        if cfg.post_norm:
+            p["ln1_post"] = jnp.zeros((cfg.d_model,))
+            p["ln2_post"] = jnp.zeros((cfg.d_model,))
+    elif kind == "ssm":
+        p["ssd"] = ssd_lib.init_ssd(ks[0], cfg)
+    elif kind == "recurrent":
+        p["rglru"] = rglru_lib.init_rglru(ks[0], cfg)
+        p["ln2"] = jnp.zeros((cfg.d_model,))
+        p["mlp"] = init_glu_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp)
+        if cfg.post_norm:
+            p["ln1_post"] = jnp.zeros((cfg.d_model,))
+            p["ln2_post"] = jnp.zeros((cfg.d_model,))
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    pat = cfg.block_pattern
+    reps = cfg.pattern_repeats
+    blocks = []
+    for pi, kind in enumerate(pat):
+        per_rep = [
+            _init_block(keys[r * len(pat) + pi], cfg, kind) for r in range(reps)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    rem = [
+        _init_block(keys[reps * len(pat) + i], cfg, kind)
+        for i, kind in enumerate(cfg.remainder_kinds)
+    ]
+    params = {
+        "blocks": blocks,
+        "rem": rem,
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if cfg.embed_input:
+        params["embed"] = (
+            jax.random.normal(keys[-1], (cfg.padded_vocab, cfg.d_model)) * 0.02
+        ).astype(jnp.float32)
+        if not cfg.tie_embeddings:
+            params["head"] = (
+                jax.random.normal(keys[-2], (cfg.d_model, cfg.padded_vocab)) * 0.02
+            ).astype(jnp.float32)
+    else:
+        # modality stub: frame/patch embeddings come in; output head only
+        params["head"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, cfg.padded_vocab)) * 0.02
+        ).astype(jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block_full(qc, bp, h, cfg: ModelConfig, kind: str, *, positions,
+                      mrope_pos, plan, moe_impl):
+    """Full-sequence block application. Returns (h, cache_entry)."""
+    resid = h
+    hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+    if kind in ("global", "local"):
+        with qc.scope("attn"):
+            y, (k, v) = attn.attention_train(
+                qc, bp["attn"], hn, cfg, kind,
+                positions=positions, mrope_pos=mrope_pos, plan=plan,
+            )
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        resid = h
+        hn = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        with qc.scope("ffn"):
+            if cfg.n_experts:
+                y = moe_lib.moe_ffn(qc, bp["moe"], hn, cfg, impl=moe_impl, plan=plan)
+                if cfg.dense_residual:
+                    with qc.scope("dense"):
+                        y = y + glu_mlp(qc, bp["mlp"], hn, cfg.mlp).astype(y.dtype)
+            else:
+                y = glu_mlp(qc, bp["mlp"], hn, cfg.mlp)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln2_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        cache_entry = {"k": k.astype(COMPUTE_DTYPE), "v": v.astype(COMPUTE_DTYPE)}
+    elif kind == "ssm":
+        with qc.scope("ssd"):
+            y, (conv_st, ssm_st) = ssd_lib.ssd_chunked(qc, bp["ssd"], hn, cfg, plan=plan)
+        h = resid + y.astype(resid.dtype)
+        cache_entry = {"conv": conv_st.astype(jnp.float32), "ssm": ssm_st}
+    elif kind == "recurrent":
+        with qc.scope("rglru"):
+            y, (conv_st, h_last) = rglru_lib.rglru_forward(qc, bp["rglru"], hn, cfg,
+                                                           plan=plan)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        resid = h
+        hn = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        with qc.scope("ffn"):
+            y = glu_mlp(qc, bp["mlp"], hn, cfg.mlp)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln2_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        cache_entry = {"conv": conv_st.astype(jnp.float32), "h": h_last}
+    else:
+        raise ValueError(kind)
+    if plan is not None:
+        h = plan.shard_hidden(h)
+    return h, cache_entry
+
+
+def _apply_block_decode(qc, bp, h, cache, pos, cfg: ModelConfig, kind: str, *,
+                        mrope_pos, plan):
+    resid = h
+    hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+    if kind in ("global", "local"):
+        with qc.scope("attn"):
+            y, new_cache = attn.attention_decode(
+                qc, bp["attn"], hn, cache, pos, cfg, kind,
+                mrope_pos=mrope_pos, plan=plan,
+            )
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        resid = h
+        hn = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        with qc.scope("ffn"):
+            if cfg.n_experts:
+                y = moe_lib.moe_ffn(qc, bp["moe"], hn, cfg, impl="dense_all",
+                                    plan=plan)
+                if cfg.dense_residual:
+                    with qc.scope("dense"):
+                        y = y + glu_mlp(qc, bp["mlp"], hn, cfg.mlp).astype(y.dtype)
+            else:
+                y = glu_mlp(qc, bp["mlp"], hn, cfg.mlp)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln2_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+    elif kind == "ssm":
+        with qc.scope("ssd"):
+            y, (conv_st, ssm_st) = ssd_lib.ssd_decode_step(
+                qc, bp["ssd"], hn, cache["conv"], cache["ssm"], cfg, plan=plan)
+        h = resid + y.astype(resid.dtype)
+        new_cache = {"conv": conv_st.astype(jnp.float32), "ssm": ssm_st}
+    elif kind == "recurrent":
+        with qc.scope("rglru"):
+            y, (conv_st, h_last) = rglru_lib.rglru_decode_step(
+                qc, bp["rglru"], hn, cache["conv"], cache["h"], cfg, plan=plan)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        resid = h
+        hn = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        with qc.scope("ffn"):
+            y = glu_mlp(qc, bp["mlp"], hn, cfg.mlp)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln2_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        new_cache = {"conv": conv_st.astype(jnp.float32), "h": h_last}
+    else:
+        raise ValueError(kind)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Quantization-state plumbing for the scan
+# ---------------------------------------------------------------------------
+
+
+def _prefixed(d: dict, prefix: str) -> dict:
+    return {k: v for k, v in d.items() if k.startswith(prefix)}
+
+
+def _scan_quant_xs(qc: QuantContext, prefix: str):
+    """Per-layer-stacked quant state entering the scan as xs."""
+    return (
+        _prefixed(qc.gates, prefix),
+        {k: v["beta"] for k, v in qc.ranges.items() if k.startswith(prefix)},
+        _prefixed(qc.probes, prefix),
+    )
+
+
+def _child_for_slice(qc: QuantContext, gates_s, betas_s, probes_s):
+    ranges = dict(qc.ranges)
+    for k, b in betas_s.items():
+        ranges[k] = {"beta": b, "signed": qc.ranges[k]["signed"]}
+    return qc.child(
+        gates={**qc.gates, **gates_s},
+        ranges=ranges,
+        probes={**qc.probes, **probes_s},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(qc: QuantContext, params, batch, cfg: ModelConfig):
+    if cfg.embed_input:
+        h = jnp.take(params["embed"], batch, axis=0).astype(COMPUTE_DTYPE)
+    else:
+        h = batch.astype(COMPUTE_DTYPE)  # modality stub: embeddings provided
+    if cfg.scale_embed:
+        h = h * jnp.asarray(cfg.d_model**0.5, COMPUTE_DTYPE)
+    return qc.input(h).astype(COMPUTE_DTYPE)
+
+
+def _head(qc: QuantContext, params, h, cfg: ModelConfig):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["head"] if "head" in params else params["embed"].T
+    logits = qmatmul(qc, "head", h, w, act_quantized=False)
+    logits = logits.astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) / prefill
+# ---------------------------------------------------------------------------
+
+
+def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
+                  plan=None, mrope_pos=None, moe_impl="capacity",
+                  want_cache=False, remat=True, scan_unroll=False):
+    h = _embed(qc, params, batch, cfg)
+    s = h.shape[1]
+    positions = jnp.arange(s)[None, :]
+    if plan is not None:
+        h = plan.shard_hidden(h)
+
+    pat = cfg.block_pattern
+    reps = cfg.pattern_repeats
+    caches = []
+
+    for pi, kind in enumerate(pat):
+        prefix = f"p{pi}_{kind}/"
+        gates_xs, betas_xs, probes_xs = _scan_quant_xs(qc, prefix)
+
+        def body(carry, xs, _pi=pi, _kind=kind, _prefix=prefix):
+            hh = carry
+            bp, g_s, b_s, p_s = xs
+            sub = _child_for_slice(qc, g_s, b_s, p_s)
+            with sub.scope(_prefix[:-1]):
+                hh, cache_entry = _apply_block_full(
+                    sub, bp, hh, cfg, _kind, positions=positions,
+                    mrope_pos=mrope_pos, plan=plan, moe_impl=moe_impl,
+                )
+            out = (sub.act_stats, sub.weight_stats)
+            if want_cache:
+                out = out + (cache_entry,)
+            return hh, out
+
+        if reps == 1:
+            # single repeat: quant state is unstacked (no scan axis) — apply
+            # the body directly on slice 0 of the (1, ...) param stack.
+            bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
+            ys = body(h, (bp, gates_xs, betas_xs, probes_xs))
+            h, out = ys
+            qc.absorb_stacked_stats(out[0], out[1])
+            if want_cache:
+                caches.append(jax.tree.map(lambda x: x[None], out[2]))
+            continue
+
+        body_fn = jax.checkpoint(body) if remat else body
+        unroll = reps if scan_unroll else 1
+        if qc.mode == "collect":
+            with qc.layer_stack(reps):
+                h, ys = jax.lax.scan(
+                    body_fn, h,
+                    (params["blocks"][pi], gates_xs, betas_xs, probes_xs),
+                    unroll=unroll,
+                )
+        else:
+            h, ys = jax.lax.scan(
+                body_fn, h,
+                (params["blocks"][pi], gates_xs, betas_xs, probes_xs),
+                unroll=unroll,
+            )
+        qc.absorb_stacked_stats(ys[0], ys[1])
+        if want_cache:
+            caches.append(ys[2])
+
+    # remainder layers (unrolled)
+    for i, kind in enumerate(cfg.remainder_kinds):
+        prefix = f"rem{i}_{kind}"
+        with qc.scope(prefix):
+            h, cache_entry = _apply_block_full(
+                qc, params["rem"][i], h, cfg, kind, positions=positions,
+                mrope_pos=mrope_pos, plan=plan, moe_impl=moe_impl,
+            )
+        if want_cache:
+            caches.append(cache_entry)
+
+    logits = _head(qc, params, h, cfg)
+    if want_cache:
+        return logits, caches
+    return logits
+
+
+def forward_train(qc: QuantContext, params, batch, cfg: ModelConfig, *,
+                  plan=None, mrope_pos=None, moe_impl="capacity", remat=True,
+                  scan_unroll=False):
+    return _forward_full(qc, params, batch, cfg, plan=plan, mrope_pos=mrope_pos,
+                         moe_impl=moe_impl, want_cache=False, remat=remat,
+                         scan_unroll=scan_unroll)
+
+
+def prefill(qc: QuantContext, params, batch, cfg: ModelConfig, *, max_seq: int,
+            plan=None, mrope_pos=None, moe_impl="capacity", scan_unroll=False):
+    """Forward + build the decode cache. Returns (logits, cache)."""
+    logits, raw = _forward_full(
+        qc, params, batch, cfg, plan=plan, mrope_pos=mrope_pos,
+        moe_impl=moe_impl, want_cache=True, remat=False,
+        scan_unroll=scan_unroll,
+    )
+    b = batch.shape[0]
+    cache = {"pos": jnp.asarray(batch.shape[1], jnp.int32), "layers": []}
+    pat = cfg.block_pattern
+    for pi, kind in enumerate(pat):
+        entry = raw[pi]
+        if kind in ("global", "local"):
+            # stacked (R, B, S, KV, hd) -> per-rep ring/full caches
+            built = jax.vmap(
+                lambda k, v: attn.fill_cache_from_prefill(cfg, kind, k, v, max_seq)
+            )(entry["k"], entry["v"])
+            cache["layers"].append(built)
+        else:
+            cache["layers"].append(entry)
+    for i, kind in enumerate(cfg.remainder_kinds):
+        entry = raw[len(pat) + i]
+        if kind in ("global", "local"):
+            cache["layers"].append(
+                attn.fill_cache_from_prefill(cfg, kind, entry["k"], entry["v"],
+                                             max_seq)
+            )
+        else:
+            cache["layers"].append(entry)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    pat = cfg.block_pattern
+    reps = cfg.pattern_repeats
+    layers = []
+    for kind in pat:
+        if kind in ("global", "local"):
+            one = attn.init_attn_cache(cfg, kind, batch, max_seq)
+        elif kind == "ssm":
+            one = ssd_lib.init_ssd_cache(cfg, batch)
+        else:
+            one = rglru_lib.init_rglru_cache(cfg, batch)
+        layers.append(jax.tree.map(lambda x: jnp.stack([x] * reps), one))
+    for kind in cfg.remainder_kinds:
+        if kind in ("global", "local"):
+            layers.append(attn.init_attn_cache(cfg, kind, batch, max_seq))
+        elif kind == "ssm":
+            layers.append(ssd_lib.init_ssd_cache(cfg, batch))
+        else:
+            layers.append(rglru_lib.init_rglru_cache(cfg, batch))
+    return {"pos": jnp.asarray(0, jnp.int32), "layers": layers}
+
+
+def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
+                plan=None, mrope_pos=None, scan_unroll=False):
+    """One decode step for the whole batch. tokens: (B,) int32 or (B,1,d)
+    embeddings for stub-modality models. Returns (logits (B, 1, V), cache)."""
+    pos = cache["pos"]
+    if cfg.embed_input:
+        batch = tokens[:, None]
+    else:
+        batch = tokens
+    h = _embed(qc, params, batch, cfg)
+
+    pat = cfg.block_pattern
+    new_layers = []
+    for pi, kind in enumerate(pat):
+        prefix = f"p{pi}_{kind}/"
+        gates_xs, betas_xs, probes_xs = _scan_quant_xs(qc, prefix)
+
+        def body(carry, xs, _kind=kind, _prefix=prefix):
+            hh = carry
+            bp, lc, g_s, b_s, p_s = xs
+            sub = _child_for_slice(qc, g_s, b_s, p_s)
+            with sub.scope(_prefix[:-1]):
+                hh, nc = _apply_block_decode(
+                    sub, bp, hh, lc, pos, cfg, _kind,
+                    mrope_pos=mrope_pos, plan=plan,
+                )
+            return hh, nc
+
+        if cfg.pattern_repeats == 1:
+            bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
+            lc = jax.tree.map(lambda x: x[0], cache["layers"][pi])
+            h, nc = body(h, (bp, lc, gates_xs, betas_xs, probes_xs))
+            new_layers.append(jax.tree.map(lambda x: x[None], nc))
+            continue
+
+        unroll = cfg.pattern_repeats if scan_unroll else 1
+        if qc.mode == "collect":
+            with qc.layer_stack(cfg.pattern_repeats):
+                h, nc = jax.lax.scan(
+                    body, h,
+                    (params["blocks"][pi], cache["layers"][pi], gates_xs,
+                     betas_xs, probes_xs), unroll=unroll,
+                )
+        else:
+            h, nc = jax.lax.scan(
+                body, h,
+                (params["blocks"][pi], cache["layers"][pi], gates_xs,
+                 betas_xs, probes_xs), unroll=unroll,
+            )
+        new_layers.append(nc)
+
+    for i, kind in enumerate(cfg.remainder_kinds):
+        prefix = f"rem{i}_{kind}"
+        with qc.scope(prefix):
+            h, nc = _apply_block_decode(
+                qc, params["rem"][i], h, cache["layers"][len(pat) + i], pos,
+                cfg, kind, mrope_pos=mrope_pos, plan=plan,
+            )
+        new_layers.append(nc)
+
+    logits = _head(qc, params, h, cfg)
+    return logits, {"pos": pos + 1, "layers": new_layers}

@@ -1,0 +1,111 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable (g)).
+
+Three terms per (arch x shape x mesh), from the PER-DEVICE compiled module
+(XLA's cost/memory analyses describe the post-SPMD per-device program):
+
+    compute    = flops_per_device / peak_flops_per_chip
+    memory     = bytes_accessed_per_device / hbm_bw_per_chip
+    collective = collective_bytes_per_device / ici_bw_per_chip
+
+Hardware constants (TPU v5e, per the assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+``collective_bytes`` is NOT in cost_analysis: we parse the compiled HLO text
+and sum the operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "f32[64,32]{1,0}" or "bf16[8,128]" or "(f32[2], f32[4,4])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\]\{\},.\d]+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the per-device HLO.
+
+    Counting the RESULT shape (between ``=`` and the op name; tuples for
+    multi-operand reduces) measures the data each device receives — the
+    standard per-device traffic proxy. Fusions never contain collectives, so
+    a line scan is sufficient. Async ``-start``/``-done`` pairs count once.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["start_ops"] = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        if phase == "-start":
+            out["start_ops"] += 1
+        out[op] += _shape_bytes(shapes)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Three roofline terms (seconds) + dominant + useful-flops ratio."""
+    pd = rec["per_device"]
+    flops = pd.get("flops") or 0.0
+    byts = pd.get("bytes_accessed") or 0.0
+    coll = (pd.get("collective_bytes") or {}).get("total", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total_flops_all_chips = flops * rec.get("chips", 1)
+    useful = None
+    mfu_bound = None
+    if rec.get("model_flops_global"):
+        useful = rec["model_flops_global"] / max(total_flops_all_chips, 1.0)
+        # roofline fraction: model flops at peak / roofline-bound step time
+        ideal_s = rec["model_flops_global"] / (rec["chips"] * PEAK_FLOPS)
+        mfu_bound = ideal_s / max(bound, 1e-12)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_step_s": bound,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": mfu_bound,
+    }

@@ -1,0 +1,108 @@
+"""BOP cost model tests (paper §2.5): hand-computed counts per granularity."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bop
+from repro.core.sites import SiteInfo
+
+
+def _site(fan_in=4, out=3, positions=1, stack=1, frac=1.0, act_q=True, name="l"):
+    return SiteInfo(
+        name=name,
+        weight_shape=(fan_in, out),
+        fan_in=fan_in,
+        out_features=out,
+        positions=positions,
+        stack=stack,
+        active_frac=frac,
+        act_quantized=act_q,
+    )
+
+
+def _gate_for_bits(bits):
+    """Inverse of T on the representative interval midpoints."""
+    table = {2: 0.5, 4: 1.5, 8: 2.5, 16: 3.5, 32: 5.5}
+    return table[bits]
+
+
+def test_per_tensor_matches_macs_formula():
+    """Per-tensor: BOP = MACs * b_w * b_a."""
+    s = _site(fan_in=4, out=3)
+    g = {"l.w": jnp.asarray(_gate_for_bits(4)), "l.a": jnp.asarray(_gate_for_bits(8))}
+    got = float(bop.site_bop(s, g["l.w"], g["l.a"]))
+    assert got == 4 * 3 * 4 * 8
+
+
+def test_per_channel_inner_product():
+    """Paper formula: sum_o b_a[o] * sum_j b_W[j, o]."""
+    s = _site(fan_in=4, out=3)
+    bw = jnp.asarray([_gate_for_bits(b) for b in (2, 4, 8)])   # per out-channel
+    ba = jnp.asarray([_gate_for_bits(b) for b in (8, 8, 16)])
+    got = float(bop.site_bop(s, bw, ba))
+    want = 4 * (2 * 8 + 4 * 8 + 8 * 16)
+    assert got == want
+
+
+def test_per_weight_general_form():
+    s = _site(fan_in=2, out=2)
+    bw = jnp.asarray(
+        [[_gate_for_bits(2), _gate_for_bits(4)], [_gate_for_bits(8), _gate_for_bits(16)]]
+    )  # (in, out)
+    ba = jnp.asarray([_gate_for_bits(4), _gate_for_bits(8)])
+    got = float(bop.site_bop(s, bw, ba))
+    want = (2 + 8) * 4 + (4 + 16) * 8
+    assert got == want
+
+
+def test_positions_multiplier_conv():
+    s = _site(fan_in=9, out=8, positions=26 * 26)
+    g32 = jnp.asarray(_gate_for_bits(32))
+    got = float(bop.site_bop(s, g32, g32))
+    assert got == 9 * 8 * 26 * 26 * 32 * 32
+
+
+def test_stacked_per_tensor():
+    s = _site(fan_in=4, out=3, stack=2)
+    bw = jnp.asarray([_gate_for_bits(4), _gate_for_bits(8)])
+    ba = jnp.asarray([_gate_for_bits(8), _gate_for_bits(8)])
+    got = float(bop.site_bop(s, bw, ba))
+    want = 4 * 3 * (4 * 8 + 8 * 8)
+    assert got == want
+
+
+def test_stacked_per_channel():
+    s = _site(fan_in=4, out=2, stack=2)
+    bw = jnp.asarray([[_gate_for_bits(2), _gate_for_bits(4)],
+                      [_gate_for_bits(8), _gate_for_bits(8)]])  # (stack, out)
+    ba = jnp.asarray([[_gate_for_bits(4), _gate_for_bits(4)],
+                      [_gate_for_bits(16), _gate_for_bits(16)]])
+    got = float(bop.site_bop(s, bw, ba))
+    want = 4 * ((2 * 4 + 4 * 4) + (8 * 16 + 8 * 16))
+    assert got == want
+
+
+def test_moe_active_fraction():
+    s = _site(fan_in=8, out=8, frac=2 / 8)
+    g32 = jnp.asarray(_gate_for_bits(32))
+    got = float(bop.site_bop(s, g32, g32))
+    assert got == 8 * 8 * 32 * 32 * (2 / 8)
+
+
+def test_fp_output_site_excluded():
+    s = _site(act_q=False)
+    assert float(bop.site_bop(s, jnp.asarray(0.5), None)) == 0.0
+    assert bop.fp32_bop({"l": s}) == 0.0
+
+
+def test_rbop_lower_bound_is_2bit():
+    sites = {"a": _site(fan_in=10, out=10, name="a"), "b": _site(fan_in=20, out=5, name="b")}
+    g2 = {k + suf: jnp.asarray(_gate_for_bits(2)) for k in sites for suf in (".w", ".a")}
+    r = float(bop.rbop(sites, g2))
+    np.testing.assert_allclose(r, 4.0 / 1024.0, rtol=1e-6)
+    assert bop.min_bop(sites) == bop.fp32_bop(sites) * 4 / 1024
+
+
+def test_budget_from_rbop():
+    sites = {"a": _site(fan_in=10, out=10)}
+    assert bop.budget_from_rbop(sites, 0.004) == 0.004 * 100 * 1024

@@ -1,0 +1,209 @@
+"""Component-level oracle tests: SSD, RG-LRU, MoE, attention decode."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.sites import QuantContext
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssd as ssd_lib
+
+QC = lambda: QuantContext(mode="off")
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+class TestSSD:
+    cfg = get_smoke_config("mamba2-1.3b")
+
+    def _params(self, seed=0):
+        return ssd_lib.init_ssd(jax.random.PRNGKey(seed), self.cfg)
+
+    def test_chunked_matches_stepwise_reference(self):
+        p = self._params()
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, self.cfg.d_model),
+                              jnp.float32) * 0.5
+        y_ref, s_ref = ssd_lib.ssd_reference(p, x, self.cfg)
+        y, (_, s) = ssd_lib.ssd_chunked(QC(), p, x, self.cfg)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_state_carry_equals_joint(self):
+        """Processing [x1; x2] == processing x1 then x2 with carried state."""
+        p = self._params(2)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, self.cfg.d_model)) * 0.5
+        y_all, (cv_all, s_all) = ssd_lib.ssd_chunked(QC(), p, x, self.cfg)
+        y1, (cv1, s1) = ssd_lib.ssd_chunked(QC(), p, x[:, :8], self.cfg)
+        y2, (cv2, s2) = ssd_lib.ssd_chunked(
+            QC(), p, x[:, 8:], self.cfg, conv_state=cv1, ssm_state=s1)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1), np.float32),
+            np.asarray(y_all, np.float32), rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_decode_continues_prefill(self):
+        p = self._params(4)
+        x = jax.random.normal(jax.random.PRNGKey(5), (1, 17, self.cfg.d_model)) * 0.5
+        # reference: full 17-token reference run
+        y_ref, _ = ssd_lib.ssd_reference(p, x, self.cfg)
+        # prefill on 16 (chunk multiple), then one decode step
+        _, (cv, s) = ssd_lib.ssd_chunked(QC(), p, x[:, :16], self.cfg)
+        y_step, _ = ssd_lib.ssd_decode_step(QC(), p, x[:, 16:17], cv, s, self.cfg)
+        np.testing.assert_allclose(np.asarray(y_step, np.float32),
+                                   np.asarray(y_ref[:, 16:17], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+class TestRGLRU:
+    cfg = get_smoke_config("recurrentgemma-2b")
+
+    def _params(self, seed=0):
+        return rglru_lib.init_rglru(jax.random.PRNGKey(seed), self.cfg)
+
+    def test_scan_matches_stepwise(self):
+        p = self._params()
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, self.cfg.d_model)) * 0.5
+        y_all, (cv, h) = rglru_lib.rglru_forward(QC(), p, x, self.cfg)
+        cache = rglru_lib.init_rglru_cache(self.cfg, 2)
+        ys = []
+        cv_s, h_s = cache["conv"], cache["h"]
+        for t in range(12):
+            y, (cv_s, h_s) = rglru_lib.rglru_decode_step(
+                QC(), p, x[:, t : t + 1], cv_s, h_s, self.cfg)
+            ys.append(y)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate(ys, 1), np.float32),
+            np.asarray(y_all, np.float32), rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(np.asarray(h_s), np.asarray(h),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_decay_bounded(self):
+        """a_t in (0, 1): the recurrence is contractive."""
+        p = self._params(1)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, self.cfg.lru_width))
+        a, b = rglru_lib._gates(QC(), p, x)
+        assert float(jnp.min(a)) > 0.0
+        assert float(jnp.max(a)) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+class TestMoE:
+    cfg = get_smoke_config("mixtral-8x22b")
+
+    def _params(self, seed=0):
+        return moe_lib.init_moe(jax.random.PRNGKey(seed), self.cfg)
+
+    def test_capacity_matches_dense_with_big_capacity(self):
+        """With capacity >= group, no token drops: impls must agree."""
+        cfg = dataclasses.replace(self.cfg, capacity_factor=float(self.cfg.n_experts))
+        p = self._params()
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.5
+        y_dense = moe_lib.moe_ffn(QC(), p, x, cfg, impl="dense_all")
+        y_cap = moe_lib.moe_ffn(QC(), p, x, cfg, impl="capacity")
+        np.testing.assert_allclose(np.asarray(y_cap, np.float32),
+                                   np.asarray(y_dense, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_router_topk_weights_normalized(self):
+        p = self._params(2)
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, self.cfg.d_model))
+        w, idx = moe_lib._router(QC(), p, x, self.cfg)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+        assert int(idx.max()) < self.cfg.n_experts
+
+    def test_capacity_drops_overflow(self):
+        """Tiny capacity forces drops; output stays finite and bounded."""
+        cfg = dataclasses.replace(self.cfg, capacity_factor=0.25)
+        p = self._params(4)
+        x = jax.random.normal(jax.random.PRNGKey(5), (1, 32, cfg.d_model)) * 0.5
+        y = moe_lib.moe_ffn(QC(), p, x, cfg, impl="capacity")
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# Attention decode vs train consistency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("tinyllama-1.1b", "global"),
+    ("gemma2-2b", "local"),
+    ("recurrentgemma-2b", "local"),   # MQA kv=1
+    ("musicgen-large", "global"),     # MHA kv=H
+])
+def test_attention_decode_matches_train(arch, kind):
+    cfg = get_smoke_config(arch)
+    p = attn.init_attn(jax.random.PRNGKey(0), cfg)
+    s = 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_full, (k, v) = attn.attention_train(QC(), p, x, cfg, kind)
+
+    cache = attn.init_attn_cache(cfg, kind, 2, max_seq=16, dtype=jnp.float32)
+    ys = []
+    for t in range(s):
+        y, cache = attn.attention_decode(
+            QC(), p, x[:, t : t + 1], cache, jnp.asarray(t), cfg, kind)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec, np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=4e-2, atol=4e-2)
+
+
+def test_local_attention_masks_beyond_window():
+    """A token > window away must not influence the output."""
+    cfg = get_smoke_config("mixtral-8x22b")  # window=8
+    p = attn.init_attn(jax.random.PRNGKey(0), cfg)
+    s = 12
+    x1 = jax.random.normal(jax.random.PRNGKey(1), (1, s, cfg.d_model)) * 0.5
+    x2 = x1.at[:, 0].set(x1[:, 0] + 10.0)  # perturb a token outside the window
+    y1, _ = attn.attention_train(QC(), p, x1, cfg, "local")
+    y2, _ = attn.attention_train(QC(), p, x2, cfg, "local")
+    # last position: distance 11 >= window 8 -> unaffected
+    np.testing.assert_allclose(np.asarray(y1[:, -1], np.float32),
+                               np.asarray(y2[:, -1], np.float32),
+                               rtol=1e-3, atol=1e-3)
+    # position 3: distance 3 < 8 -> affected
+    assert float(jnp.abs(y1[:, 3] - y2[:, 3]).max()) > 1e-3
+
+
+def test_ring_buffer_cache_long_decode():
+    """Decode far past the window: ring cache must equal full-cache result."""
+    cfg = get_smoke_config("mixtral-8x22b")  # window=8
+    p = attn.init_attn(jax.random.PRNGKey(0), cfg)
+    s = 24
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, s, cfg.d_model)) * 0.5
+    y_full, _ = attn.attention_train(QC(), p, x, cfg, "local")
+    cache = attn.init_attn_cache(cfg, "local", 1, max_seq=s, dtype=jnp.float32)
+    assert cache["k"].shape[1] == cfg.window  # ring: window slots only
+    ys = []
+    for t in range(s):
+        y, cache = attn.attention_decode(
+            QC(), p, x[:, t : t + 1], cache, jnp.asarray(t), cfg, "local")
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1), np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=4e-2, atol=4e-2)

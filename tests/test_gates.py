@@ -1,0 +1,93 @@
+"""Tests for gate variables: T / G_b (Eq. 4) and the residual form (Eq. 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.gates import (
+    GATE_INIT,
+    GATE_MIN,
+    clamp_gate,
+    gate_fn,
+    gate_to_bits,
+    gated_fake_quant,
+    residual_fake_quant,
+    transform,
+)
+from repro.core.quantizer import quantize
+
+
+def test_transform_table():
+    """Spot-check T(g) against the paper's Eq. 4 table."""
+    g = jnp.asarray([-1.0, 0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5, 5.5])
+    expect = [0, 0, 2, 2, 4, 4, 8, 8, 16, 16, 32, 32]
+    np.testing.assert_array_equal(np.asarray(transform(g)), expect)
+
+
+def test_paper_example_g_1_5():
+    """Paper: g = 1.5 -> G2 = G4 = 1, G8 = G16 = G32 = 0."""
+    g = jnp.asarray(1.5)
+    assert float(gate_fn(g, 2)) == 1.0
+    assert float(gate_fn(g, 4)) == 1.0
+    assert float(gate_fn(g, 8)) == 0.0
+    assert float(gate_fn(g, 16)) == 0.0
+    assert float(gate_fn(g, 32)) == 0.0
+
+
+def test_gate_init_is_32bit():
+    assert float(gate_to_bits(jnp.asarray(GATE_INIT))) == 32.0
+
+
+def test_clamp_no_pruning():
+    assert float(gate_to_bits(clamp_gate(jnp.asarray(-3.0)))) == 2.0
+    assert float(clamp_gate(jnp.asarray(0.1))) == GATE_MIN
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    g=st.floats(-2.0, 6.0),
+    beta=st.floats(0.2, 4.0),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_residual_equals_direct(g, beta, signed, seed):
+    """Paper Eq. 3 (residual chain) telescopes to Q(x, T(g)) exactly."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32) * beta)
+    gv = jnp.asarray(g, jnp.float32)
+    r = residual_fake_quant(x, gv, jnp.asarray(beta), signed)
+    d = gated_fake_quant(x, gv, jnp.asarray(beta), signed)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(d), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("g,bits", [(0.7, 2), (1.5, 4), (2.5, 8), (3.5, 16), (5.5, 32)])
+def test_gated_matches_fixed_bits(g, bits):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    got = gated_fake_quant(x, jnp.asarray(g), jnp.asarray(1.0), True)
+    want = quantize(x, bits, jnp.asarray(1.0), True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_gate_has_no_gradient():
+    """The gate's true gradient is zero (hence the direction machinery)."""
+
+    def f(g):
+        x = jnp.linspace(-1, 1, 32)
+        return gated_fake_quant(x, g, jnp.asarray(1.0), True).sum()
+
+    g = jax.grad(f)(jnp.asarray(1.5))
+    assert float(g) == 0.0
+
+
+def test_per_element_gates():
+    x = jnp.full((4,), 0.3, jnp.float32)
+    g = jnp.asarray([0.7, 1.5, 2.5, 5.5])
+    q = np.asarray(gated_fake_quant(x, g, jnp.asarray(1.0), True))
+    w2 = float(quantize(jnp.asarray(0.3), 2, 1.0, True))
+    w4 = float(quantize(jnp.asarray(0.3), 4, 1.0, True))
+    w8 = float(quantize(jnp.asarray(0.3), 8, 1.0, True))
+    np.testing.assert_allclose(q, [w2, w4, w8, 0.3], atol=1e-6)

@@ -1,0 +1,83 @@
+"""Adam (fp32 + 8-bit block-quantized states) tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adam import AdamConfig, adam, apply_updates, sgd
+
+
+def _quadratic_problem(seed=0, dim=32):
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+
+    def loss(p):
+        return jnp.sum((p["x"] - target) ** 2) + 0.5 * jnp.sum((p["y"] - 1.0) ** 2)
+
+    params = {"x": jnp.zeros((dim,)), "y": jnp.zeros((7, 3))}
+    return loss, params, target
+
+
+@pytest.mark.parametrize("bits", [32, 8])
+def test_adam_converges(bits):
+    loss, params, target = _quadratic_problem()
+    init, update = adam(AdamConfig(lr=0.05, state_bits=bits))
+    state = init(params)
+
+    @jax.jit
+    def step(params, state):
+        l, g = jax.value_and_grad(loss)(params)
+        upd, state = update(g, state, params)
+        return apply_updates(params, upd), state, l
+
+    for _ in range(400):
+        params, state, l = step(params, state)
+    assert float(l) < 1e-2
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(target), atol=0.05)
+
+
+def test_adam8_close_to_fp32_trajectory():
+    """8-bit moment quantization tracks the fp32 update path.
+
+    Requantization error compounds, so we assert optimizer-level closeness
+    (same loss decrease, bounded parameter gap) rather than lockstep.
+    """
+    loss, params, _ = _quadratic_problem(seed=1)
+    traj, losses = {}, {}
+    for bits in (32, 8):
+        p = jax.tree.map(jnp.copy, params)
+        init, update = adam(AdamConfig(lr=0.01, state_bits=bits))
+        st = init(p)
+        for _ in range(50):
+            l, g = jax.value_and_grad(loss)(p)
+            upd, st = update(g, st, p)
+            p = apply_updates(p, upd)
+        traj[bits], losses[bits] = p, float(l)
+    d = jnp.max(jnp.abs(traj[32]["x"] - traj[8]["x"]))
+    assert float(d) < 0.15
+    assert abs(losses[8] - losses[32]) / max(losses[32], 1e-6) < 0.10
+
+
+def test_adam8_state_memory_is_int8():
+    _, params, _ = _quadratic_problem()
+    init, _ = adam(AdamConfig(state_bits=8))
+    st = init(params)
+    assert st.m["x"]["codes"].dtype == jnp.int8
+    assert st.v["y"]["codes"].dtype == jnp.int8
+
+
+def test_grad_clip():
+    init, update = adam(AdamConfig(lr=1.0, grad_clip_norm=1.0))
+    params = {"x": jnp.zeros((4,))}
+    st = init(params)
+    big = {"x": jnp.full((4,), 100.0)}
+    upd, st = update(big, st, params)
+    # after clipping to norm 1, adam normalizes again; update must be finite
+    assert np.isfinite(np.asarray(upd["x"])).all()
+
+
+def test_sgd_is_plain():
+    init, update = sgd(0.1)
+    upd, _ = update({"g": jnp.asarray(2.0)}, init(None), None)
+    assert float(upd["g"]) == pytest.approx(-0.2)

@@ -1,0 +1,106 @@
+"""Fast end-to-end tests of the CGMQ pipeline on LeNet + synthetic digits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import CGMQConfig
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.sites import PER_TENSOR, PER_WEIGHT, QuantConfig
+from repro.data.synthetic import digits, lm_tokens
+from repro.models import lenet
+
+
+@pytest.fixture(scope="module")
+def small_digits():
+    xtr, ytr = digits(600, split="train")
+    xte, yte = digits(200, split="test")
+    return (
+        (jnp.asarray(xtr), jnp.asarray(ytr)),
+        (jnp.asarray(xte), jnp.asarray(yte)),
+    )
+
+
+def _run(small_digits, granularity, direction="dir1", budget=0.02, epochs=25):
+    train, test = small_digits
+    params = lenet.init_params(jax.random.PRNGKey(0))
+    return run_pipeline(
+        lenet.forward, lenet.weight_lookup, params, train, test,
+        QuantConfig(granularity=granularity),
+        CGMQConfig(budget_rbop=budget, direction=direction, gate_lr=0.01),
+        PipelineConfig(pretrain_epochs=6, range_epochs=2, cgmq_epochs=epochs,
+                       eval_every=100, batch_size=64, log=lambda s: None),
+    )
+
+
+@pytest.mark.slow
+def test_pipeline_reaches_budget_per_tensor(small_digits):
+    res = _run(small_digits, PER_TENSOR)
+    assert res.satisfied, f"rbop={res.final_rbop}"
+    assert res.final_rbop <= 0.02 + 1e-6
+    # quantized accuracy stays within reach of the fp32 baseline
+    assert res.final_test_acc >= res.fp32_test_acc - 0.15
+
+
+@pytest.mark.slow
+def test_pipeline_reaches_budget_per_weight(small_digits):
+    res = _run(small_digits, PER_WEIGHT, direction="dir3", epochs=40)
+    assert res.satisfied, f"rbop={res.final_rbop}"
+
+
+def test_lenet_fp32_forward_shapes(small_digits):
+    (xtr, _), _ = small_digits
+    from repro.core.sites import QuantContext
+
+    params = lenet.init_params(jax.random.PRNGKey(1))
+    out = lenet.forward(QuantContext(mode="off"), params, xtr[:8])
+    assert out.shape == (8, 10)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_lenet_site_macs():
+    """Hand-checked MAC counts for the classic LeNet-5."""
+    from repro.core.sites import QuantConfig, collect_sites
+
+    params = lenet.init_params(jax.random.PRNGKey(0))
+    sites = collect_sites(
+        lenet.forward, params, jax.ShapeDtypeStruct((4, 28, 28, 1), jnp.float32),
+        cfg=QuantConfig(),
+    )
+    macs = {k: s.macs_per_token for k, s in sites.items()}
+    assert macs["conv1"] == 5 * 5 * 1 * 6 * 28 * 28
+    assert macs["conv2"] == 5 * 5 * 6 * 16 * 10 * 10
+    assert macs["fc1"] == 400 * 120
+    assert macs["fc3"] == 84 * 10
+    assert not sites["fc3"].act_quantized
+
+
+def test_synthetic_digits_learnable_and_deterministic():
+    x1, y1 = digits(64, split="train", seed=3)
+    x2, y2 = digits(64, split="train", seed=3)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (64, 28, 28, 1)
+    assert set(np.unique(y1)) == set(range(10))
+    # classes must differ visually (mean image distance > noise floor)
+    m0 = x1[y1 == 0].mean(axis=0)
+    m1 = x1[y1 == 1].mean(axis=0)
+    assert np.abs(m0 - m1).mean() > 0.05
+
+
+def test_lm_tokens_structure():
+    toks = lm_tokens(4, 128, vocab=97, seed=1, noise=0.0)
+    assert toks.shape == (4, 129)
+    # noiseless stream is exactly affine-predictable
+    a_next = toks[:, 1:]
+    # recover (a, b) from the first two transitions and verify globally
+    x0, x1, x2 = int(toks[0, 0]), int(toks[0, 1]), int(toks[0, 2])
+    # solve x1 = a*x0+b, x2 = a*x1+b mod 97
+    for a in range(97):
+        b = (x1 - a * x0) % 97
+        if (a * x1 + b) % 97 == x2:
+            pred = (a * toks[:, :-1] + b) % 97
+            if np.array_equal(pred, a_next):
+                return
+    raise AssertionError("no affine rule found")

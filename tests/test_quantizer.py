@@ -1,0 +1,135 @@
+"""Unit + property tests for the Eq. 1 quantizer and its STE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantizer import fake_quant, quantize, quantize_to_int
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _grid(bits, beta, signed):
+    n = 2**bits - 1
+    alpha = -beta if signed else 0.0
+    s = (beta - alpha) / n
+    return alpha + s * np.arange(n + 1)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+@pytest.mark.parametrize("signed", [True, False])
+def test_quantize_on_grid(bits, signed):
+    """Quantized values land exactly on the b-bit uniform grid."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(512,)).astype(np.float32) * 2.0
+    beta = 1.5
+    q = np.asarray(quantize(jnp.asarray(x), bits, beta, signed))
+    grid = _grid(bits, beta, signed)
+    dist = np.abs(q[:, None] - grid[None, :]).min(axis=1)
+    assert dist.max() < 1e-5
+
+
+@pytest.mark.parametrize("signed", [True, False])
+def test_quantize_idempotent(signed):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q1 = quantize(x, 4, 1.0, signed)
+    q2 = quantize(q1, 4, 1.0, signed)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+def test_quantize_clips_to_range():
+    x = jnp.asarray([-10.0, 10.0], jnp.float32)
+    q = np.asarray(quantize(x, 8, 2.0, True))
+    assert q[0] == pytest.approx(-2.0, abs=1e-6)
+    assert q[1] == pytest.approx(2.0, abs=1e-6)
+
+
+def test_bits_32_passthrough():
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(64,)), jnp.float32)
+    q = quantize(x, 32, 1.0, True)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+
+
+def test_monotone_error_in_bits():
+    """More bits never increases quantization error (for fixed range)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(2048,)).astype(np.float32))
+    errs = []
+    for b in (2, 4, 8, 16):
+        q = quantize(x, b, 1.0, True)
+        errs.append(float(jnp.abs(q - x).mean()))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_per_element_bits():
+    """`bits` may be an array: each element quantized at its own width."""
+    x = jnp.asarray([0.333, 0.333, 0.333, 0.333], jnp.float32)
+    bits = jnp.asarray([2.0, 4.0, 8.0, 32.0])
+    q = np.asarray(quantize(x, bits, 1.0, False))
+    for i, b in enumerate([2, 4, 8]):
+        grid = _grid(b, 1.0, False)
+        assert np.abs(q[i] - grid).min() < 1e-6
+    assert q[3] == np.float32(0.333)
+
+
+def test_ste_gradient_masked_by_range():
+    f = lambda x: fake_quant(x, jnp.asarray(4.0), jnp.asarray(1.0), True).sum()
+    g = jax.grad(f)(jnp.asarray([-2.0, -0.5, 0.5, 2.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+
+
+def test_range_gradient_signs():
+    """LSQ-style beta gradient: +1 above range, -1 below (signed)."""
+
+    def f(beta):
+        x = jnp.asarray([5.0, -5.0, 0.25], jnp.float32)
+        return (fake_quant(x, jnp.asarray(4.0), beta, True) * jnp.asarray([1.0, 1.0, 1.0])).sum()
+
+    g = jax.grad(f)(jnp.asarray(1.0))
+    # top-clip contributes +1, bottom-clip -1 (cancel); in-range term small.
+    assert abs(float(g)) < 1.0
+
+    def f_top(beta):
+        return fake_quant(jnp.asarray([5.0], jnp.float32), jnp.asarray(4.0), beta, True).sum()
+
+    assert float(jax.grad(f_top)(jnp.asarray(1.0))) == pytest.approx(1.0)
+
+
+def test_range_gradient_unsigned_bottom_zero():
+    def f(beta):
+        return fake_quant(jnp.asarray([-3.0], jnp.float32), jnp.asarray(4.0), beta, False).sum()
+
+    assert float(jax.grad(f)(jnp.asarray(1.0))) == pytest.approx(0.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8, 16]),
+    beta=st.floats(0.1, 10.0),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_quant_error_bound(bits, beta, signed, seed):
+    """|Q(x) - clip(x)| <= step/2 for every element (round-to-nearest)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(128,)).astype(np.float32) * beta)
+    q = quantize(x, bits, beta, signed)
+    alpha = -beta if signed else 0.0
+    step = (beta - alpha) / (2**bits - 1)
+    xc = jnp.clip(x, alpha, beta)
+    assert float(jnp.abs(q - xc).max()) <= step / 2 + 1e-5
+
+
+def test_quantize_to_int_roundtrip():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    beta = jnp.max(jnp.abs(x))
+    codes, scale, bias = quantize_to_int(x, 8, beta, True)
+    assert codes.dtype == jnp.int8
+    deq = codes.astype(jnp.float32) * scale + bias
+    q = quantize(x, 8, beta, True)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(q), atol=1e-4)

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the CGMQ system (fast CI versions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import bop as bop_lib
+from repro.launch import steps as steps_lib
+
+
+def test_llm_cgmq_training_reaches_and_certifies_budget():
+    """The full production train step drives a small LM under its BOP budget
+    and certifies a satisfying snapshot (paper §3 at LLM scale)."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    shape = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+    recipe = steps_lib.make_recipe(cfg, shape, budget_rbop=0.0625,
+                                   check_every=5)
+    state = steps_lib.init_train_state(recipe, jax.random.PRNGKey(0))
+    step = jax.jit(steps_lib.make_train_step(recipe, None),
+                   donate_argnums=(0,))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                               jnp.int32),
+    }
+    losses = []
+    for _ in range(60):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    # the guarantee is about the certified export: gates oscillate around
+    # the boundary once reached (Sat lets them grow back), but a satisfying
+    # snapshot must exist and must meet the budget.
+    from repro.core import controller as ctrl
+
+    assert bool(state.cgmq.best_valid)
+    assert ctrl.guarantee_satisfied(state.cgmq, recipe.sites,
+                                    recipe.budget_bop)
+
+
+def test_decode_after_cgmq_training_is_finite():
+    """Train a few steps, then serve with the same quantized state."""
+    from repro.core.sites import QuantContext, merge_ranges
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("gemma2-2b")
+    shape = ShapeConfig("t", seq_len=16, global_batch=2, kind="train")
+    recipe = steps_lib.make_recipe(cfg, shape, check_every=3)
+    state = steps_lib.init_train_state(recipe, jax.random.PRNGKey(1))
+    step = jax.jit(steps_lib.make_train_step(recipe, None))
+    rng = np.random.default_rng(1)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                               jnp.int32),
+    }
+    for _ in range(5):
+        state, _ = step(state, batch)
+
+    qc = QuantContext(
+        mode="train", cfg=recipe.qcfg, gates=state.cgmq.gates,
+        ranges=merge_ranges(state.betas, recipe.signed), probes={},
+    )
+    cache = tfm.init_cache(cfg, 2, max_seq=8)
+    logits, cache = tfm.decode_step(
+        qc, state.params, cache, jnp.asarray([1, 2], jnp.int32), cfg)
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
