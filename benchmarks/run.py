@@ -1,11 +1,15 @@
 """Benchmark harness entry point — one function per paper table + kernel
-micro-benchmarks + the roofline summary.
+micro-benchmarks + serving throughput + the roofline summary.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
-metric) and writes full tables under artifacts/tables/.
+metric) and writes full tables under artifacts/tables/. With ``--json``,
+serving throughput (prefill/decode tok/s, time-to-first-token, prefill
+forward counts vs the seed scan-of-decode-steps) and the kernel micro-bench
+numbers are written to ``BENCH_serving.json`` so the perf trajectory is
+tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--tier smoke|quick|paper]
-                                            [--skip-tables]
+                                            [--skip-tables] [--json [PATH]]
 """
 
 from __future__ import annotations
@@ -87,6 +91,7 @@ def bench_fake_quant():
     t_u = _time(unfused, x)
     print(f"kernel_fake_quant_fused,{t_f:.0f},speedup_vs_residual="
           f"{t_u/t_f:.2f}x")
+    return {"fused_us": t_f, "residual_us": t_u, "speedup_x": t_u / t_f}
 
 
 def bench_quant_matmul():
@@ -104,6 +109,7 @@ def bench_quant_matmul():
     t_m = _time(mm, x)
     print(f"kernel_quant_matmul,{t_q:.0f},weight_bytes_ratio=0.25"
           f";fp32_ref_us={t_m:.0f}")
+    return {"int8_ref_us": t_q, "fp32_us": t_m, "weight_bytes_ratio": 0.25}
 
 
 def bench_flash_attention():
@@ -121,6 +127,87 @@ def bench_flash_attention():
     want = attention_ref(q, k, v)
     err = float(jnp.abs(got - want).max())
     print(f"kernel_flash_attention,{t_ref:.0f},interpret_max_err={err:.2e}")
+    return {"dense_ref_us": t_ref, "interpret_max_err": err}
+
+
+# ---------------------------------------------------------------------------
+# Serving throughput (prefill / decode / TTFT)
+# ---------------------------------------------------------------------------
+
+
+def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
+                 max_new=16, nreq=8):
+    """One measured engine pass. Compiles on a throwaway request first so the
+    numbers reflect steady-state serving, not jit tracing."""
+    from repro.serving.engine import Request, ServingEngine
+
+    eng = ServingEngine(cfg, params, slots=slots, max_seq=64,
+                        quant_state=quant_state)
+    rng = np.random.default_rng(7)
+    warm = Request(rid=-1, prompt=rng.integers(0, cfg.vocab_size, (plen,)),
+                   max_new=2)
+    eng.submit(warm)
+    eng.run_to_completion()
+    eng.finished.clear()
+    eng.stats = {k: 0 if isinstance(v, int) else 0.0
+                 for k, v in eng.stats.items()}
+
+    t0 = time.perf_counter()
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, (plen,)),
+                       max_new=max_new))
+    eng._admit()
+    ttft = time.perf_counter() - t0  # submit -> first token (prefill)
+    for i in range(1, nreq):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, (plen,)),
+                           max_new=max_new))
+    fin = eng.run_to_completion()
+    assert len(fin) == nreq
+    st = eng.stats
+    decode_tokens = st["generated_tokens"] - st["prefill_forwards"]
+    return {
+        "slots": slots,
+        "requests": nreq,
+        "prompt_len": plen,
+        "max_new": max_new,
+        "ttft_s": ttft,
+        "prefill_tok_s": st["prompt_tokens"] / max(st["prefill_time_s"], 1e-9),
+        "decode_tok_s": decode_tokens / max(st["decode_time_s"], 1e-9),
+        "prefill_forwards": st["prefill_forwards"],
+        "seed_equiv_forwards": st["seed_equiv_forwards"],
+        # seed prefill ran one decode forward per prompt token, each `slots`
+        # wide; the batched path runs ONE single-row forward per admission.
+        "model_forward_reduction_x":
+            st["seed_equiv_forwards"] / max(st["prefill_forwards"], 1),
+        "slot_forward_reduction_x":
+            st["seed_equiv_forwards"] * slots / max(st["prefill_forwards"], 1),
+        "int8_sites": len(eng.qweights),
+    }
+
+
+def bench_serving(tier: str):
+    """Serving engine throughput on the smoke LM: fp32 and int8 paths."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving.engine import make_uniform_quant_state
+
+    nreq = {"smoke": 8, "quick": 16, "paper": 32}.get(tier, 8)
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+
+    t0 = time.time()
+    fp32 = _serving_run(cfg, params, nreq=nreq)
+    print(f"serving_fp32,{fp32['decode_tok_s']:.0f},ttft_ms="
+          f"{fp32['ttft_s']*1e3:.1f};prefill_tok_s="
+          f"{fp32['prefill_tok_s']:.0f};forward_reduction="
+          f"{fp32['model_forward_reduction_x']:.1f}x")
+
+    qs = make_uniform_quant_state(cfg, params)  # T(2.2) = 8 bits
+    int8 = _serving_run(cfg, params, quant_state=qs, nreq=nreq)
+    print(f"serving_int8,{int8['decode_tok_s']:.0f},ttft_ms="
+          f"{int8['ttft_s']*1e3:.1f};int8_sites={int8['int8_sites']}")
+    print(f"serving_total,{(time.time()-t0)*1e6:.0f},requests={2*nreq}")
+    return {"fp32": fp32, "int8": int8}
 
 
 # ---------------------------------------------------------------------------
@@ -152,17 +239,39 @@ def main() -> None:
     ap.add_argument("--tier", default="smoke",
                     choices=["smoke", "quick", "paper"])
     ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_serving.json",
+                    default=None, metavar="PATH",
+                    help="write serving + kernel numbers to PATH "
+                         "(default BENCH_serving.json)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    bench_fake_quant()
-    bench_quant_matmul()
-    bench_flash_attention()
+    kernels = {
+        "fake_quant": bench_fake_quant(),
+        "quant_matmul": bench_quant_matmul(),
+        "flash_attention": bench_flash_attention(),
+    }
+    serving = bench_serving(args.tier)
     if not args.skip_tables:
         bench_table1(args.tier)
         bench_table_bounds(args.tier, "layer", 2)
         bench_table_bounds(args.tier, "indiv", 3)
     bench_roofline()
+
+    if args.json:
+        import json
+
+        payload = {
+            "schema": 1,
+            "tier": args.tier,
+            "backend": jax.default_backend(),
+            "serving": serving,
+            "kernels": kernels,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Serving example: batched requests against a (smoke) LM with the
-continuous-batching engine, plus the CGMQ int-code export path.
+continuous-batching engine — batched prefill, device-resident generation
+loop, and the CGMQ int8 fused-dequant decode path (DESIGN.md §8).
 
     PYTHONPATH=src python examples/serve_quantized.py --arch tinyllama-1.1b
+    PYTHONPATH=src python examples/serve_quantized.py --fp32   # skip int8
 """
 
 import argparse
@@ -17,7 +19,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import transformer as tfm
-from repro.serving.engine import Request, ServingEngine, export_int_codes
+from repro.serving.engine import (Request, ServingEngine, export_int_codes,
+                                  make_uniform_quant_state)
 
 
 def main():
@@ -26,11 +29,18 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--fp32", action="store_true",
+                    help="serve fp32 instead of the int8 export")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128)
+    qs = None if args.fp32 else make_uniform_quant_state(cfg, params)
+    eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
+                        quant_state=qs)
+    if eng.qweights:
+        bits = sorted(set(eng.int8_report.values()))
+        print(f"serving int8 export: {len(eng.qweights)} sites at {bits} bits")
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -42,13 +52,23 @@ def main():
     finished = eng.run_to_completion()
     dt = time.time() - t0
     total_new = sum(len(r.output) for r in finished)
+    st = eng.stats
     print(f"served {len(finished)} requests / {total_new} tokens "
           f"in {dt:.1f}s with {args.slots} slots")
+    print(f"  batched prefill: {st['prefill_forwards']} forwards for "
+          f"{st['prompt_tokens']} prompt tokens (seed scan-of-decode-steps "
+          f"would have run {st['seed_equiv_forwards']} x {args.slots}-wide)")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  req {r.rid}: {list(r.output)}")
 
-    # CGMQ export path: int8 codes for the serving GEMM
-    w = params["blocks"][0]["attn"]["wq"][0]
+    # single-tensor export path: int8 codes for one weight
+    b0 = params["blocks"][0]
+    if "attn" in b0:
+        w = b0["attn"]["wq"][0]
+    elif "ssd" in b0:
+        w = b0["ssd"]["in_proj"][0]
+    else:
+        w = b0["rglru"]["wx"][0]
     q = export_int_codes(w, gate=jnp.asarray(2.5),
                          beta=jnp.max(jnp.abs(w)), signed=True)
     deq_err = float(jnp.abs(

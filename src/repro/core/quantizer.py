@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Bit-width levels considered by the paper (B in Eq. 2, plus the base 2).
 LEVELS = (2, 4, 8, 16, 32)
@@ -133,22 +134,31 @@ fake_quant.defvjp(_fq_fwd, _fq_bwd)
 
 
 def quantize_to_int(
-    x: jnp.ndarray, bits: int, beta: jnp.ndarray, signed: bool
+    x: jnp.ndarray, bits, beta: jnp.ndarray, signed: bool
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Export path: integer codes + affine dequantization terms.
 
-    Returns ``(codes, scale, bias)`` with ``x ≈ codes * scale + bias``; codes
-    are centered so ``bits <= 8`` fits int8 (range ``[-2^(b-1), 2^(b-1)-1]``
-    covers the ``2^b - 1``-step grid after centering). Used when freezing a
+    Returns ``(codes, scale, bias)`` with ``codes * scale + bias`` exactly
+    equal to ``quantize(x, bits, beta, signed)`` (same grid, so the int
+    serving path reproduces the fake-quant forward bit-for-bit in fp32).
+    Codes are centered so ``bits <= 8`` fits int8 (range
+    ``[-2^(b-1), 2^(b-1)-1]`` covers the ``2^b - 1``-step grid after
+    centering). ``bits`` and ``beta`` may be arrays broadcasting against
+    ``x`` (per-channel / per-layer-stacked mixed precision); the code dtype
+    is int8 iff every element is <= 8 bits. Used when freezing a
     CGMQ-trained model for deployment (serving engine / quant_matmul kernel).
     """
-    beta = jnp.maximum(beta, 1e-8)
+    beta = jnp.maximum(jnp.asarray(beta, jnp.float32), 1e-8)
     alpha = -beta if signed else jnp.zeros_like(beta)
-    n = float(2**bits - 1)
+    bits_f = jnp.asarray(bits, jnp.float32)
+    n = jnp.exp2(bits_f) - 1.0
     s = (beta - alpha) / n
+    x = jnp.asarray(x, jnp.float32)
     raw = jnp.round((jnp.clip(x, alpha, beta) - alpha) / s)  # in [0, 2^b-1]
-    offset = float(2 ** (bits - 1))
+    offset = jnp.exp2(bits_f - 1.0)
     codes = raw - offset  # in [-2^(b-1), 2^(b-1)-1]
-    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    max_bits = int(np.asarray(jax.device_get(bits_f)).max()) if not isinstance(
+        bits, int) else bits
+    dtype = jnp.int8 if max_bits <= 8 else jnp.int32
     bias = alpha + offset * s
     return codes.astype(dtype), s, bias

@@ -8,7 +8,7 @@ activation -> Q(a)``). Models never touch gates directly; they call::
     a_q      = qc.act(name, a)                # quantize an output activation
     qc.register_matmul(name, w_shape, positions=..., stack=k, active_frac=f)
 
-``QuantContext`` operates in one of four modes:
+``QuantContext`` operates in one of six modes:
 
   off        -- identity; used for FP32 pretraining and baselines.
   collect    -- abstract tracing (``jax.eval_shape``): records site metadata
@@ -19,6 +19,18 @@ activation -> Q(a)``). Models never touch gates directly; they call::
                 per-site activation statistics needed by the CGMQ directions
                 (paper §2.3) and injects zero-valued "probe" parameters whose
                 gradients equal the batch-summed activation gradients.
+  export     -- weight-capture pass: ``weight()`` records the full tensor per
+                site name in ``weight_stats`` (stacked along the scan axis by
+                the existing stats plumbing) and everything else is identity.
+                Used by ``serving.engine.export_int_model`` to build the
+                site-name -> weight mapping without a hand-maintained table.
+  serve      -- deployment forward (DESIGN.md §8): matmul sites with an
+                int-code export in ``qweights`` dispatch the fused-dequant
+                GEMM (``layers.qmatmul`` consults ``serving_weight``);
+                remaining sites fall back to fake quantization at the learned
+                bit-width. Activations are fake-quantized exactly as in
+                ``train`` but with no stats / probes, so serve logits match
+                the train-mode fake-quant reference.
 
 The probe trick: ``a + probe`` with ``probe = 0`` of the gate-group shape makes
 ``dL/dprobe = sum over batch (and group) of dL/da`` — exactly the
@@ -100,13 +112,20 @@ class QuantContext:
         gates: dict[str, jnp.ndarray] | None = None,
         ranges: dict[str, Any] | None = None,
         probes: dict[str, jnp.ndarray] | None = None,
+        qweights: dict[str, Any] | None = None,
+        matmul_impl: str = "ref",
     ):
-        assert mode in ("off", "collect", "calibrate", "train")
+        assert mode in ("off", "collect", "calibrate", "train", "export",
+                        "serve")
+        assert matmul_impl in ("ref", "pallas", "pallas_interpret")
         self.mode = mode
         self.cfg = cfg or QuantConfig()
         self.gates = gates or {}
         self.ranges = ranges or {}
         self.probes = probes or {}
+        # serve mode: site name -> {codes, scale, bias, bits} int-code export
+        self.qweights = qweights or {}
+        self.matmul_impl = matmul_impl
         # Outputs populated during tracing:
         self.sites: dict[str, SiteInfo] = {}
         self.act_stats: dict[str, dict[str, jnp.ndarray]] = {}
@@ -116,7 +135,8 @@ class QuantContext:
         self._prefix: list[str] = []
 
     # ---- naming / scan support -------------------------------------------
-    def child(self, gates=None, ranges=None, probes=None) -> "QuantContext":
+    def child(self, gates=None, ranges=None, probes=None,
+              qweights=None) -> "QuantContext":
         """Sub-context for a ``lax.scan`` body with per-layer slices.
 
         The body must return ``(child.act_stats, child.weight_stats)`` as scan
@@ -128,6 +148,8 @@ class QuantContext:
             gates=self.gates if gates is None else gates,
             ranges=self.ranges if ranges is None else ranges,
             probes=self.probes if probes is None else probes,
+            qweights=self.qweights if qweights is None else qweights,
+            matmul_impl=self.matmul_impl,
         )
         c._prefix = list(self._prefix)
         c._stack = self._stack
@@ -182,7 +204,7 @@ class QuantContext:
         a_signed: bool = True,
     ) -> str:
         full = self._full(name)
-        if self.mode == "collect" and full not in self.sites:
+        if self.mode in ("collect", "export") and full not in self.sites:
             self.sites[full] = SiteInfo(
                 name=full,
                 weight_shape=tuple(int(d) for d in weight_shape),
@@ -198,14 +220,30 @@ class QuantContext:
         return full
 
     # ---- quantization entry points -----------------------------------------
+    def serving_weight(self, name: str):
+        """Int-code export for this site, or None (serve mode only)."""
+        if self.mode != "serve":
+            return None
+        return self.qweights.get(self._full(name) + ".w")
+
     def weight(self, name: str, w: jnp.ndarray) -> jnp.ndarray:
         full = self._full(name)
+        if self.mode == "export":
+            # Capture pass: record the full tensor under its site name; the
+            # scan-stats plumbing stacks per-layer slices back to (R, ...).
+            self.weight_stats[full + ".w"] = w
+            return w
         if self.mode in ("off", "collect", "calibrate") or not self.cfg.enabled:
             return w
         key = full + ".w"
         g = self.gates[key]
         beta = self.ranges[key]["beta"]
         signed = self.ranges[key]["signed"]
+        if self.mode == "serve":
+            # Fallback for sites without an int-code export (per-weight
+            # granularity, >8-bit, MoE/conv shapes): fake-quant at the
+            # learned bit-width, no stats or probes.
+            return self._fq(w, g, beta, signed)
         # Group-reduced |w| for dir_2/dir_3 (paper §2.3).
         self.weight_stats[key] = self._w_group_stat(w, g)
         # Probe param: dL/dprobe == (group-summed) dL/dw through the STE.
@@ -219,10 +257,17 @@ class QuantContext:
         """Quantize an output activation; records stats per mode."""
         full = self._full(name)
         key = full + ".a"
-        if self.mode == "off" or not self.cfg.enabled or not self.cfg.quantize_acts:
+        if self.mode in ("off", "export") or not self.cfg.enabled \
+                or not self.cfg.quantize_acts:
             return a
         if self.mode == "collect":
             return a
+        if self.mode == "serve":
+            g = self.gates[key]
+            beta = self.ranges[key]["beta"]
+            signed = self.ranges[key]["signed"]
+            return self._fq(a, self._expand_act_gate(g, a),
+                            self._expand_act_gate(beta, a), signed)
         if self.mode == "calibrate":
             # Running-range statistics (momentum handled by the caller loop).
             red = tuple(i for i in range(a.ndim) if i != a.ndim + feature_axis)
@@ -247,7 +292,7 @@ class QuantContext:
 
     def input(self, x: jnp.ndarray) -> jnp.ndarray:
         """Fixed-width input quantization (paper: 8-bit sensor data)."""
-        if self.mode != "train" or not self.cfg.enabled:
+        if self.mode not in ("train", "serve") or not self.cfg.enabled:
             return x
         beta = jnp.maximum(jnp.max(jnp.abs(jax.lax.stop_gradient(x))), 1e-8)
         signed = True

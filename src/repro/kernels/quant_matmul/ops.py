@@ -1,15 +1,11 @@
 """Jit'd wrapper for the fused dequant GEMM.
 
-Folds the per-channel bias into the GEMM exactly by augmenting ``x`` with a
-ones column and ``codes`` with one extra row holding ``bias / scale``:
-
-    y = scale * ([x, 1] @ [[codes], [bias/scale]])
-      = scale * (x @ codes) + bias * rowsum-of-ones = x @ (codes*scale + bias)
-
-(The extra row is fp-valued; it rides in a separate fp32 row tensor so codes
-stay int8 in HBM — implemented by augmenting AFTER dequant-free accumulation
-would lose exactness, so we simply add the rank-1 term outside the kernel:
-``y += rowsum(x) ⊗ bias``, one cheap VPU pass.)
+The kernel computes the complete affine dequant
+``y = scale * (x @ codes) + bias * rowsum(x)`` (== ``x @ (codes*scale+bias)``
+exactly) in its epilogue; this wrapper flattens the leading activation dims,
+computes ``rowsum(x)`` (one VPU reduction, fused into the x load by XLA) and
+picks the Pallas kernel or the pure-jnp oracle. See quant_matmul.py for the
+kernel contract.
 """
 
 from __future__ import annotations
@@ -35,11 +31,11 @@ def quant_matmul_op(
 ) -> jnp.ndarray:
     """y = x @ (codes*scale + bias); x: (..., K), codes: (K, N) int8."""
     orig = x.shape
-    x2 = x.reshape(-1, orig[-1])
+    x2 = x.reshape(-1, orig[-1]).astype(jnp.float32)
     if use_pallas:
-        y = quant_matmul_pallas(x2, codes, scale, bias, interpret=interpret)
-        # exact rank-1 bias term (see module docstring)
-        y = y + jnp.sum(x2.astype(jnp.float32), axis=1, keepdims=True) * bias[None, :]
+        rowsum = jnp.sum(x2, axis=1)
+        y = quant_matmul_pallas(x2, codes, scale, bias, rowsum,
+                                interpret=interpret)
     else:
         y = quant_matmul_ref(x2, codes, scale, bias)
     return y.reshape(orig[:-1] + (codes.shape[1],))

@@ -7,13 +7,26 @@ HBM — the Marlin/AWQ idiom (taxonomy B.12) adapted to the MXU:
 
     y[m, n] = scale[n] * (x @ codes)[m, n] + bias[n] * rowsum(x)[m]
 
-Both terms come from MXU matmuls over tiles resident in VMEM; the affine
-epilogue is applied once per output tile on the final K step. int8 codes
-halve (vs bf16) or quarter (vs fp32) the weight bytes streamed from HBM —
-decode is weight-bandwidth-bound, so roofline time drops proportionally.
+The first term comes from MXU matmuls over tiles resident in VMEM; the
+rank-1 bias term reuses ``rowsum(x)``, a single cheap VPU reduction over the
+activations, which the wrapper (ops.py) computes once and feeds in as a
+fourth operand. Both terms are applied in the epilogue on the final K step,
+while the fp32 output tile is still in VMEM — the full affine dequant costs
+zero extra passes over the (M, N) output in HBM. int8 codes halve (vs bf16)
+or quarter (vs fp32) the weight bytes streamed from HBM — decode is
+weight-bandwidth-bound, so roofline time drops proportionally.
 
 Tiling: grid (M/bm, N/bn, K/bk); accumulation in the fp32 output tile across
 the K grid dimension (output revisiting), 128-aligned tiles for the MXU.
+
+Kernel contract (DESIGN.md §8):
+    x:      (M, K)  fp32/bf16 activations
+    codes:  (K, N)  int8 centered codes
+    scale:  (N,)    fp32 per-output-channel scale
+    bias:   (N,)    fp32 per-output-channel offset (asymmetric / unsigned
+                    grids; exactly zero only for symmetric signed grids)
+    rowsum: (M,)    fp32 ``sum_k x[m, k]``
+    out:    (M, N)  fp32 ``x @ (codes * scale + bias)``, exact in fp32
 """
 
 from __future__ import annotations
@@ -25,21 +38,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, c_ref, s_ref, b_ref, o_ref, *, k_steps: int):
+def _kernel(x_ref, c_ref, s_ref, b_ref, r_ref, o_ref, *, k_steps: int,
+            k_total: int, bk: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...].astype(jnp.float32)           # (bm, bk)
     codes = c_ref[...].astype(jnp.float32)       # (bk, bn)
+    if k_total % bk:
+        # Ragged K: the final block reads past K; zero the out-of-bounds
+        # tail so it contributes nothing. (Ragged M/N only pollute cropped
+        # output padding; ragged K would corrupt real accumulations.)
+        # 2-D iota: Pallas-TPU rejects 1-D jnp.arange at lowering time.
+        k0 = pl.program_id(2) * bk
+        kx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + k0
+        kc = jax.lax.broadcasted_iota(jnp.int32, codes.shape, 0) + k0
+        x = jnp.where(kx < k_total, x, 0.0)
+        codes = jnp.where(kc < k_total, codes, 0.0)
     o_ref[...] += jax.lax.dot(x, codes, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
-        # y = scale * acc + bias * rowsum(x_full) — rowsum accumulated into
-        # the first output column? No: recompute via a second accumulator is
-        # avoided by folding bias through the ones-vector trick below in ops.
-        o_ref[...] = o_ref[...] * s_ref[...][None, :]
+        # Affine dequant on the resident output tile:
+        #   y = scale * (x @ codes) + bias * rowsum(x)
+        o_ref[...] = (
+            o_ref[...] * s_ref[...][None, :]
+            + r_ref[...][:, None] * b_ref[...][None, :]
+        )
 
 
 def quant_matmul_pallas(
@@ -47,18 +73,17 @@ def quant_matmul_pallas(
     codes: jnp.ndarray,
     scale: jnp.ndarray,
     bias: jnp.ndarray,
+    rowsum: jnp.ndarray,
     *,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 512,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """x: (M, K); codes: (K, N) int8; scale/bias: (N,) -> (M, N) fp32.
+    """x: (M, K); codes: (K, N) int8; scale/bias: (N,); rowsum: (M,).
 
-    The bias term ``bias[n] * sum_k x[m, k]`` is folded in by augmenting x
-    with a ones column and codes with a bias row (exact, keeps the kernel a
-    pure scaled GEMM): handled in ops.py. This kernel computes
-    ``scale[n] * (x @ codes)``.
+    Returns (M, N) fp32 ``x @ (codes * scale + bias)`` — the complete affine
+    epilogue runs inside the kernel (see module docstring for the contract).
     """
     m, k = x.shape
     _, n = codes.shape
@@ -66,7 +91,7 @@ def quant_matmul_pallas(
     k_steps = pl.cdiv(k, bk)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps)
     return pl.pallas_call(
-        functools.partial(_kernel, k_steps=k_steps),
+        functools.partial(_kernel, k_steps=k_steps, k_total=k, bk=bk),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         grid=grid,
         in_specs=[
@@ -74,7 +99,8 @@ def quant_matmul_pallas(
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
             pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         interpret=interpret,
-    )(x, codes, scale, bias)
+    )(x, codes, scale, bias, rowsum)

@@ -413,7 +413,7 @@ def make_decode_step(recipe: Recipe, plan: ShardingPlan | None):
         mp = None
         if cfg.mrope_sections is not None:
             b = tokens.shape[0]
-            mp = jnp.broadcast_to(cache["pos"][None, None, None], (3, b, 1))
+            mp = jnp.broadcast_to(cache["pos"][None, :, None], (3, b, 1))
         if plan is not None and cfg.embed_input:
             h = sharded_embed_lookup(plan, params["embed"], tokens[:, None])
             if cfg.scale_embed:

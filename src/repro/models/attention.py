@@ -154,13 +154,19 @@ def attention_decode(
     mrope_pos=None,
     plan=None,
 ):
-    """One-token decode. x: (B, 1, d); pos: scalar int32 (tokens so far).
+    """One-token decode. x: (B, 1, d); pos: (B,) int32 per-row positions
+    (tokens so far) — scalars broadcast, so single-sequence callers can pass
+    a plain int. Rows decode independently: each row's K/V lands at its own
+    position and its mask admits only its own history, which is what lets a
+    continuous-batching engine keep slots at unrelated positions in one
+    batched step.
 
     Local layers treat the cache as a ring buffer of ``window`` slots.
     Returns (y, new_cache).
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
     mp = None
     if cfg.mrope_sections is not None:
         mp = (
@@ -171,11 +177,10 @@ def attention_decode(
     q, k, v = _project_qkv(qc, p, x, cfg, positions, mp)
 
     slots = cache["k"].shape[1]
-    slot = pos % slots if kind == "local" else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+    slot = pos % slots if kind == "local" else jnp.minimum(pos, slots - 1)
+    rows = jnp.arange(b)
+    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
     if plan is not None:
         ck = plan.shard_cache(ck)
         cv = plan.shard_cache(cv)
@@ -188,15 +193,16 @@ def attention_decode(
         preferred_element_type=jnp.float32,
     ) * scale
     logits = softcap(logits, cfg.attn_softcap)
-    sids = jnp.arange(slots)
+    sids = jnp.arange(slots)[None, :]
+    posb = pos[:, None]
     if kind == "local":
         # ring buffer: slot s holds absolute position ap with ap % slots == s
         # and ap <= pos; valid iff pos - ap < window and ap <= pos.
-        ap = pos - ((pos - sids) % slots)
-        valid = (ap >= 0) & (ap <= pos) & ((pos - ap) < cfg.window)
+        ap = posb - ((posb - sids) % slots)
+        valid = (ap >= 0) & (ap <= posb) & ((posb - ap) < cfg.window)
     else:
-        valid = sids <= pos
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid = sids <= posb
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, cv,
                      preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
@@ -204,6 +210,38 @@ def attention_decode(
     y = qmatmul(qc, "attn_o", out, p["wo"])
     y = qc.act("attn_o", y)
     return y, {"k": ck, "v": cv}
+
+
+def write_prefill_slot(cfg: ModelConfig, kind: str, cache: dict, k, v, slot,
+                       plen):
+    """Write one serving slot's prefill K/V range in one shot.
+
+    ``cache``: {"k", "v"} of shape (B, slots, KV, hd), with an optional
+    leading scan axis (R, B, slots, KV, hd); ``k``/``v``: the batched-prefill
+    K/V for the slot's right-padded prompt, shaped like the cache with B=1
+    and the sequence axis S_pad in place of ``slots``. ``slot``/``plen`` may
+    be traced scalars.
+
+    Global caches take positions [0, S_pad) verbatim. Ring (local) caches
+    gather, for each ring slot r, the unique prompt position p ≡ r (mod ring)
+    in (plen - ring, plen]. Right-padding beyond ``plen`` (and ring slots a
+    short prompt never reached) is written but never attended: the decode
+    mask only admits positions <= pos, and decode overwrites each position in
+    the same step that first exposes it.
+    """
+    ck, cv = cache["k"], cache["v"]
+    if kind == "local":
+        ring = ck.shape[-3]
+        r = jnp.arange(ring)
+        p = plen - 1 - ((plen - 1 - r) % ring)
+        p = jnp.clip(p, 0, k.shape[-3] - 1)
+        k = jnp.take(k, p, axis=-3)
+        v = jnp.take(v, p, axis=-3)
+    start = [0] * ck.ndim
+    start[-4] = slot  # the batch (slot) axis, stacked or not
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), tuple(start))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), tuple(start))
+    return {"k": ck, "v": cv}
 
 
 def fill_cache_from_prefill(cfg: ModelConfig, kind: str, k, v, max_seq: int):

@@ -31,12 +31,32 @@ def qmatmul(qc: QuantContext, name: str, x, w, *, positions: int = 1,
     Registers the site, fake-quantizes the weight, performs the contraction in
     bf16 with fp32 accumulation. The *output activation* quantization is the
     caller's job (after the nonlinearity, paper Fig. 1) via ``qc.act``.
+
+    In serve mode, sites with an int-code export dispatch the fused-dequant
+    GEMM instead (Pallas on TPU, jnp reference elsewhere — DESIGN.md §8): the
+    fp weight is never materialized, ``y = x @ (codes * scale + bias)`` comes
+    straight off the int8 codes.
     """
     if register:
         qc.register_matmul(
             name, w.shape, fan_in=int(w.shape[0]), out_features=int(w.shape[-1]),
             positions=positions, act_quantized=act_quantized,
         )
+    qw = qc.serving_weight(name)
+    if qw is not None:
+        from repro.kernels.quant_matmul.ops import quant_matmul_op
+
+        n = qw["codes"].shape[-1]
+        # scale/bias arrive per-tensor (scalar-ish) or per-channel; the
+        # kernel contract is per-output-channel (N,) vectors.
+        scale = jnp.broadcast_to(qw["scale"].reshape(-1), (n,))
+        bias = jnp.broadcast_to(qw["bias"].reshape(-1), (n,))
+        y = quant_matmul_op(
+            x, qw["codes"], scale, bias,
+            use_pallas=qc.matmul_impl != "ref",
+            interpret=qc.matmul_impl != "pallas",
+        )
+        return y.astype(COMPUTE_DTYPE)
     wq = qc.weight(name, w)
     y = jax.lax.dot_general(
         x.astype(COMPUTE_DTYPE), wq.astype(COMPUTE_DTYPE),

@@ -15,10 +15,16 @@ outputs (see core/sites.py child-context protocol).
 
 Entry points:
   init_params(cfg, key)
-  forward_train(qc, params, batch, cfg, ...)      -> logits
-  prefill(qc, params, batch, cfg, ...)            -> logits, cache
-  decode_step(qc, params, cache, tokens, pos, ...) -> logits, cache
+  forward_train(qc, params, batch, cfg, ...)       -> logits
+  prefill(qc, params, batch, cfg, ...)             -> logits, cache
+  prefill_slot(qc, params, tokens, plen, cache, slot, cfg, ...)
+                                                   -> logits, cache
+  decode_step(qc, params, cache, tokens, cfg, ...) -> logits, cache
   init_cache(cfg, batch, max_seq)
+
+The decode cache keeps a per-row ``pos`` vector, so a continuous-batching
+engine can hold every serving slot at its own position and still run ONE
+jitted decode_step per tick (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -236,10 +242,12 @@ def _scan_quant_xs(qc: QuantContext, prefix: str):
         _prefixed(qc.gates, prefix),
         {k: v["beta"] for k, v in qc.ranges.items() if k.startswith(prefix)},
         _prefixed(qc.probes, prefix),
+        _prefixed(qc.qweights, prefix),
     )
 
 
-def _child_for_slice(qc: QuantContext, gates_s, betas_s, probes_s):
+def _child_for_slice(qc: QuantContext, gates_s, betas_s, probes_s,
+                     qweights_s=None):
     ranges = dict(qc.ranges)
     for k, b in betas_s.items():
         ranges[k] = {"beta": b, "signed": qc.ranges[k]["signed"]}
@@ -247,6 +255,7 @@ def _child_for_slice(qc: QuantContext, gates_s, betas_s, probes_s):
         gates={**qc.gates, **gates_s},
         ranges=ranges,
         probes={**qc.probes, **probes_s},
+        qweights={**qc.qweights, **(qweights_s or {})},
     )
 
 
@@ -297,12 +306,12 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
 
     for pi, kind in enumerate(pat):
         prefix = f"p{pi}_{kind}/"
-        gates_xs, betas_xs, probes_xs = _scan_quant_xs(qc, prefix)
+        gates_xs, betas_xs, probes_xs, qw_xs = _scan_quant_xs(qc, prefix)
 
         def body(carry, xs, _pi=pi, _kind=kind, _prefix=prefix):
             hh = carry
-            bp, g_s, b_s, p_s = xs
-            sub = _child_for_slice(qc, g_s, b_s, p_s)
+            bp, g_s, b_s, p_s, qw_s = xs
+            sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s)
             with sub.scope(_prefix[:-1]):
                 hh, cache_entry = _apply_block_full(
                     sub, bp, hh, cfg, _kind, positions=positions,
@@ -317,7 +326,7 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
             # single repeat: quant state is unstacked (no scan axis) — apply
             # the body directly on slice 0 of the (1, ...) param stack.
             bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
-            ys = body(h, (bp, gates_xs, betas_xs, probes_xs))
+            ys = body(h, (bp, gates_xs, betas_xs, probes_xs, qw_xs))
             h, out = ys
             qc.absorb_stacked_stats(out[0], out[1])
             if want_cache:
@@ -330,13 +339,14 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
             with qc.layer_stack(reps):
                 h, ys = jax.lax.scan(
                     body_fn, h,
-                    (params["blocks"][pi], gates_xs, betas_xs, probes_xs),
+                    (params["blocks"][pi], gates_xs, betas_xs, probes_xs,
+                     qw_xs),
                     unroll=unroll,
                 )
         else:
             h, ys = jax.lax.scan(
                 body_fn, h,
-                (params["blocks"][pi], gates_xs, betas_xs, probes_xs),
+                (params["blocks"][pi], gates_xs, betas_xs, probes_xs, qw_xs),
                 unroll=unroll,
             )
         qc.absorb_stacked_stats(ys[0], ys[1])
@@ -377,7 +387,7 @@ def prefill(qc: QuantContext, params, batch, cfg: ModelConfig, *, max_seq: int,
         scan_unroll=scan_unroll,
     )
     b = batch.shape[0]
-    cache = {"pos": jnp.asarray(batch.shape[1], jnp.int32), "layers": []}
+    cache = {"pos": jnp.full((b,), batch.shape[1], jnp.int32), "layers": []}
     pat = cfg.block_pattern
     for pi, kind in enumerate(pat):
         entry = raw[pi]
@@ -399,6 +409,61 @@ def prefill(qc: QuantContext, params, batch, cfg: ModelConfig, *, max_seq: int,
         else:
             cache["layers"].append(entry)
     return logits, cache
+
+
+def _write_state_slot(lc, entry, slot, stacked: bool):
+    """Write one slot's recurrent state (ssm/rglru) into the multi-slot cache.
+
+    ``entry`` leaves have batch dim 1 where ``lc`` has the slot count; the
+    batch axis is 1 for scan-stacked layers (leading R axis), else 0.
+    """
+    ax = 1 if stacked else 0
+
+    def upd(c, e):
+        start = [0] * c.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(c, e.astype(c.dtype), tuple(start))
+
+    return jax.tree.map(upd, lc, entry)
+
+
+def prefill_slot(qc: QuantContext, params, tokens, plen, cache, slot,
+                 cfg: ModelConfig, *, plan=None, mrope_pos=None,
+                 moe_impl="dense_all", scan_unroll=False):
+    """True batched prefill for one serving slot (DESIGN.md §8).
+
+    Runs the whole (right-padded) prompt through ONE causal forward and
+    writes the slot's KV range / recurrent state in one shot — replacing the
+    engine's old scan-of-decode-steps prefill, which cost
+    O(prompt_len x slots) decode forwards per admission.
+
+    ``tokens``: (1, S_pad) int32 (or (1, S_pad, d) embeddings for
+    stub-modality models); ``plen``/``slot`` scalar int32 (may be traced).
+    Only row ``slot`` of ``cache`` is touched; its pos is set to ``plen``.
+    Returns (logits (1, S_pad, V), cache) — the slot's first generated token
+    is ``argmax(logits[0, plen - 1])``.
+    """
+    logits, raw = _forward_full(
+        qc, params, tokens, cfg, plan=plan, mrope_pos=mrope_pos,
+        moe_impl=moe_impl, want_cache=True, remat=False,
+        scan_unroll=scan_unroll,
+    )
+    plen = jnp.asarray(plen, jnp.int32)
+    pat = cfg.block_pattern
+    kinds = list(pat) + list(cfg.remainder_kinds)
+    new_layers = []
+    for li, kind in enumerate(kinds):
+        entry = raw[li]
+        lc = cache["layers"][li]
+        stacked = li < len(pat)  # pattern entries carry the scan (R) axis
+        if kind in ("global", "local"):
+            new_layers.append(
+                attn.write_prefill_slot(cfg, kind, lc, entry["k"], entry["v"],
+                                        slot, plen))
+        else:
+            new_layers.append(_write_state_slot(lc, entry, slot, stacked))
+    pos = cache["pos"].at[slot].set(plen)
+    return logits, {"pos": pos, "layers": new_layers}
 
 
 # ---------------------------------------------------------------------------
@@ -425,13 +490,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
             layers.append(ssd_lib.init_ssd_cache(cfg, batch))
         else:
             layers.append(rglru_lib.init_rglru_cache(cfg, batch))
-    return {"pos": jnp.asarray(0, jnp.int32), "layers": layers}
+    return {"pos": jnp.zeros((batch,), jnp.int32), "layers": layers}
 
 
 def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
-                plan=None, mrope_pos=None, scan_unroll=False):
+                plan=None, mrope_pos=None, scan_unroll=False, advance=None):
     """One decode step for the whole batch. tokens: (B,) int32 or (B,1,d)
-    embeddings for stub-modality models. Returns (logits (B, 1, V), cache)."""
+    embeddings for stub-modality models. ``cache["pos"]`` is per-row (B,), so
+    slots of a continuous-batching engine decode at independent positions.
+    ``advance`` (optional (B,) bool/int) selects which rows bump their
+    position — inactive serving slots pass 0 and stay put (their KV write
+    lands at their frozen position and is re-overwritten, never attended).
+    Returns (logits (B, 1, V), cache)."""
     pos = cache["pos"]
     if cfg.embed_input:
         batch = tokens[:, None]
@@ -443,12 +513,12 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
     new_layers = []
     for pi, kind in enumerate(pat):
         prefix = f"p{pi}_{kind}/"
-        gates_xs, betas_xs, probes_xs = _scan_quant_xs(qc, prefix)
+        gates_xs, betas_xs, probes_xs, qw_xs = _scan_quant_xs(qc, prefix)
 
         def body(carry, xs, _kind=kind, _prefix=prefix):
             hh = carry
-            bp, lc, g_s, b_s, p_s = xs
-            sub = _child_for_slice(qc, g_s, b_s, p_s)
+            bp, lc, g_s, b_s, p_s, qw_s = xs
+            sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s)
             with sub.scope(_prefix[:-1]):
                 hh, nc = _apply_block_decode(
                     sub, bp, hh, lc, pos, cfg, _kind,
@@ -459,7 +529,7 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
         if cfg.pattern_repeats == 1:
             bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
             lc = jax.tree.map(lambda x: x[0], cache["layers"][pi])
-            h, nc = body(h, (bp, lc, gates_xs, betas_xs, probes_xs))
+            h, nc = body(h, (bp, lc, gates_xs, betas_xs, probes_xs, qw_xs))
             new_layers.append(jax.tree.map(lambda x: x[None], nc))
             continue
 
@@ -469,13 +539,13 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
                 h, nc = jax.lax.scan(
                     body, h,
                     (params["blocks"][pi], cache["layers"][pi], gates_xs,
-                     betas_xs, probes_xs), unroll=unroll,
+                     betas_xs, probes_xs, qw_xs), unroll=unroll,
                 )
         else:
             h, nc = jax.lax.scan(
                 body, h,
                 (params["blocks"][pi], cache["layers"][pi], gates_xs,
-                 betas_xs, probes_xs), unroll=unroll,
+                 betas_xs, probes_xs, qw_xs), unroll=unroll,
             )
         new_layers.append(nc)
 
@@ -488,5 +558,27 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
             )
         new_layers.append(nc)
 
+    if advance is not None:
+        # Non-advancing rows must be complete no-ops. Attention caches need
+        # no gating: a frozen row rewrites the same (pos, K, V) and the mask
+        # never admits anything new. Recurrent states are unconditional
+        # scans, so an ungated row would keep integrating its stale token —
+        # keep the old state for rows that didn't advance.
+        adv_b = advance.astype(bool)
+        kinds = list(pat) + list(cfg.remainder_kinds)
+        for li, kind in enumerate(kinds):
+            if kind in ("global", "local"):
+                continue
+            ax = 1 if li < len(pat) else 0  # batch axis (scan-stacked or not)
+
+            def keep_old(o, n, _ax=ax):
+                shp = [1] * n.ndim
+                shp[_ax] = n.shape[_ax]
+                return jnp.where(adv_b.reshape(shp), n, o)
+
+            new_layers[li] = jax.tree.map(keep_old, cache["layers"][li],
+                                          new_layers[li])
+
     logits = _head(qc, params, h, cfg)
-    return logits, {"pos": pos + 1, "layers": new_layers}
+    adv = 1 if advance is None else advance.astype(pos.dtype)
+    return logits, {"pos": pos + adv, "layers": new_layers}

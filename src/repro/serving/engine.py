@@ -1,61 +1,52 @@
 """Batched serving engine over the CGMQ-quantized model.
 
-The deployment half of the CGMQ story: ``export_quantized`` freezes a trained
-(params, gates, ranges) triple into int8 codes + affine terms per site (the
-``quant_matmul`` kernel's format); ``ServingEngine`` runs batched
-prefill + decode with a slot-based continuous-batching scheduler:
+The deployment half of the CGMQ story (DESIGN.md §8). ``export_int_model``
+freezes a trained (params, gates, ranges) triple into int8 codes + affine
+terms per site — the ``quant_matmul`` kernel's format — and ``ServingEngine``
+runs a slot-based continuous-batching scheduler whose hot path actually
+serves that artifact:
 
-  * requests join a waiting queue; free slots prefill and join the running
-    batch; finished/cancelled slots free immediately;
-  * one jitted decode_step serves the whole running batch each tick;
-  * per-slot KV state lives in the cache pytree indexed by slot.
+  * **batched prefill** — each admitted request runs its whole prompt through
+    ONE causal forward (``tfm.prefill_slot``), which writes the slot's KV
+    range / recurrent state in one shot. The seed engine scanned
+    ``decode_step`` token-by-token with the token broadcast across all
+    slots: O(prompt_len x slots) slot-forwards per admission, now 1.
+  * **int8 decode** — with a ``quant_state``, decode runs in serve mode:
+    every exported matmul site dispatches the fused-dequant GEMM
+    (``quant_matmul``: Pallas on TPU, jnp reference elsewhere) straight off
+    int8 codes instead of fake-quant-then-fp32-matmul, so decode streams a
+    quarter of the weight bytes.
+  * **device-resident generation loop** — greedy sampling, the per-slot
+    position bump and done-flag computation all live inside the jitted tick;
+    the Python loop does ONE small host sync per batch tick (next tokens +
+    emitted/done masks), not one per slot.
 
-On TPU the quantized path dispatches the Pallas fused-dequant GEMM; on this
-CPU container the jnp reference path lowers (kernels validated in interpret
-mode — DESIGN.md §3).
+Requests join a waiting queue; free slots prefill and join the running
+batch; finished slots free immediately. Per-slot KV state lives in the cache
+pytree indexed by slot, at per-slot positions (``cache["pos"]`` is a
+vector), so slots at unrelated sequence positions share one decode step.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.controller import CGMQState, export_gates
 from repro.core.gates import gate_to_bits
-from repro.core.quantizer import quantize, quantize_to_int
+from repro.core.quantizer import quantize_to_int
 from repro.core.sites import QuantContext, merge_ranges
 from repro.models import transformer as tfm
 
 
-def export_quantized(params, cgmq: CGMQState, betas, signed) -> dict:
-    """Bake the learned bit-widths into the weights (fake-quant frozen).
-
-    Returns params with every sited weight replaced by its quantized value —
-    the deployable artifact whose BOP cost the controller certified. (The
-    int-code export for the Pallas serving GEMM is per-site via
-    ``export_int_codes``.)
-    """
-    gates = export_gates(cgmq)
-
-    # The mapping weight->site is implicit through the forward; easiest
-    # faithful export: run a QuantContext in 'train' mode that quantizes, and
-    # capture each site's quantized weight via functional interception.
-    class _Export(QuantContext):
-        def __init__(self, **kw):
-            super().__init__(**kw)
-            self.exported = {}
-
-        def weight(self, name, w):
-            wq = super().weight(name, w)
-            self.exported[self._full(name) + ".w"] = wq
-            return wq
-
-    return {"gates": gates, "betas": betas, "signed": signed}
+# ---------------------------------------------------------------------------
+# Int-code export
+# ---------------------------------------------------------------------------
 
 
 def export_int_codes(w, gate, beta, signed: bool):
@@ -64,6 +55,120 @@ def export_int_codes(w, gate, beta, signed: bool):
     bits = max(2, min(bits, 8))  # serving GEMM packs <= 8 bits
     codes, scale, bias = quantize_to_int(w, bits, beta, signed)
     return {"codes": codes, "scale": scale, "bias": bias, "bits": bits}
+
+
+def _expand_group(a, w, stacked: bool):
+    """Broadcast a gate-group array against weight ``w``.
+
+    Group shapes are () (per-tensor) or (N,) (per-channel), with a leading
+    stack axis when ``stacked``; channels align with w's LAST axis.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    if stacked:
+        core = a.shape[1:]
+        return a.reshape((a.shape[0],) + (1,) * (w.ndim - 1 - len(core)) + core)
+    if a.ndim == 0:
+        return a
+    return a.reshape((1,) * (w.ndim - a.ndim) + a.shape)
+
+
+def _site_int_export(w, gate, beta, signed: bool, stacked: bool):
+    """One dense site -> ({codes, scale, bias}, max_bits) or None.
+
+    Eligible layouts: per-tensor / per-channel gates over a (K, N) weight,
+    optionally scan-stacked to (R, K, N). The int grid reproduces the
+    fake-quant grid EXACTLY (per-layer mixed bit-widths ride in scale/bias),
+    so serve-mode logits match the fake-quant reference. Sites trained above
+    8 bits are rejected — int8 can't carry their grid — and fall back to
+    fake-quant in serve mode.
+    """
+    g = jnp.asarray(gate)
+    w = jnp.asarray(w)
+    core = g.shape[1:] if stacked else g.shape
+    if core not in ((), (w.shape[-1],)):
+        return None  # per-weight granularity: kernel has no per-element scale
+    if stacked and (g.ndim == 0 or g.shape[0] != w.shape[0]):
+        return None
+    bits = gate_to_bits(g)
+    max_bits = int(np.asarray(jax.device_get(bits)).max())
+    if max_bits > 8:
+        return None
+    codes, scale, bias = quantize_to_int(
+        w, _expand_group(bits, w, stacked), _expand_group(beta, w, stacked),
+        signed)
+    return {"codes": codes, "scale": scale, "bias": bias}, max_bits
+
+
+def export_int_model(params, cfg: ModelConfig, quant_state: dict, *,
+                     plan=None):
+    """Full-model int-code export for the serving GEMM.
+
+    Captures every matmul site's weight tensor via an export-mode forward —
+    the same code path serving runs, so site names line up by construction
+    (scan-stacked sites come back stacked along the scan axis, exactly the
+    layout the decode scan re-slices). Each eligible dense site is then
+    quantized at its learned per-site (per-layer, per-channel) bit-widths.
+
+    ``quant_state``: {"qcfg", "gates", "betas", "signed"} as used for
+    train-mode forwards. Returns ``(qweights, report)``: ``qweights`` maps
+    "<site>.w" -> {codes, scale, bias} arrays (the pytree ``decode_step``
+    threads through its scan alongside gates); ``report`` maps the same keys
+    to the exported max bit-width. Ineligible sites (per-weight granularity,
+    >8-bit, MoE/conv weight shapes) are absent and served via fake-quant.
+    """
+    qc = QuantContext(mode="export")
+    s = 8  # long enough for chunked-SSD block sizes at smoke scale
+    if cfg.embed_input:
+        dummy = jnp.zeros((1, s), jnp.int32)
+    else:
+        dummy = jnp.zeros((1, s, cfg.d_model), jnp.float32)
+    mrope = None
+    if cfg.mrope_sections is not None:
+        mrope = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, 1, s))
+    tfm.forward_train(qc, params, dummy, cfg, plan=plan, mrope_pos=mrope,
+                      moe_impl="dense_all", remat=False)
+    gates = quant_state["gates"]
+    ranges = merge_ranges(quant_state["betas"], quant_state["signed"])
+    qweights: dict[str, Any] = {}
+    report: dict[str, int] = {}
+    for key, w in qc.weight_stats.items():
+        site = qc.sites.get(key[:-len(".w")])
+        if key not in gates or site is None or len(site.weight_shape) != 2:
+            continue
+        stacked = w.ndim == len(site.weight_shape) + 1
+        out = _site_int_export(w, gates[key], ranges[key]["beta"],
+                               ranges[key]["signed"], stacked)
+        if out is None:
+            continue
+        qweights[key], report[key] = out
+    return qweights, report
+
+
+def make_uniform_quant_state(cfg: ModelConfig, params, *, gate_init=2.2,
+                             granularity="per_channel"):
+    """A stand-in trained CGMQ state with one uniform gate everywhere
+    (default T(2.2) = 8 bits): the shape real training produces, without
+    running the controller. Shared by the serving example, the throughput
+    benchmark and the serving tests so they can't drift apart; NOT a
+    substitute for a trained state in real deployments.
+    """
+    from repro.core.sites import (QuantConfig, collect_sites, init_gates,
+                                  init_ranges_from_weights,
+                                  split_learnable_ranges)
+
+    qcfg = QuantConfig(granularity=granularity)
+    sites = collect_sites(
+        lambda qc, p, x: tfm.forward_train(qc, p, x, cfg, remat=False),
+        params, jnp.zeros((1, 8), jnp.int32), cfg=qcfg)
+    gates = init_gates(sites, qcfg, init=gate_init)
+    betas, signed = split_learnable_ranges(
+        init_ranges_from_weights(sites, qcfg, lambda n: None))
+    return {"qcfg": qcfg, "gates": gates, "betas": betas, "signed": signed}
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -76,98 +181,220 @@ class Request:
 
 
 class ServingEngine:
-    """Slot-based continuous batching around prefill/decode steps."""
+    """Slot-based continuous batching around prefill_slot / decode_step.
+
+    ``quant_state=None`` serves fp32; with a quant_state the engine serves
+    the int-code export (``use_int8=True``, the default) or pure fake-quant.
+    ``matmul_impl`` picks the fused-dequant GEMM backend: "pallas" on TPU,
+    "pallas_interpret" for kernel validation, "ref" (jnp) elsewhere; the
+    default auto-detects.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 256, quant_state: dict | None = None,
-                 plan=None):
+                 plan=None, use_int8: bool = True,
+                 matmul_impl: str | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.plan = plan
         self.quant_state = quant_state
+        if matmul_impl is None:
+            matmul_impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+        self.qweights: dict[str, Any] = {}
+        self.int8_report: dict[str, int] = {}
+        if quant_state is not None and use_int8:
+            self.qweights, self.int8_report = export_int_model(
+                params, cfg, quant_state, plan=plan)
+
         self.cache = tfm.init_cache(cfg, slots, max_seq)
+        # Device-resident generation state: one row per slot.
+        self.state = {
+            "last_tok": jnp.zeros((slots,), jnp.int32),
+            "active": jnp.zeros((slots,), bool),
+            "remaining": jnp.zeros((slots,), jnp.int32),
+        }
         self.slot_req: list[Request | None] = [None] * slots
-        self.slot_pos = np.zeros((slots,), np.int32)
         self.waiting: list[Request] = []
         self.finished: list[Request] = []
-        self._last_tok = np.zeros((slots,), np.int32)
+        # Perf accounting (consumed by benchmarks/run.py --json):
+        #   prefill_forwards       batched prompt forwards actually run
+        #   seed_equiv_forwards    decode_step forwards the seed's
+        #                          scan-of-decode-steps prefill would have run
+        #                          (one per prompt token, each slots wide)
+        self.stats = {"prefill_forwards": 0, "tail_decode_steps": 0,
+                      "prompt_tokens": 0, "seed_equiv_forwards": 0,
+                      "decode_ticks": 0, "generated_tokens": 0,
+                      "prefill_time_s": 0.0, "decode_time_s": 0.0}
 
-        def _qc():
+        # Small quant state (gates/ranges) rides as jit closure constants;
+        # the int8 codes are passed as a jit ARGUMENT so the (potentially
+        # large) artifact isn't baked into every compiled executable — _tick
+        # plus each per-bucket _prefill specialization would otherwise embed
+        # its own copy.
+        def _qc(qweights):
             if quant_state is None:
                 return QuantContext(mode="off")
             return QuantContext(
-                mode="train", cfg=quant_state["qcfg"],
+                mode="serve", cfg=quant_state["qcfg"],
                 gates=quant_state["gates"],
                 ranges=merge_ranges(quant_state["betas"],
                                     quant_state["signed"]),
-                probes={},
+                qweights=qweights, matmul_impl=matmul_impl,
             )
 
         @jax.jit
-        def _decode(params, cache, tokens):
-            logits, cache = tfm.decode_step(_qc(), params, cache, tokens, cfg,
-                                            plan=plan)
-            return jnp.argmax(logits[..., : cfg.vocab_size], axis=-1), cache
+        def _tick(params, qweights, cache, state):
+            """One device-resident generation step for the whole batch.
 
-        self._decode = _decode
+            Greedy sampling, the per-slot position bump (via ``advance``) and
+            the done-flag updates all happen on device; the caller fetches
+            (next_tokens, emitted, done) in a single host transfer.
+            """
+            logits, cache = tfm.decode_step(
+                _qc(qweights), params, cache, state["last_tok"], cfg,
+                plan=plan, advance=state["active"])
+            nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            emitted = state["active"]
+            nxt = jnp.where(emitted, nxt, state["last_tok"])
+            remaining = state["remaining"] - emitted.astype(jnp.int32)
+            done_now = emitted & (remaining <= 0)
+            state = {"last_tok": nxt, "active": emitted & ~done_now,
+                     "remaining": remaining}
+            return cache, state, nxt, emitted, done_now
+
+        self._tick = _tick
 
         @jax.jit
-        def _prefill_one(params, cache, tokens, slot):
-            """Sequentially decode a prompt into one slot's cache region."""
+        def _prefill(params, qweights, cache, state, toks, plen, slot,
+                     max_new):
+            """Admit one request: batched prefill into the slot + state init.
 
-            def body(carry, tok):
-                cache = carry
-                logits, cache = tfm.decode_step(
-                    _qc(), params, cache, tok[None].repeat(self.slots, 0),
-                    cfg, plan=plan)
-                return cache, logits[slot, 0]
+            Specializes per padded prompt-bucket shape; ``plen``/``slot``/
+            ``max_new`` are traced, so admissions don't recompile.
+            """
+            logits, cache = tfm.prefill_slot(
+                _qc(qweights), params, toks, plen, cache, slot, cfg,
+                plan=plan)
+            first = jnp.argmax(
+                logits[0, plen - 1, : cfg.vocab_size]).astype(jnp.int32)
+            remaining = jnp.asarray(max_new, jnp.int32) - 1
+            state = {
+                "last_tok": state["last_tok"].at[slot].set(first),
+                "active": state["active"].at[slot].set(remaining > 0),
+                "remaining": state["remaining"].at[slot].set(remaining),
+            }
+            return cache, state, first
 
-            cache, outs = jax.lax.scan(body, cache, tokens)
-            return cache, outs
+        self._prefill = _prefill
 
-        self._prefill_one = _prefill_one
+        @jax.jit
+        def _teacher_step(params, qweights, cache, state, tok, slot):
+            """Teacher-forced decode of one PROMPT token into one slot.
+
+            Used for the sub-chunk tail of SSM prefills. Only ``slot``
+            advances; decode_step keeps every non-advancing row's recurrent
+            state untouched, so concurrent slots are unaffected.
+            """
+            toks = state["last_tok"].at[slot].set(tok)
+            adv = jnp.zeros((slots,), jnp.int32).at[slot].set(1)
+            logits, cache = tfm.decode_step(
+                _qc(qweights), params, cache, toks, cfg, plan=plan,
+                advance=adv)
+            nxt = jnp.argmax(
+                logits[slot, 0, : cfg.vocab_size]).astype(jnp.int32)
+            return cache, nxt
+
+        self._teacher_step = _teacher_step
 
     # ------------------------------------------------------------------
+    def _prefill_shape(self, plen: int) -> tuple[int, int]:
+        """(batched-forward length, teacher-forced tail length) per prompt.
+
+        Attention-only archs right-pad to a power-of-two bucket (padding is
+        masked, see tfm.prefill_slot). Recurrent state (ssm / rglru) is an
+        unconditional scan over every input position with no masking
+        analogue, so those archs prefill at the exact prompt length —
+        ssd_chunked additionally requires chunk-multiple lengths, so SSM
+        prompts run the largest chunk-aligned prefix in the batched forward
+        and teacher-force the < chunk remaining tokens through decode steps.
+        """
+        kinds = list(self.cfg.block_pattern) + list(self.cfg.remainder_kinds)
+        if "ssm" in kinds:
+            cs = self.cfg.ssm_chunk
+            if plen <= cs:
+                return plen, 0
+            l0 = (plen // cs) * cs
+            return l0, plen - l0
+        if "recurrent" in kinds:
+            return plen, 0
+        b = 8
+        while b < plen:
+            b *= 2
+        return min(b, self.max_seq), 0
+
     def submit(self, req: Request):
         self.waiting.append(req)
 
     def _admit(self):
+        t0 = time.perf_counter()
+        admitted = []
         for s in range(self.slots):
             if self.slot_req[s] is None and self.waiting:
                 req = self.waiting.pop(0)
+                plen = len(req.prompt)
+                assert 1 <= plen <= self.max_seq, (plen, self.max_seq)
                 self.slot_req[s] = req
-                # prefill: feed prompt tokens through decode steps; the
-                # shared cache means other slots see extra (masked) writes at
-                # their own positions — isolation is by slot index
-                toks = jnp.asarray(req.prompt, jnp.int32)
-                self.cache, outs = self._prefill_one(
-                    self.params, self.cache, toks, s)
-                first = int(np.asarray(
-                    jnp.argmax(outs[-1][: self.cfg.vocab_size])))
-                # the prefill's final logits ARE the first generated token
-                req.output.append(first)
-                self._last_tok[s] = first
-                if len(req.output) >= req.max_new:
-                    req.done = True
-                    self.finished.append(req)
-                    self.slot_req[s] = None
+                prompt = np.asarray(req.prompt, np.int32)
+                l0, tail = self._prefill_shape(plen)
+                toks = np.zeros((1, max(l0, plen - tail)), np.int32)
+                toks[0, : plen - tail] = prompt[: plen - tail]
+                self.cache, self.state, first = self._prefill(
+                    self.params, self.qweights, self.cache, self.state,
+                    jnp.asarray(toks), plen - tail, s, req.max_new)
+                for t in prompt[plen - tail:]:
+                    self.cache, first = self._teacher_step(
+                        self.params, self.qweights, self.cache, self.state,
+                        jnp.asarray(int(t), jnp.int32), s)
+                if tail:
+                    self.state["last_tok"] = \
+                        self.state["last_tok"].at[s].set(first)
+                self.stats["prefill_forwards"] += 1
+                self.stats["tail_decode_steps"] += tail
+                self.stats["prompt_tokens"] += plen
+                self.stats["seed_equiv_forwards"] += plen
+                admitted.append((s, req, first))
+        for s, req, first in admitted:
+            req.output.append(int(first))
+            self.stats["generated_tokens"] += 1
+            if req.max_new <= 1:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[s] = None
+        if admitted:
+            self.stats["prefill_time_s"] += time.perf_counter() - t0
 
     def step(self):
         """One engine tick: admit, decode the running batch, retire."""
         self._admit()
         if all(r is None for r in self.slot_req):
             return False
-        toks = jnp.asarray(self._last_tok, jnp.int32)
-        nxt, self.cache = self._decode(self.params, self.cache, toks)
-        nxt = np.asarray(nxt[:, 0])
+        t0 = time.perf_counter()
+        self.cache, self.state, nxt, emitted, done = self._tick(
+            self.params, self.qweights, self.cache, self.state)
+        # The one host sync of the tick: three (slots,)-sized vectors.
+        nxt, emitted, done = map(np.asarray,
+                                 jax.device_get((nxt, emitted, done)))
+        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_ticks"] += 1
         for s, req in enumerate(self.slot_req):
-            if req is None:
+            if req is None or not emitted[s]:
                 continue
             req.output.append(int(nxt[s]))
-            self._last_tok[s] = int(nxt[s])
-            if len(req.output) >= req.max_new:
+            self.stats["generated_tokens"] += 1
+            if done[s]:
                 req.done = True
                 self.finished.append(req)
                 self.slot_req[s] = None
@@ -175,7 +402,8 @@ class ServingEngine:
 
     def run_to_completion(self, max_ticks: int = 1000):
         ticks = 0
-        while (self.waiting or any(self.slot_req)) and ticks < max_ticks:
+        while (self.waiting or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
             self.step()
             ticks += 1
         return self.finished

@@ -1,0 +1,71 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The property tests only need ``@settings`` / ``@given`` with four strategy
+kinds (floats, integers, booleans, sampled_from). This shim replays each
+test body over a fixed-seed sample of the strategy space — no shrinking, no
+database, but the suite collects and the properties still get exercised on
+machines without the package. Real hypothesis is preferred whenever
+importable (see the try/except in the test modules).
+"""
+
+from __future__ import annotations
+
+import random
+
+# Keep the fallback fast: hypothesis-configured example counts (50-80) are
+# overkill for a fixed-seed replay.
+_MAX_EXAMPLES_CAP = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample  # rng -> drawn value
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value, max_value, **_):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value, max_value, **_):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples=20, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # No functools.wraps: copying __wrapped__ would make pytest read the
+        # original signature and hunt for fixtures named like the strategy
+        # args. The replayed test takes no pytest-visible parameters.
+        def run():
+            n = min(getattr(run, "_max_examples", 20), _MAX_EXAMPLES_CAP)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(**drawn)
+
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+
+    return deco

@@ -83,6 +83,46 @@ def test_quant_matmul_vs_ref(mkn, bits):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("mkn", [(16, 64, 32), (96, 640, 72)])
+def test_quant_matmul_bias_path_per_channel_asymmetric(mkn):
+    """The kernel's affine epilogue: per-channel asymmetric export, bias != 0.
+
+    Unsigned (alpha = 0) grids produce a nonzero per-channel ``bias``; the
+    Pallas kernel must fold ``bias[n] * rowsum(x)[m]`` into the output tile
+    (the rank-1 term of y = x @ (codes*scale + bias)). Checked against the
+    jnp oracle AND the exact fp32 matmul on the dequantized weight.
+    """
+    m, k, n = mkn
+    rng = np.random.default_rng(m * 7 + n)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(np.abs(rng.normal(size=(k, n))).astype(np.float32))
+    beta = jnp.max(jnp.abs(w), axis=0)
+    codes, scale, bias = quantize_to_int(w, 8, beta, signed=False)
+    assert float(jnp.abs(bias).max()) > 0.0
+    got = quant_matmul_op(x, codes, scale, bias, use_pallas=True)
+    want = quant_matmul_ref(x, codes, scale, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    exact = x @ (codes.astype(jnp.float32) * scale[None, :] + bias[None, :])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_mixed_bits_grid_matches_fake_quant():
+    """Array-bits export: codes*scale+bias reproduces the fake-quant grid."""
+    from repro.core.quantizer import quantize
+
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+    beta = jnp.max(jnp.abs(w), axis=0)
+    bits = jnp.asarray(rng.choice([2.0, 4.0, 8.0], size=(48,)))
+    codes, scale, bias = quantize_to_int(w, bits, beta, True)
+    assert codes.dtype == jnp.int8
+    deq = codes.astype(jnp.float32) * scale[None, :] + bias[None, :]
+    fq = quantize(w, bits[None, :], beta[None, :], True)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(fq), atol=1e-6)
+
+
 def test_quant_matmul_end_to_end_error_small():
     """x @ dequant(quant(w)) stays close to x @ w at 8 bits."""
     rng = np.random.default_rng(9)

@@ -4,8 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container without hypothesis: deterministic replay
+    from _hyp_fallback import given, settings
+    from _hyp_fallback import strategies as st
 
 from repro.core.quantizer import fake_quant, quantize, quantize_to_int
 

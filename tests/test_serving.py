@@ -1,0 +1,280 @@
+"""Serving fast-path tests: batched prefill, scheduler, int8 decode.
+
+Covers the three legs of the serving hot path (DESIGN.md §8):
+  * batched prefill ≡ the seed's scan-of-decode-steps (logits equivalence),
+  * continuous-batching scheduler invariants (slot isolation, FIFO
+    admission, retirement/reuse),
+  * int8 fused-dequant decode vs the fake-quant train-mode reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.sites import QuantContext, merge_ranges
+from repro.models import transformer as tfm
+from repro.serving.engine import (Request, ServingEngine, export_int_model,
+                                  make_uniform_quant_state)
+
+ARCH = "tinyllama-1.1b"
+
+
+def _model(seed=0, arch=ARCH):
+    cfg = get_smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _quant_state(cfg, params, gate_init=2.2, granularity="per_channel"):
+    return make_uniform_quant_state(cfg, params, gate_init=gate_init,
+                                    granularity=granularity)
+
+
+# ---------------------------------------------------------------------------
+# Batched prefill ≡ scan of decode steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plen", [3, 7])
+def test_prefill_slot_matches_scan_of_decode_steps(plen):
+    """One causal forward per slot == the seed's token-by-token prefill."""
+    cfg, params = _model()
+    prompt = np.arange(1, plen + 1, dtype=np.int32)
+    qc = QuantContext(mode="off")
+
+    # seed path: scan decode_step over the prompt on a fresh cache
+    cache_ref = tfm.init_cache(cfg, 1, 32)
+    for t in prompt:
+        logits_ref, cache_ref = tfm.decode_step(
+            qc, params, cache_ref, jnp.asarray([t], jnp.int32), cfg)
+
+    # new path: right-padded single forward into slot 0
+    spad = 16
+    toks = np.zeros((1, spad), np.int32)
+    toks[0, :plen] = prompt
+    cache_new = tfm.init_cache(cfg, 1, 32)
+    logits_new, cache_new = tfm.prefill_slot(
+        qc, params, jnp.asarray(toks), plen, cache_new, 0, cfg)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_new[0, plen - 1, : cfg.vocab_size]),
+        np.asarray(logits_ref[0, 0, : cfg.vocab_size]),
+        rtol=2e-2, atol=2e-2)
+    assert int(cache_new["pos"][0]) == plen == int(cache_ref["pos"][0])
+
+    # and the caches are interchangeable: decode diverges by bf16 noise only
+    nxt = jnp.asarray([5], jnp.int32)
+    l1, _ = tfm.decode_step(qc, params, cache_ref, nxt, cfg)
+    l2, _ = tfm.decode_step(qc, params, cache_new, nxt, cfg)
+    np.testing.assert_allclose(
+        np.asarray(l1[..., : cfg.vocab_size]),
+        np.asarray(l2[..., : cfg.vocab_size]), rtol=2e-2, atol=2e-2)
+
+
+def test_prefill_slot_counts_one_forward(capsys):
+    """Engine accounting: one batched forward per admission, vs plen
+    decode-step forwards (each ``slots`` wide) in the seed path."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=4, max_seq=64)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, (9,)),
+                           max_new=2))
+    eng.run_to_completion()
+    st = eng.stats
+    assert st["prefill_forwards"] == 4
+    assert st["seed_equiv_forwards"] == 4 * 9
+    # slot-forward ratio: (plen * slots) seed slot-forwards vs 1 per admission
+    ratio = st["seed_equiv_forwards"] * eng.slots / st["prefill_forwards"]
+    assert ratio >= eng.slots
+
+
+@pytest.mark.parametrize("arch,plen", [
+    ("mamba2-1.3b", 11),        # ssm_chunk=8: chunk-aligned prefix + 3-token
+    ("mamba2-1.3b", 6),         #   teacher-forced tail / pure exact length
+    ("recurrentgemma-2b", 9),   # rglru + local ring: exact-length prefill
+])
+def test_recurrent_arch_prefill_matches_scan_of_decode(arch, plen):
+    """Recurrent-state archs must not bake padding into the slot state:
+    engine output == manual scan-of-decode-steps greedy, even with another
+    request mid-generation in the neighboring slot (teacher-forced tail
+    steps must not touch other slots' recurrent state)."""
+    cfg, params = _model(arch=arch)
+    rng = np.random.default_rng(plen)
+    prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32)
+    # occupy slot 0 first so the probed request admits mid-flight
+    eng.submit(Request(rid=9, prompt=rng.integers(0, cfg.vocab_size, (5,)),
+                       max_new=8))
+    eng.step()
+    eng.submit(Request(rid=0, prompt=prompt, max_new=4))
+    fin = {r.rid: r.output for r in eng.run_to_completion()}
+
+    qc = QuantContext(mode="off")
+    cache = tfm.init_cache(cfg, 1, 32)
+    for t in prompt:
+        logits, cache = tfm.decode_step(qc, params, cache,
+                                        jnp.asarray([t], jnp.int32), cfg)
+    outs = [int(jnp.argmax(logits[0, 0, : cfg.vocab_size]))]
+    for _ in range(3):
+        logits, cache = tfm.decode_step(
+            qc, params, cache, jnp.asarray([outs[-1]], jnp.int32), cfg)
+        outs.append(int(jnp.argmax(logits[0, 0, : cfg.vocab_size])))
+    assert fin[0] == outs
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants
+# ---------------------------------------------------------------------------
+
+
+def test_slot_isolation_prefill_does_not_corrupt_neighbors():
+    """A request's output is identical whether it shares the engine with
+    other requests (admitted mid-flight, forcing interleaved prefills) or
+    runs alone — i.e. one slot's prefill never corrupts another slot's KV."""
+    cfg, params = _model()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(p),))
+               for p in (5, 9, 4, 11, 6)]
+
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=6))
+    shared = {r.rid: r.output for r in eng.run_to_completion()}
+
+    for i, p in enumerate(prompts):
+        solo = ServingEngine(cfg, params, slots=1, max_seq=64)
+        solo.submit(Request(rid=i, prompt=p, max_new=6))
+        out = solo.run_to_completion()[0].output
+        assert shared[i] == out, f"slot sharing changed request {i}"
+
+
+def test_admission_and_retirement_ordering():
+    """FIFO admission; retired slots immediately rehost the next waiter."""
+    cfg, params = _model()
+    rng = np.random.default_rng(2)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    # staggered lengths force slot 0 to retire before slot 1
+    lens = [2, 5, 3, 4]
+    for i, n in enumerate(lens):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (4,)),
+                           max_new=n))
+
+    eng._admit()
+    assert [r.rid for r in eng.slot_req] == [0, 1]  # FIFO admission
+    assert [r.rid for r in eng.waiting] == [2, 3]
+
+    fin = eng.run_to_completion()
+    rids = [r.rid for r in fin]
+    assert sorted(rids) == [0, 1, 2, 3]
+    assert rids.index(0) < rids.index(1)  # fewer tokens -> retires first
+    assert rids.index(0) < rids.index(2)  # 2 rehosts 0's slot after it frees
+    assert all(len(r.output) == n for r, n in
+               zip(sorted(fin, key=lambda r: r.rid), lens))
+    assert eng.slot_req == [None, None] and not eng.waiting
+
+
+def test_max_new_one_retires_at_admission():
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new=1))
+    fin = eng.run_to_completion()
+    assert len(fin) == 1 and len(fin[0].output) == 1 and fin[0].done
+
+
+def test_device_resident_state_one_sync_shapes():
+    """The tick's host transfer is three (slots,)-vectors; outputs accrue
+    only for slots that were active when the tick ran."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=3, max_seq=32)
+    eng.submit(Request(rid=0, prompt=np.asarray([1, 2], np.int32), max_new=3))
+    eng.step()
+    # slots 1/2 idle: state must keep them inactive with no output
+    active = np.asarray(jax.device_get(eng.state["active"]))
+    assert active.tolist() == [True, False, False]
+    assert len(eng.slot_req[0].output) == 2  # prefill token + one tick
+
+
+# ---------------------------------------------------------------------------
+# Int8 decode path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_channel"])
+def test_int8_decode_matches_fake_quant_reference(granularity):
+    """Serve-mode logits (fused-dequant GEMM off int8 codes) match the
+    train-mode fake-quant fp32 reference within bf16 matmul tolerance."""
+    cfg, params = _model()
+    qs = _quant_state(cfg, params, granularity=granularity)
+    qw, report = export_int_model(params, cfg, qs)
+    assert qw, "no sites exported"
+    assert all(b <= 8 for b in report.values())
+
+    toks = jnp.asarray([3, 7], jnp.int32)
+    cache = tfm.init_cache(cfg, 2, 16)
+    ranges = merge_ranges(qs["betas"], qs["signed"])
+    qc_train = QuantContext(mode="train", cfg=qs["qcfg"], gates=qs["gates"],
+                            ranges=ranges, probes={})
+    lt, _ = tfm.decode_step(qc_train, params, cache, toks, cfg)
+    qc_serve = QuantContext(mode="serve", cfg=qs["qcfg"], gates=qs["gates"],
+                            ranges=ranges, qweights=qw, matmul_impl="ref")
+    ls, _ = tfm.decode_step(qc_serve, params, cache, toks, cfg)
+    lt = np.asarray(lt[..., : cfg.vocab_size])
+    ls = np.asarray(ls[..., : cfg.vocab_size])
+    np.testing.assert_allclose(ls, lt, rtol=5e-2, atol=2e-2)
+
+
+def test_int8_pallas_interpret_matches_ref_path():
+    """The Pallas kernel (interpret) and the jnp reference produce the same
+    serve-mode logits — kernel validation at the model level."""
+    cfg, params = _model()
+    qs = _quant_state(cfg, params)
+    qw, _ = export_int_model(params, cfg, qs)
+    toks = jnp.asarray([11], jnp.int32)
+    cache = tfm.init_cache(cfg, 1, 16)
+    ranges = merge_ranges(qs["betas"], qs["signed"])
+    outs = []
+    for impl in ("ref", "pallas_interpret"):
+        qc = QuantContext(mode="serve", cfg=qs["qcfg"], gates=qs["gates"],
+                          ranges=ranges, qweights=qw, matmul_impl=impl)
+        l, _ = tfm.decode_step(qc, params, cache, toks, cfg)
+        outs.append(np.asarray(l[..., : cfg.vocab_size]))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+
+
+def test_int8_engine_serves_end_to_end():
+    """Full engine pass in serve mode: tokens come off the int8 hot path."""
+    cfg, params = _model()
+    qs = _quant_state(cfg, params)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, quant_state=qs,
+                        matmul_impl="ref")
+    assert len(eng.qweights) >= 8  # attn q/k/v/o + mlp gate/up/down + head
+    rng = np.random.default_rng(4)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (5,)),
+                           max_new=4))
+    fin = eng.run_to_completion()
+    assert len(fin) == 3
+    for r in fin:
+        assert len(r.output) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+
+
+def test_export_skips_high_bit_sites():
+    """Sites whose gate maps above 8 bits are not exported (they'd lose
+    their grid in int8) and serve via the fake-quant fallback instead."""
+    cfg, params = _model()
+    qs = _quant_state(cfg, params, gate_init=4.5)  # T(4.5) = 32 bits
+    qw, report = export_int_model(params, cfg, qs)
+    assert qw == {} and report == {}
+    # engine still runs on the fallback path
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32, quant_state=qs)
+    eng.submit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new=2))
+    fin = eng.run_to_completion()
+    assert len(fin) == 1 and len(fin[0].output) == 2
