@@ -88,11 +88,12 @@ def _data(tier):
     )
 
 
-def _pcfg(tier, log=print):
+def _pcfg(tier, log=print, loop="scan", cgmq_epochs=None):
     ntr, nte, pe, re, ce, bs = TIERS[tier]
     return PipelineConfig(
-        pretrain_epochs=pe, range_epochs=re, cgmq_epochs=ce,
-        batch_size=bs, eval_every=max(1, ce // 3), log=log,
+        pretrain_epochs=pe, range_epochs=re,
+        cgmq_epochs=ce if cgmq_epochs is None else cgmq_epochs,
+        batch_size=bs, eval_every=max(1, ce // 3), loop=loop, log=log,
     )
 
 
@@ -130,6 +131,10 @@ def run_variant(
     bound: float,
     *,
     log=lambda s: None,
+    loop: str = "scan",
+    ckpt_dir: str | None = None,
+    resume: bool = False,
+    cgmq_epochs: int | None = None,
 ) -> Row:
     bundle = get_bundle(tier, gran, log=log)
     train, test = _data(tier)
@@ -138,7 +143,8 @@ def run_variant(
         lenet.forward, bundle, train, test,
         CGMQConfig(budget_rbop=bound, direction=direction,
                    gate_lr=GATE_LR[direction]),
-        _pcfg(tier, log),
+        _pcfg(tier, log, loop, cgmq_epochs),
+        ckpt_dir=ckpt_dir, resume=resume,
     )
     return Row(
         method="CGMQ",

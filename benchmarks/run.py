@@ -5,8 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
 metric) and writes full tables under artifacts/tables/. With ``--json``,
 serving throughput (prefill/decode tok/s, time-to-first-token, prefill
 forward counts vs the seed scan-of-decode-steps) and the kernel micro-bench
-numbers are written to ``BENCH_serving.json`` so the perf trajectory is
-tracked across PRs.
+numbers are written to ``BENCH_serving.json``, and training-engine
+throughput (steps/s, host syncs per epoch, scan vs python-loop speedup) to
+``BENCH_training.json``, so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--tier smoke|quick|paper]
                                             [--skip-tables] [--json [PATH]]
@@ -211,6 +212,76 @@ def bench_serving(tier: str):
 
 
 # ---------------------------------------------------------------------------
+# Training engine throughput (scan epochs vs python-loop reference)
+# ---------------------------------------------------------------------------
+
+
+def bench_training(tier: str):
+    """CGMQ stage-4 throughput on LeNet: jitted-scan epochs vs the per-batch
+    python dispatch reference. Same staging + step functions, so the speedup
+    is pure dispatch/host-sync overhead removed by the scan engine. Two
+    regimes: the tier's batch size (compute-bound: the scan win is small on
+    CPU and grows with dispatch cost) and a small-batch dispatch-bound config
+    where the scan advantage dominates."""
+    from benchmarks.repro_tables import _data, _pcfg, get_bundle
+    from repro.core import bop as bop_lib
+    from repro.core.controller import CGMQConfig
+    from repro.core.pipeline import steps_per_epoch
+    from repro.models import lenet
+    from repro.train import EngineConfig, TrainEngine
+
+    epochs = {"smoke": 6, "quick": 8, "paper": 10}.get(tier, 6)
+    bundle = get_bundle(tier, "layer", log=lambda s: None)
+    train, test = _data(tier)
+    pcfg = _pcfg(tier, log=lambda s: None)
+
+    def _measure(batch_size):
+        spe = steps_per_epoch(train[0].shape[0], batch_size)
+        ccfg = CGMQConfig(budget_rbop=0.02, direction="dir1", gate_lr=0.01,
+                          check_every=spe)
+        res = {"steps_per_epoch": spe, "batch_size": batch_size,
+               "epochs": epochs}
+        for loop in ("scan", "python"):
+            eng = TrainEngine(
+                lenet.forward,
+                EngineConfig(batch_size=batch_size, lr=pcfg.lr,
+                             eval_every=epochs, loop=loop,
+                             log=lambda s: None),
+                qcfg=bundle.qcfg)
+            eng.bind_sites(bundle.sites, bundle.signed)
+            eng.bind_controller(ccfg,
+                                bop_lib.budget_from_rbop(bundle.sites, 0.02))
+            state = eng.init_quant_state(bundle.params, bundle.betas,
+                                         bundle.gates, bundle.probes, seed=0)
+            state, _ = eng.run_stage(state, "cgmq", train, 1)  # compile warmup
+            syncs0 = eng.host_syncs
+            t0 = time.perf_counter()
+            state, _ = eng.run_stage(state, "cgmq", train, 1 + epochs,
+                                     start_epoch=1)
+            dt = time.perf_counter() - t0
+            res[loop] = {
+                "seconds": dt,
+                "steps_per_s": epochs * spe / dt,
+                "host_syncs_per_epoch": (eng.host_syncs - syncs0) / epochs,
+            }
+        res["scan_speedup_x"] = (res["scan"]["steps_per_s"]
+                                 / res["python"]["steps_per_s"])
+        return res
+
+    out = {
+        "compute_bound": _measure(pcfg.batch_size),
+        "dispatch_bound": _measure(8),
+    }
+    for name, res in out.items():
+        print(f"training_scan_{name},"
+              f"{res['scan']['seconds']/epochs/res['steps_per_epoch']*1e6:.0f},"
+              f"steps_per_s={res['scan']['steps_per_s']:.1f};"
+              f"speedup_vs_python_loop={res['scan_speedup_x']:.2f}x;"
+              f"host_syncs_per_epoch={res['scan']['host_syncs_per_epoch']:.2f}")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary (reads dry-run artifacts)
 # ---------------------------------------------------------------------------
 
@@ -252,6 +323,7 @@ def main() -> None:
         "flash_attention": bench_flash_attention(),
     }
     serving = bench_serving(args.tier)
+    training = bench_training(args.tier)
     if not args.skip_tables:
         bench_table1(args.tier)
         bench_table_bounds(args.tier, "layer", 2)
@@ -272,6 +344,18 @@ def main() -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}")
+
+        tpath = "BENCH_training.json"
+        tpayload = {
+            "schema": 1,
+            "tier": args.tier,
+            "backend": jax.default_backend(),
+            "training": training,
+        }
+        with open(tpath, "w") as f:
+            json.dump(tpayload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {tpath}")
 
 
 if __name__ == "__main__":

@@ -129,8 +129,7 @@ def main():
     betas, _ = split_learnable_ranges(ranges)
     # activation ranges carry the calibration; weight betas are learnable and
     # adapt from their placeholder during the CGMQ stage
-    state = steps_lib.TrainState(params=state.params, betas=betas,
-                                 opt=state.opt, cgmq=state.cgmq)
+    state = dataclasses.replace(state, betas=betas)
     print(f"[calibrate] {len(calib)} activation ranges set")
 
     # ---- stage 4: CGMQ under the supervisor ----

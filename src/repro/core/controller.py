@@ -33,7 +33,11 @@ class CGMQConfig:
     budget_rbop: float = 0.004      # relative BOP bound (paper tables: 0.4%..5%)
     direction: str = "dir1"
     gate_lr: float = 0.01           # paper: 0.01 for dir1/dir2, 0.001 for dir3
-    check_every: int = 1            # steps between Sat re-evaluation
+    # Steps between Sat re-evaluation. None = unset: the pipeline defaults it
+    # to steps-per-epoch (paper: end of epoch); a user-set value is honored
+    # everywhere (the seed pipeline silently overwrote it). Direct
+    # controller_update use treats None as 1 (check every step).
+    check_every: int | None = None
     dir_clip: float | None = None   # bound the Unsat direction (off = paper-literal)
     eps: float = 1e-12
 
@@ -103,7 +107,7 @@ def controller_update(
     step = state.step + 1
     # Re-evaluate Sat at the end of each check window; flag applies to the
     # NEXT window (lagged, per the paper).
-    due = (step % cfg.check_every) == 0
+    due = (step % (cfg.check_every or 1)) == 0
     cost = bop_lib.model_bop(sites, new_gates)
     new_sat = jnp.where(due, cost <= budget_bop, state.sat)
     new_bop = jnp.where(due, cost, state.bop)

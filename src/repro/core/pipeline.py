@@ -1,38 +1,42 @@
-"""The four-stage CGMQ pipeline (paper §2.4 / §4.2).
+"""The four-stage CGMQ pipeline (paper §2.4 / §4.2) as a thin stage-sequencer
+over the unified training engine (``repro.train``, DESIGN.md §9).
 
   1. FP32 pretraining                        (paper: 250 epochs)
   2. Range calibration at 32-bit fake quant  (paper: 1 epoch, momentum 0.1)
   3. Range learning                          (paper: 20 epochs)
   4. CGMQ: weights + ranges + gates jointly  (paper: 250 epochs)
 
-Generic over any model exposing ``forward(qc, params, x) -> logits`` and a
-``weight_lookup(params)`` site resolver. Used by the LeNet-5 reproduction,
-the benchmark tables, and (with the LM loss) the LLM-scale examples.
+This module owns only stage ordering, site collection/calibration (stage 2)
+and the bundle/result dataclasses; all actual training — scan-based epochs,
+donated device-resident state, batched eval, one host sync per eval window,
+optional data-parallel sharding and full-state checkpoint/resume — lives in
+``repro.train.TrainEngine``. Generic over any model exposing
+``forward(qc, params, x) -> logits`` and a ``weight_lookup(params)`` site
+resolver; used by the LeNet-5 reproduction, the benchmark tables, and (with
+an LM loss) the LLM-scale examples.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim.adam import AdamConfig, adam, apply_updates
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.train import EngineConfig, TrainEngine, per_example_xent
 
 from . import bop as bop_lib
 from . import controller as ctrl
 from .calibration import apply_act_calibration, calibrate_activations
 from .sites import (
     QuantConfig,
-    QuantContext,
     collect_sites,
     init_gates,
     init_probes,
     init_ranges_from_weights,
-    merge_ranges,
     split_learnable_ranges,
 )
 
@@ -44,17 +48,17 @@ class PipelineConfig:
     cgmq_epochs: int = 250
     batch_size: int = 128
     lr: float = 1e-3          # weights + ranges (paper §4.2)
-    eval_every: int = 10
+    eval_every: int = 10      # epochs per eval window == one host sync
+    loop: str = "scan"        # 'scan' | 'python' (reference loop, same numerics)
     log: Callable[[str], None] = print
 
 
 def cross_entropy(logits, labels):
+    """Legacy scalar-mean loss. NOT valid as an engine ``loss_fn`` (the
+    engine needs per-example losses for tail-batch weighting and will raise
+    if handed a scalar); kept for external callers evaluating a model."""
     logp = jax.nn.log_softmax(logits)
     return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
-
-
-def accuracy(logits, labels):
-    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
 
 
 @dataclasses.dataclass
@@ -98,11 +102,29 @@ class PipelineResult:
 
 
 def _epoch_batches(data, batch_size, rng):
+    """Permuted minibatches INCLUDING the tail partial batch (the seed loop
+    stopped at the last full batch, silently dropping up to batch_size - 1
+    samples per epoch). Host-side; used for calibration streams — training
+    batches are staged on device by the engine (train/engine.stage_epoch)."""
     xs, ys = data
     order = rng.permutation(xs.shape[0])
-    for i in range(0, xs.shape[0] - batch_size + 1, batch_size):
+    for i in range(0, xs.shape[0], batch_size):
         idx = order[i : i + batch_size]
         yield xs[idx], ys[idx]
+
+
+def steps_per_epoch(n_samples: int, batch_size: int) -> int:
+    """ceil — the engine runs the weighted tail batch as a real step."""
+    return max(1, -(-n_samples // batch_size))
+
+
+def _engine(forward, pcfg: PipelineConfig, qcfg, loss_fn, plan) -> TrainEngine:
+    return TrainEngine(
+        forward,
+        EngineConfig(batch_size=pcfg.batch_size, lr=pcfg.lr,
+                     eval_every=pcfg.eval_every, loop=pcfg.loop, log=pcfg.log),
+        qcfg=qcfg, loss_fn=loss_fn, plan=plan,
+    )
 
 
 def prepare_bundle(
@@ -114,52 +136,35 @@ def prepare_bundle(
     qcfg: QuantConfig,
     pcfg: PipelineConfig,
     *,
-    loss_fn: Callable = cross_entropy,
+    loss_fn: Callable = per_example_xent,
     seed: int = 0,
     pretrained_params: Any = None,
+    plan=None,
 ) -> PretrainedBundle:
-    """Stages 1-3: FP32 pretrain -> calibrate -> range learning."""
+    """Stages 1-3: FP32 pretrain -> calibrate -> range learning.
+
+    ``loss_fn(logits, labels) -> (B,)`` per-example losses (engine contract).
+    """
     log = pcfg.log
-    rng = np.random.default_rng(seed)
-    opt_init, opt_update = adam(AdamConfig(lr=pcfg.lr))
+    eng = _engine(forward, pcfg, qcfg, loss_fn, plan)
 
     # ---------------- stage 1: FP32 pretraining ----------------
-    @jax.jit
-    def fp_step(params, opt_state, x, y):
-        def _loss(p):
-            qc = QuantContext(mode="off")
-            return loss_fn(forward(qc, p, x), y)
-
-        loss, grads = jax.value_and_grad(_loss)(params)
-        upd, opt_state = opt_update(grads, opt_state, params)
-        return apply_updates(params, upd), opt_state, loss
-
-    @jax.jit
-    def fp_eval(params, x, y):
-        qc = QuantContext(mode="off")
-        logits = forward(qc, params, x)
-        return accuracy(logits, y)
-
     if pretrained_params is None:
-        opt_state = opt_init(params)
-        t0 = time.time()
-        for epoch in range(pcfg.pretrain_epochs):
-            for x, y in _epoch_batches(train_data, pcfg.batch_size, rng):
-                params, opt_state, loss = fp_step(params, opt_state, x, y)
-            if (epoch + 1) % pcfg.eval_every == 0 or epoch == pcfg.pretrain_epochs - 1:
-                acc = float(fp_eval(params, *test_data))
-                log(f"[pretrain] epoch {epoch+1} loss {float(loss):.4f} acc {acc:.4f}"
-                    f" ({time.time()-t0:.1f}s)")
+        state = eng.shard_state(eng.init_fp_state(params, seed=seed))
+        state, _ = eng.run_stage(state, "fp", train_data, pcfg.pretrain_epochs,
+                                 eval_data=test_data, label="pretrain")
+        params = state.params
     else:
         params = pretrained_params
-    fp32_acc = float(fp_eval(params, *test_data))
+    fp32_acc = eng.eval_accuracy(params, test_data, quant=False)
     log(f"[pretrain] FP32 test accuracy: {fp32_acc:.4f}")
 
     # ---------------- stage 2: site collection + calibration ----------------
     sites = collect_sites(
         lambda qc, p, x: forward(qc, p, x),
         params,
-        jax.ShapeDtypeStruct((pcfg.batch_size,) + train_data[0].shape[1:], jnp.float32),
+        jax.ShapeDtypeStruct((pcfg.batch_size,) + train_data[0].shape[1:],
+                             jnp.float32),
         cfg=qcfg,
     )
     gates = init_gates(sites, qcfg)
@@ -171,7 +176,8 @@ def prepare_bundle(
     ranges = init_ranges_from_weights(sites, qcfg, weight_lookup_fn(params))
 
     calib_batches = (
-        x for x, _ in _epoch_batches(train_data, pcfg.batch_size, rng)
+        x for x, _ in _epoch_batches(train_data, pcfg.batch_size,
+                                     np.random.default_rng(seed))
     )
     act_ranges = calibrate_activations(
         lambda qc, batch: forward(qc, params, batch), calib_batches, qcfg
@@ -182,29 +188,16 @@ def prepare_bundle(
         f"{sum(np.prod(np.shape(g)) if np.ndim(g) else 1 for g in gates.values()):.0f} gates")
 
     # ---------------- stage 3: range learning (32-bit FQ) ----------------
-    @jax.jit
-    def range_step(params, betas, opt_state, x, y):
-        def _loss(pb):
-            p, b = pb
-            qc = QuantContext(
-                mode="train", cfg=qcfg, gates=gates,
-                ranges=merge_ranges(b, signed), probes={},
-            )
-            return loss_fn(forward(qc, p, x), y)
-
-        loss, grads = jax.value_and_grad(_loss)((params, betas))
-        upd, opt_state = opt_update(grads, opt_state, (params, betas))
-        (params, betas) = apply_updates((params, betas), upd)
-        return params, betas, opt_state, loss
-
-    opt_state = opt_init((params, betas))
-    for epoch in range(pcfg.range_epochs):
-        for x, y in _epoch_batches(train_data, pcfg.batch_size, rng):
-            params, betas, opt_state, loss = range_step(params, betas, opt_state, x, y)
-    log(f"[ranges] learned for {pcfg.range_epochs} epochs, loss {float(loss):.4f}")
+    eng.bind_sites(sites, signed)
+    state = eng.shard_state(
+        eng.init_quant_state(params, betas, gates, probes, seed=seed))
+    state, _ = eng.run_stage(state, "range", train_data, pcfg.range_epochs,
+                             label="ranges")
+    log(f"[ranges] learned for {pcfg.range_epochs} epochs")
 
     return PretrainedBundle(
-        params=params, betas=betas, signed=signed, gates=gates, probes=probes,
+        params=state.params, betas=state.betas, signed=signed,
+        gates=state.cgmq.gates, probes=state.probes,
         sites=sites, qcfg=qcfg, fp32_test_acc=fp32_acc,
     )
 
@@ -217,75 +210,70 @@ def run_cgmq_stage(
     ccfg: ctrl.CGMQConfig,
     pcfg: PipelineConfig,
     *,
-    loss_fn: Callable = cross_entropy,
+    loss_fn: Callable = per_example_xent,
     seed: int = 0,
+    plan=None,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    resume: bool = False,
 ) -> PipelineResult:
-    """Stage 4: CGMQ joint training of weights + ranges + gates."""
-    log = pcfg.log
-    rng = np.random.default_rng(seed + 1000)
-    opt_init, opt_update = adam(AdamConfig(lr=pcfg.lr))
-    history = []
-    params, betas = bundle.params, bundle.betas
-    signed, gates, probes = bundle.signed, bundle.gates, bundle.probes
-    sites, qcfg = bundle.sites, bundle.qcfg
+    """Stage 4: CGMQ joint training of weights + ranges + gates.
 
-    budget = bop_lib.budget_from_rbop(sites, ccfg.budget_rbop)
-    state = ctrl.init_state(gates, sites)
-    steps_per_epoch = max(1, train_data[0].shape[0] // pcfg.batch_size)
-    # paper: Sat checked at the END of each epoch
-    ccfg = dataclasses.replace(ccfg, check_every=steps_per_epoch)
+    With ``ckpt_dir`` the full TrainState (gates, Sat/best flags, RNG
+    included) checkpoints every ``ckpt_every`` epochs (default: the eval
+    window) and ``resume=True`` continues a previous run bit-identically.
+    """
+    # paper: Sat checked at the END of each epoch — but only default it when
+    # the user left check_every unset (the seed overwrote user values).
+    spe = steps_per_epoch(train_data[0].shape[0], pcfg.batch_size)
+    if ccfg.check_every is None:
+        ccfg = dataclasses.replace(ccfg, check_every=spe)
 
-    @jax.jit
-    def cgmq_step(params, betas, opt_state, state, x, y):
-        def _loss(pbp):
-            p, b, pr = pbp
-            qc = QuantContext(
-                mode="train", cfg=qcfg, gates=state.gates,
-                ranges=merge_ranges(b, signed), probes=pr,
-            )
-            logits = forward(qc, p, x)
-            return loss_fn(logits, y), (qc.act_stats, qc.weight_stats, logits)
+    budget = bop_lib.budget_from_rbop(bundle.sites, ccfg.budget_rbop)
+    eng = _engine(forward, pcfg, bundle.qcfg, loss_fn, plan)
+    eng.bind_sites(bundle.sites, bundle.signed)
+    eng.bind_controller(ccfg, budget)
 
-        (loss, (astats, wstats, logits)), grads = jax.value_and_grad(
-            _loss, has_aux=True
-        )((params, betas, probes))
-        gp, gb, gprobe = grads
-        upd, opt_state = opt_update((gp, gb), opt_state, (params, betas))
-        (params, betas) = apply_updates((params, betas), upd)
-        state = ctrl.controller_update(
-            state, ccfg, sites, gprobe, wstats, astats, budget
-        )
-        return params, betas, opt_state, state, loss
+    def _init():
+        return eng.init_quant_state(bundle.params, bundle.betas, bundle.gates,
+                                    bundle.probes, seed=seed + 1000)
 
-    @jax.jit
-    def q_eval(params, betas, gates, x, y):
-        qc = QuantContext(
-            mode="train", cfg=qcfg, gates=gates,
-            ranges=merge_ranges(betas, signed), probes={},
-        )
-        return accuracy(forward(qc, params, x), y)
+    ckpt = None
+    start_epoch = 0
+    state = None
+    if resume and ckpt_dir is None:
+        pcfg.log("[cgmq] WARNING: resume requested without a checkpoint dir "
+                 "— starting from epoch 0")
+    if ckpt_dir is not None:
+        ckpt = Checkpointer(ckpt_dir)
+        ckpt_every = ckpt_every or pcfg.eval_every
+        if resume:
+            if ckpt.latest_step() is not None:
+                # restore against an abstract template: no throwaway
+                # allocation of params/moments just to read shapes
+                template = jax.eval_shape(_init)
+                state, start_epoch, _ = ckpt.restore(template)
+                state = eng.shard_state(state)  # restore lands on default dev
+                pcfg.log(f"[cgmq] resumed at epoch {start_epoch}")
+            else:
+                pcfg.log(f"[cgmq] WARNING: resume requested but no checkpoint "
+                         f"in {ckpt_dir} — starting from epoch 0")
+    if state is None:
+        state = eng.shard_state(_init())
 
-    opt_state = opt_init((params, betas))
-    t0 = time.time()
-    for epoch in range(pcfg.cgmq_epochs):
-        for x, y in _epoch_batches(train_data, pcfg.batch_size, rng):
-            params, betas, opt_state, state, loss = cgmq_step(
-                params, betas, opt_state, state, x, y
-            )
-        if (epoch + 1) % pcfg.eval_every == 0 or epoch == pcfg.cgmq_epochs - 1:
-            acc = float(q_eval(params, betas, state.gates, *test_data))
-            cur_rbop = float(state.bop) / bop_lib.fp32_bop(sites)
-            history.append(dict(epoch=epoch + 1, loss=float(loss), acc=acc,
-                                rbop=cur_rbop, sat=bool(state.sat)))
-            log(f"[cgmq] epoch {epoch+1} loss {float(loss):.4f} acc {acc:.4f} "
-                f"rbop {cur_rbop*100:.3f}% sat={bool(state.sat)} "
-                f"({time.time()-t0:.1f}s)")
+    state, history = eng.run_stage(
+        state, "cgmq", train_data, pcfg.cgmq_epochs, eval_data=test_data,
+        label="cgmq", ckpt=ckpt, ckpt_every=ckpt_every,
+        start_epoch=start_epoch)
 
-    final_acc = float(q_eval(params, betas, ctrl.export_gates(state), *test_data))
+    final_acc = eng.eval_accuracy(
+        state.params, test_data, betas=state.betas,
+        gates=ctrl.export_gates(state.cgmq), quant=True)
     return PipelineResult(
-        params=params, betas=betas, signed=signed, state=state, sites=sites,
-        budget_bop=budget, history=history, fp32_test_acc=bundle.fp32_test_acc,
-        final_test_acc=final_acc,
+        params=state.params, betas=state.betas, signed=bundle.signed,
+        state=state.cgmq, sites=bundle.sites,
+        budget_bop=budget, history=history,
+        fp32_test_acc=bundle.fp32_test_acc, final_test_acc=final_acc,
     )
 
 
@@ -299,16 +287,21 @@ def run_pipeline(
     ccfg: ctrl.CGMQConfig,
     pcfg: PipelineConfig,
     *,
-    loss_fn: Callable = cross_entropy,
+    loss_fn: Callable = per_example_xent,
     seed: int = 0,
     pretrained_params: Any = None,
+    plan=None,
+    ckpt_dir: str | None = None,
+    resume: bool = False,
 ) -> PipelineResult:
     """All four stages in sequence (convenience wrapper)."""
     bundle = prepare_bundle(
         forward, weight_lookup_fn, params, train_data, test_data, qcfg, pcfg,
         loss_fn=loss_fn, seed=seed, pretrained_params=pretrained_params,
+        plan=plan,
     )
     return run_cgmq_stage(
         forward, bundle, train_data, test_data, ccfg, pcfg,
-        loss_fn=loss_fn, seed=seed,
+        loss_fn=loss_fn, seed=seed, plan=plan, ckpt_dir=ckpt_dir,
+        resume=resume,
     )

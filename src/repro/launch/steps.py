@@ -5,6 +5,11 @@ forward, vocab-parallel cross-entropy, backward, Adam (optionally 8-bit
 states), learnable-range update, and the CGMQ gate/controller update — this
 is the graph the multi-pod dry-run lowers and the roofline reads.
 
+State is the unified ``repro.train.TrainState`` (DESIGN.md §9) — the same
+pytree the classification pipeline's scan engine carries — so gates,
+controller flags, probes, RNG and the step counter all checkpoint/restore
+together, and the LeNet and LLM stacks share one resumable state layout.
+
 Distribution is GSPMD: parameters/batch carry NamedShardings (from
 ``ShardingPlan``), activations are constrained at block boundaries inside the
 models, and two vocab-sharded primitives are written with ``shard_map``
@@ -41,6 +46,7 @@ from repro.distributed.sharding import ShardingPlan
 from repro.models import transformer as tfm
 from repro.models.layers import COMPUTE_DTYPE
 from repro.optim.adam import AdamConfig, AdamState, adam, apply_updates
+from repro.train.state import TrainState
 
 
 # ---------------------------------------------------------------------------
@@ -124,24 +130,9 @@ def vocab_parallel_xent(plan: ShardingPlan | None, logits, targets, vocab: int):
 
 
 # ---------------------------------------------------------------------------
-# State
+# State: TrainState is the unified pytree from repro.train.state, imported
+# above so both training stacks share one resumable layout.
 # ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class TrainState:
-    params: Any
-    betas: Any
-    opt: AdamState
-    cgmq: ctrl.CGMQState
-
-    def tree_flatten(self):
-        return (self.params, self.betas, self.opt, self.cgmq), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
 
 
 @dataclasses.dataclass
@@ -229,6 +220,15 @@ def _abstract_batch(cfg: ModelConfig, b: int, s: int, *, targets=True):
     return out
 
 
+def init_probe_taps(recipe: Recipe, gates) -> dict:
+    """Activation probes + weight gradient taps, sized from the gates."""
+    probes = init_probes(recipe.sites, recipe.qcfg)
+    for s in recipe.sites.values():
+        probes[s.name + ".w"] = jnp.zeros_like(
+            jnp.asarray(gates[s.name + ".w"], jnp.float32))
+    return probes
+
+
 def init_train_state(recipe: Recipe, key) -> TrainState:
     """Concrete (or eval_shape-able) state initializer."""
     cfg = recipe.cfg
@@ -239,7 +239,10 @@ def init_train_state(recipe: Recipe, key) -> TrainState:
     opt_init, _ = adam(recipe.adam)
     opt = opt_init((params, betas))
     cgmq = ctrl.init_state(gates, recipe.sites)
-    return TrainState(params=params, betas=betas, opt=opt, cgmq=cgmq)
+    return TrainState(params=params, betas=betas, opt=opt, cgmq=cgmq,
+                      probes=init_probe_taps(recipe, gates),
+                      rng=jax.random.fold_in(key, 1),
+                      step=jnp.zeros((), jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -281,10 +284,10 @@ def make_train_step(recipe: Recipe, plan: ShardingPlan | None):
     mb = recipe.microbatches
 
     def train_step(state: TrainState, batch: dict):
-        probes = init_probes(recipe.sites, recipe.qcfg)
-        for s in recipe.sites.values():
-            probes[s.name + ".w"] = jnp.zeros_like(
-                jnp.asarray(state.cgmq.gates[s.name + ".w"], jnp.float32))
+        # probe taps travel in the state (always zero; only their gradients
+        # are read); ad-hoc states from before the unified layout still work
+        probes = state.probes if state.probes is not None else init_probe_taps(
+            recipe, state.cgmq.gates)
 
         def loss_fn(params, betas, probes, mb_batch):
             if recipe.gather_dtype is not None:
@@ -354,7 +357,11 @@ def make_train_step(recipe: Recipe, plan: ShardingPlan | None):
             "rbop": cgmq.bop / bop_lib.fp32_bop(recipe.sites),
             "sat": cgmq.sat,
         }
-        return TrainState(params=params, betas=betas, opt=opt, cgmq=cgmq), metrics
+        new = TrainState(
+            params=params, betas=betas, opt=opt, cgmq=cgmq, probes=probes,
+            rng=state.rng,
+            step=None if state.step is None else state.step + 1)
+        return new, metrics
 
     return train_step
 
@@ -489,7 +496,9 @@ def train_state_shardings(recipe: Recipe, state_sds: TrainState,
         v_sh = params_shardings_like(plan, state_sds.opt.v, params_sh, betas_sh)
     opt_sh = AdamState(step=plan.named(P()), m=m_sh, v=v_sh)
     return TrainState(params=params_sh, betas=betas_sh, opt=opt_sh,
-                      cgmq=cgmq_sh)
+                      cgmq=cgmq_sh,
+                      probes=plan.replicated(state_sds.probes),
+                      rng=plan.named(P()), step=plan.named(P()))
 
 
 def params_shardings_like(plan, opt_tree, params_sh, betas_sh):

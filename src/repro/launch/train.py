@@ -5,6 +5,11 @@ coordinator address (see scripts/launch_pod.sh); ``jax.distributed`` then
 assembles the global device mesh. On this single-process container it runs
 the same code path on the local devices.
 
+State is the unified ``repro.train.TrainState`` (DESIGN.md §9): the
+supervisor checkpoints the whole pytree — params, betas, Adam moments,
+gates, controller flags, probes, RNG, step — so a restarted run resumes the
+exact trajectory, including the §3 last-certified-snapshot guarantee.
+
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b-smoke \
         --steps 50 --batch 8 --seq 64 --ckpt /tmp/ck
 """

@@ -42,10 +42,27 @@ def init_params(key) -> dict:
 
 
 def _conv(x, w, padding):
-    return jax.lax.conv_general_dilated(
-        x, w, window_strides=(1, 1), padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
+    """im2col conv: window gather + ONE matmul (exact vs lax.conv).
+
+    Matmul form keeps the backward pass gather/GEMM-only, which (a) is
+    MXU-shaped on TPU like every other site in this repo and (b) stays fast
+    inside ``lax.scan`` epochs — XLA:CPU compiles convolutions in a While
+    body ~2x slower than at top level, which made scan epochs lose to the
+    python loop before this change (see DESIGN.md §9).
+    """
+    kh, kw, cin, cout = w.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        x = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    b, hh, ww, _ = x.shape
+    oh, ow = hh - kh + 1, ww - kw + 1
+    ii = jnp.arange(oh)[:, None] + jnp.arange(kh)[None, :]
+    jj = jnp.arange(ow)[:, None] + jnp.arange(kw)[None, :]
+    pats = x[:, ii][:, :, :, jj]               # (B, OH, KH, OW, KW, C)
+    pats = pats.transpose(0, 1, 3, 2, 4, 5)    # (B, OH, OW, KH, KW, C)
+    out = pats.reshape(b * oh * ow, kh * kw * cin) @ w.reshape(kh * kw * cin,
+                                                               cout)
+    return out.reshape(b, oh, ow, cout)
 
 
 def _maxpool2(x):

@@ -1,0 +1,31 @@
+"""Unified device-resident CGMQ training engine (DESIGN.md §9).
+
+One ``TrainState`` pytree and one ``TrainEngine`` drive every stage of the
+paper's four-stage pipeline as well as the LLM-scale steps in
+``launch/steps.py``. Epochs run as a jitted ``lax.scan`` over pre-staged,
+pre-permuted device batches; the host syncs once per eval window.
+"""
+
+from .engine import (
+    EngineConfig,
+    TrainEngine,
+    masked_accuracy,
+    masked_mean,
+    per_example_xent,
+    restore_state,
+    save_state,
+    stage_epoch,
+)
+from .state import TrainState
+
+__all__ = [
+    "EngineConfig",
+    "TrainEngine",
+    "TrainState",
+    "masked_accuracy",
+    "masked_mean",
+    "per_example_xent",
+    "restore_state",
+    "save_state",
+    "stage_epoch",
+]

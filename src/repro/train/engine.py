@@ -1,0 +1,449 @@
+"""Device-resident training engine for all four CGMQ pipeline stages.
+
+One engine drives FP32 pretraining ("fp"), range learning ("range") and the
+CGMQ joint stage ("cgmq") from the same unified ``TrainState``
+(``train/state.py``); stage 2 (calibration) is a forward-only pass the
+sequencer (``core/pipeline.py``) runs between them. Contract (DESIGN.md §9):
+
+  * **Scan epochs.** An epoch is ONE jitted computation: the permutation is
+    drawn on device from ``state.rng``, the dataset is gathered into
+    ``(num_batches, batch, ...)`` staged batches, and ``jax.lax.scan`` runs
+    the step over them with the ``TrainState`` as the (donated) carry.
+    Metrics accumulate in the carry; nothing crosses to the host inside an
+    epoch.
+  * **Tail batches.** ``ceil(N / B)`` batches per epoch; the final batch is
+    padded with repeated samples carrying zero weight, so every sample
+    contributes exactly once (the legacy python loop dropped up to ``B - 1``
+    samples per epoch). Losses/metrics are weighted means.
+  * **Host-sync model.** The outer loop dispatches ``eval_every`` epochs
+    asynchronously and then performs exactly ONE ``device_get`` per eval
+    window (metrics + batched eval accuracy together). ``host_syncs`` counts
+    them; tests assert one sync per window.
+  * **Loop modes.** ``loop="scan"`` (default) and ``loop="python"`` — the
+    per-batch dispatch reference. Both share the same staging and step
+    functions, so trajectories are numerically identical; the python mode
+    exists as the equivalence oracle and the benchmark baseline.
+  * **Sharding.** An optional ``ShardingPlan`` data-parallel-shards the
+    staged batches (state is replicated); model code is unchanged.
+  * **Checkpointing.** ``save_state`` / ``restore_state`` persist the whole
+    ``TrainState`` — params, betas, Adam moments, gates, Sat/best flags,
+    probes, RNG, step — through ``checkpoint/checkpointer.py``, so a resumed
+    run replays the uninterrupted trajectory bit-for-bit and preserves the
+    §3 satisfaction guarantee (the last certified snapshot travels with the
+    state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bop as bop_lib
+from repro.core import controller as ctrl
+from repro.core.sites import QuantConfig, QuantContext, merge_ranges
+from repro.optim.adam import AdamConfig, adam, apply_updates
+
+from .state import TrainState
+
+STAGES = ("fp", "range", "cgmq")
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics (weighted: ``w`` is 1 for real samples, 0 for tail padding)
+# ---------------------------------------------------------------------------
+
+
+def per_example_xent(logits, labels):
+    """Per-example cross entropy, shape (B,). The engine's loss contract is
+    per-example so tail-padding weights can mask before the mean."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+
+
+def masked_mean(values, weights):
+    if jnp.ndim(values) == 0:
+        raise ValueError(
+            "engine loss_fn must return PER-EXAMPLE losses of shape (B,) so "
+            "tail-padding weights can mask them (got a scalar — a legacy "
+            "mean loss like pipeline.cross_entropy; use per_example_xent)")
+    return jnp.sum(values * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def masked_accuracy(logits, labels, weights):
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return masked_mean(hit, weights)
+
+
+# ---------------------------------------------------------------------------
+# Batch staging (jit-safe; shared by scan epochs, python epochs and eval)
+# ---------------------------------------------------------------------------
+
+
+def stage_epoch(rng, xs, ys, batch_size: int, *, plan=None):
+    """Stage one epoch: ``(nb, B, ...)`` batches + per-sample weights.
+
+    ``nb = ceil(N / B)``; the tail batch is padded by repeating the head of
+    the permutation with weight 0, so every sample is seen exactly once.
+    ``rng=None`` skips the permutation (eval order). Returns
+    ``(bx, by, bw, new_rng)``.
+    """
+    n = int(xs.shape[0])
+    b = int(batch_size)
+    nb = -(-n // b)
+    pad = nb * b - n
+    if rng is None:
+        idx = jnp.arange(n)
+    else:
+        rng, sub = jax.random.split(rng)
+        idx = jax.random.permutation(sub, n)
+    if pad:
+        # jnp.resize cycles, so this also covers pad > n (dataset smaller
+        # than half a batch) where a plain idx[:pad] would under-fill
+        idx = jnp.concatenate([idx, jnp.resize(idx, (pad,))])
+    w = jnp.concatenate(
+        [jnp.ones((n,), jnp.float32), jnp.zeros((pad,), jnp.float32)]
+    ) if pad else jnp.ones((n,), jnp.float32)
+    bx = xs[idx].reshape((nb, b) + xs.shape[1:])
+    by = ys[idx].reshape((nb, b) + ys.shape[1:])
+    bw = w.reshape(nb, b)
+    if plan is not None and b % plan.dp_size == 0:
+        from jax.sharding import PartitionSpec as P
+
+        def _c(t):
+            spec = P(None, plan.batch_axes, *((None,) * (t.ndim - 2)))
+            return jax.lax.with_sharding_constraint(t, plan.named(spec))
+
+        bx, by, bw = _c(bx), _c(by), _c(bw)
+    return bx, by, bw, rng
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_size: int = 128
+    lr: float = 1e-3
+    eval_every: int = 10      # epochs per host sync / eval window
+    loop: str = "scan"        # 'scan' | 'python' (per-batch dispatch reference)
+    log: Callable[[str], None] = print
+
+    def __post_init__(self):
+        assert self.loop in ("scan", "python"), self.loop
+
+
+class TrainEngine:
+    """See module docstring. ``forward(qc, params, x) -> logits``."""
+
+    def __init__(
+        self,
+        forward: Callable,
+        ecfg: EngineConfig,
+        *,
+        qcfg: QuantConfig | None = None,
+        loss_fn: Callable = per_example_xent,
+        plan=None,
+        adam_cfg: AdamConfig | None = None,
+    ):
+        self.forward = forward
+        self.ecfg = ecfg
+        self.qcfg = qcfg or QuantConfig()
+        self.loss_fn = loss_fn
+        self.plan = plan
+        if plan is not None and ecfg.batch_size % plan.dp_size != 0:
+            ecfg.log(f"[engine] WARNING: batch_size {ecfg.batch_size} not "
+                     f"divisible by dp_size {plan.dp_size} — staged batches "
+                     "will NOT be data-parallel sharded")
+        self.adam_cfg = adam_cfg or AdamConfig(lr=ecfg.lr)
+        self._adam_init, self._adam_update = adam(self.adam_cfg)
+        # bound after site collection (stage 2):
+        self.sites: dict | None = None
+        self.signed: dict = {}
+        self.ccfg: ctrl.CGMQConfig | None = None
+        self.budget_bop: float | None = None
+        self.fp32_bop: float | None = None
+        # host-transfer ledger: run_stage performs exactly one per eval window
+        self.host_syncs = 0
+        self._jitted: dict = {}
+
+    # ---- binding / state construction ------------------------------------
+    def bind_sites(self, sites: dict, signed: dict):
+        self.sites = sites
+        self.signed = signed
+        self.fp32_bop = bop_lib.fp32_bop(sites)
+
+    def bind_controller(self, ccfg: ctrl.CGMQConfig, budget_bop: float):
+        assert ccfg.check_every, "resolve check_every before binding"
+        self.ccfg = ccfg
+        self.budget_bop = budget_bop
+
+    @staticmethod
+    def _own(tree):
+        """Materialized copy: epoch calls DONATE the state, so the engine
+        must never put caller-owned buffers (e.g. a shared PretrainedBundle's
+        params/gates) into the carry."""
+        return jax.tree.map(lambda x: jnp.array(x, copy=True), tree)
+
+    def init_fp_state(self, params, *, seed: int = 0) -> TrainState:
+        """Stage-1 state: no sites exist yet, so betas/probes are empty."""
+        params = self._own(params)
+        return TrainState(
+            params=params, betas={}, opt=self._adam_init((params, {})),
+            cgmq=None, probes={}, rng=jax.random.PRNGKey(seed),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def init_quant_state(self, params, betas, gates, probes, *,
+                         seed: int = 0) -> TrainState:
+        """Stage-3/4 state (fresh optimizer + controller, per paper §4.2)."""
+        assert self.sites is not None, "bind_sites first"
+        params, betas, gates, probes = self._own((params, betas, gates, probes))
+        return TrainState(
+            params=params, betas=betas,
+            opt=self._adam_init((params, betas)),
+            cgmq=ctrl.init_state(gates, self.sites),
+            probes=probes, rng=jax.random.PRNGKey(seed),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def shard_state(self, state: TrainState) -> TrainState:
+        """Replicate the state across the plan's mesh (data-parallel mode)."""
+        if self.plan is None:
+            return state
+        return jax.tree.map(
+            lambda x: jax.device_put(x, self.plan.replicated(x)), state)
+
+    # ---- step / epoch builders -------------------------------------------
+    def _make_step(self, stage: str):
+        assert stage in STAGES, stage
+        use_quant = stage != "fp"
+        use_ctrl = stage == "cgmq"
+
+        def step(state: TrainState, x, y, w):
+            def _loss(pbp):
+                p, b, pr = pbp
+                if use_quant:
+                    qc = QuantContext(
+                        mode="train", cfg=self.qcfg, gates=state.cgmq.gates,
+                        ranges=merge_ranges(b, self.signed), probes=pr,
+                    )
+                else:
+                    qc = QuantContext(mode="off")
+                logits = self.forward(qc, p, x)
+                loss = masked_mean(self.loss_fn(logits, y), w)
+                return loss, (qc.act_stats, qc.weight_stats)
+
+            (loss, (astats, wstats)), grads = jax.value_and_grad(
+                _loss, has_aux=True
+            )((state.params, state.betas, state.probes))
+            gp, gb, gprobe = grads
+            upd, opt = self._adam_update(
+                (gp, gb), state.opt, (state.params, state.betas))
+            params, betas = apply_updates((state.params, state.betas), upd)
+            cgmq = state.cgmq
+            if use_ctrl:
+                cgmq = ctrl.controller_update(
+                    state.cgmq, self.ccfg, self.sites, gprobe, wstats, astats,
+                    self.budget_bop,
+                )
+            new = TrainState(
+                params=params, betas=betas, opt=opt, cgmq=cgmq,
+                probes=state.probes, rng=state.rng, step=state.step + 1,
+            )
+            return new, loss, jnp.sum(w)
+
+        return step
+
+    def _make_epoch(self, stage: str):
+        step = self._make_step(stage)
+
+        def epoch(state: TrainState, xs, ys):
+            bx, by, bw, rng = stage_epoch(
+                state.rng, xs, ys, self.ecfg.batch_size, plan=self.plan)
+            state = dataclasses.replace(state, rng=rng)
+
+            def body(carry, batch):
+                st, lsum, wsum = carry
+                x, y, w = batch
+                st, loss, bws = step(st, x, y, w)
+                return (st, lsum + loss * bws, wsum + bws), None
+
+            zero = jnp.zeros((), jnp.float32)
+            (state, lsum, wsum), _ = jax.lax.scan(
+                body, (state, zero, zero), (bx, by, bw))
+            return state, self._epoch_metrics(stage, state,
+                                              lsum / jnp.maximum(wsum, 1.0))
+
+        return epoch
+
+    def _epoch_metrics(self, stage, state, loss):
+        m = {"loss": loss}
+        if stage == "cgmq":
+            m["bop"] = state.cgmq.bop
+            m["sat"] = state.cgmq.sat
+        return m
+
+    def _jit(self, key, builder, **kw):
+        if key not in self._jitted:
+            self._jitted[key] = jax.jit(builder(), **kw)
+        return self._jitted[key]
+
+    def _scan_epoch_fn(self, stage):
+        return self._jit(("epoch", stage), lambda: self._make_epoch(stage),
+                         donate_argnums=(0,))
+
+    def _stage_fn(self):
+        b = self.ecfg.batch_size
+        return self._jit(
+            ("stage",),
+            lambda: (lambda rng, xs, ys:
+                     stage_epoch(rng, xs, ys, b, plan=self.plan)))
+
+    def _step_fn(self, stage):
+        return self._jit(("step", stage), lambda: self._make_step(stage),
+                         donate_argnums=(0,))
+
+    def _python_epoch(self, stage, state, xs, ys):
+        """Per-batch dispatch reference: identical staging + step functions,
+        so the trajectory matches the scan epoch; only dispatch differs."""
+        bx, by, bw, rng = self._stage_fn()(state.rng, xs, ys)
+        state = dataclasses.replace(state, rng=rng)
+        step = self._step_fn(stage)
+        lsum = jnp.zeros((), jnp.float32)
+        wsum = jnp.zeros((), jnp.float32)
+        for i in range(bx.shape[0]):
+            state, loss, bws = step(state, bx[i], by[i], bw[i])
+            lsum = lsum + loss * bws
+            wsum = wsum + bws
+        return state, self._epoch_metrics(stage, state,
+                                          lsum / jnp.maximum(wsum, 1.0))
+
+    # ---- batched eval -----------------------------------------------------
+    def _make_eval(self, quant: bool):
+        def ev(params, betas, gates, xs, ys):
+            bx, by, bw, _ = stage_epoch(None, xs, ys, self.ecfg.batch_size,
+                                        plan=self.plan)
+
+            def body(carry, batch):
+                x, y, w = batch
+                if quant:
+                    qc = QuantContext(
+                        mode="train", cfg=self.qcfg, gates=gates,
+                        ranges=merge_ranges(betas, self.signed), probes={},
+                    )
+                else:
+                    qc = QuantContext(mode="off")
+                logits = self.forward(qc, params, x)
+                hit = jnp.sum(
+                    (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32) * w)
+                return (carry[0] + hit, carry[1] + jnp.sum(w)), None
+
+            zero = jnp.zeros((), jnp.float32)
+            (hits, tot), _ = jax.lax.scan(body, (zero, zero), (bx, by, bw))
+            return hits / jnp.maximum(tot, 1.0)
+
+        return ev
+
+    def eval_device(self, params, data, *, betas=None, gates=None,
+                    quant: bool = False):
+        """Batched test-set accuracy as a DEVICE scalar (no host sync) — the
+        full-test-set single forward of the seed OOMed beyond toy scale."""
+        fn = self._jit(("eval", quant), lambda: self._make_eval(quant))
+        return fn(params, betas if betas is not None else {},
+                  gates if gates is not None else {}, *data)
+
+    def eval_accuracy(self, params, data, *, betas=None, gates=None,
+                      quant: bool = False) -> float:
+        return float(self._sync(self.eval_device(
+            params, data, betas=betas, gates=gates, quant=quant)))
+
+    # ---- outer loop --------------------------------------------------------
+    def _sync(self, tree):
+        """The engine's ONLY host-transfer point."""
+        self.host_syncs += 1
+        return jax.device_get(tree)
+
+    def run_stage(self, state: TrainState, stage: str, train_data, epochs: int,
+                  *, eval_data=None, label: str | None = None, ckpt=None,
+                  ckpt_every: int = 0, start_epoch: int = 0):
+        """Run ``epochs`` epochs of ``stage``; one host sync per eval window.
+
+        Returns ``(state, history)`` where history has one entry per window.
+        Windows are aligned to absolute ``eval_every`` boundaries so a run
+        resumed from ``start_epoch`` replays the same sync/checkpoint points.
+        """
+        xs, ys = train_data
+        label = label or stage
+        log = self.ecfg.log
+        history: list[dict] = []
+        t0 = time.time()
+        saving = ckpt is not None and ckpt_every
+        e = start_epoch
+        while e < epochs:
+            # dispatch up to the next eval OR checkpoint boundary (a ckpt
+            # cadence finer than the eval window is honored; saving moves
+            # arrays to host anyway, but metrics sync only at eval windows)
+            nxt = e + min(self.ecfg.eval_every - (e % self.ecfg.eval_every),
+                          epochs - e)
+            if saving:
+                nxt = min(nxt, e + ckpt_every - (e % ckpt_every))
+            while e < nxt:
+                if self.ecfg.loop == "scan":
+                    state, metrics = self._scan_epoch_fn(stage)(state, xs, ys)
+                else:
+                    state, metrics = self._python_epoch(stage, state, xs, ys)
+                e += 1
+            if e % self.ecfg.eval_every == 0 or e == epochs:
+                payload = dict(metrics)
+                if eval_data is not None:
+                    payload["acc"] = self.eval_device(
+                        state.params, eval_data, betas=state.betas,
+                        gates=None if stage == "fp" else state.cgmq.gates,
+                        quant=stage != "fp")
+                host = self._sync(payload)  # ONE transfer per eval window
+                entry: dict[str, Any] = {"epoch": e,
+                                         "loss": float(host["loss"])}
+                msg = f"[{label}] epoch {e} loss {entry['loss']:.4f}"
+                if "acc" in host:
+                    entry["acc"] = float(host["acc"])
+                    msg += f" acc {entry['acc']:.4f}"
+                if stage == "cgmq":
+                    entry["rbop"] = float(host["bop"]) / self.fp32_bop
+                    entry["sat"] = bool(host["sat"])
+                    msg += f" rbop {entry['rbop']*100:.3f}% sat={entry['sat']}"
+                history.append(entry)
+                log(msg + f" ({time.time()-t0:.1f}s)")
+            if saving and (e % ckpt_every == 0 or e == epochs):
+                # intermediate saves are async (Checkpointer snapshots to
+                # host before returning, so the donated state can keep
+                # mutating); the final save blocks so it survives process
+                # exit
+                save_state(ckpt, e, state,
+                           extra={"stage": stage, "epoch": e},
+                           blocking=e == epochs)
+        return state, history
+
+
+# ---------------------------------------------------------------------------
+# Full-state checkpointing (gates + controller flags + RNG included)
+# ---------------------------------------------------------------------------
+
+
+def save_state(ckpt, step: int, state: TrainState, *, extra: dict | None = None,
+               blocking: bool = True):
+    """Persist the whole TrainState at ``step`` (epoch for the pipeline)."""
+    ckpt.save(step, state, blocking=blocking, extra=extra)
+
+
+def restore_state(ckpt, template: TrainState, *, step: int | None = None,
+                  shardings=None):
+    """Restore a TrainState saved by ``save_state``; returns
+    ``(state, step, extra)``. ``template`` provides structure/shapes only."""
+    return ckpt.restore(jax.eval_shape(lambda: template), step=step,
+                        shardings=shardings)

@@ -1,0 +1,57 @@
+"""The one TrainState pytree shared by every training stack (DESIGN.md §9).
+
+Layout (all leaves are device arrays; ``None`` marks a field a stage does not
+use — e.g. ``cgmq`` during FP32 pretraining before sites exist):
+
+  params  model parameters (any pytree)
+  betas   learnable quantization ranges, keyed ``<site>.w`` / ``<site>.a``
+          (the static ``signed`` half of a range lives in the engine/recipe,
+          not in state — it is a python bool map, not an array)
+  opt     AdamState over ``(params, betas)``
+  cgmq    controller state: gates, lagged Sat flag, BOP at last check, the
+          last *certified* gate snapshot and its validity flag (paper §3)
+  probes  zero-valued gradient taps (never updated; their gradients feed the
+          controller's direction statistics)
+  rng     PRNG key driving epoch permutations — carrying it in state is what
+          makes a restored run replay the exact batch order of the
+          uninterrupted one
+  step    global step counter (int32), monotonic across stages
+
+Checkpointing the whole state through ``checkpoint/checkpointer.py``
+therefore preserves gate trajectories, controller flags and data order:
+a resumed run is bit-identical to an uninterrupted one
+(tests/test_train_engine.py).
+
+Note: checkpoints written before this unified layout (the old 4-field
+``launch/steps.TrainState`` without probes/rng/step) are not restorable —
+``Checkpointer.restore`` reports the missing arrays; rerun from scratch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    betas: Any
+    opt: Any
+    cgmq: Any = None
+    probes: Any = None
+    rng: Any = None
+    step: Any = None
+
+    def tree_flatten(self):
+        return (
+            self.params, self.betas, self.opt, self.cgmq,
+            self.probes, self.rng, self.step,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)

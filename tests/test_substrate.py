@@ -156,11 +156,10 @@ def test_straggler_detector():
 def test_compressed_psum_exact_mean_and_error_feedback():
     # runs on 1 device: psum over a size-1 'pod' axis via shard_map on a
     # trivial mesh still exercises quantize/dequant + EF bookkeeping
-    from jax.sharding import AxisType
-
+    from repro.launch.mesh import make_test_mesh
     from repro.optim.compression import init_residuals, make_compressed_pod_psum
 
-    mesh = jax.make_mesh((1,), ("pod",), axis_types=(AxisType.Auto,))
+    mesh = make_test_mesh((1,), ("pod",))
     f = make_compressed_pod_psum(mesh)
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(40, 30)),
                           jnp.float32)}

@@ -1,0 +1,389 @@
+"""Unified training engine (repro.train, DESIGN.md §9).
+
+Covers the scan-epoch contract: scan == python-loop numerics, tail batches
+kept, one host sync per eval window, full-state checkpoint/resume
+bit-identity, and user-set ``check_every`` being honored.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bop as bop_lib
+from repro.core import controller as ctrl
+from repro.core.controller import CGMQConfig
+from repro.core.pipeline import (
+    PipelineConfig,
+    prepare_bundle,
+    run_cgmq_stage,
+    steps_per_epoch,
+)
+from repro.core.sites import QuantConfig
+from repro.data.synthetic import digits
+from repro.models import lenet
+from repro.train import (
+    EngineConfig,
+    TrainEngine,
+    restore_state,
+    save_state,
+    stage_epoch,
+)
+
+BATCH = 64
+
+
+@pytest.fixture(scope="module")
+def tiny_digits():
+    xtr, ytr = digits(300, split="train")   # 300 = 4 full batches + tail of 44
+    xte, yte = digits(120, split="test")
+    return (
+        (jnp.asarray(xtr), jnp.asarray(ytr)),
+        (jnp.asarray(xte), jnp.asarray(yte)),
+    )
+
+
+@pytest.fixture(scope="module")
+def tiny_bundle(tiny_digits):
+    train, test = tiny_digits
+    params = lenet.init_params(jax.random.PRNGKey(0))
+    return prepare_bundle(
+        lenet.forward, lenet.weight_lookup, params, train, test,
+        QuantConfig(), _pcfg(), seed=0,
+    )
+
+
+def _pcfg(**kw):
+    base = dict(pretrain_epochs=2, range_epochs=1, cgmq_epochs=6,
+                batch_size=BATCH, eval_every=2, log=lambda s: None)
+    base.update(kw)
+    return PipelineConfig(**base)
+
+
+def _engine(bundle, loop, ccfg):
+    eng = TrainEngine(
+        lenet.forward,
+        EngineConfig(batch_size=BATCH, lr=1e-3, eval_every=2, loop=loop,
+                     log=lambda s: None),
+        qcfg=bundle.qcfg)
+    eng.bind_sites(bundle.sites, bundle.signed)
+    eng.bind_controller(ccfg, bop_lib.budget_from_rbop(bundle.sites,
+                                                       ccfg.budget_rbop))
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# Batch staging: tail batches kept
+# ---------------------------------------------------------------------------
+
+
+def test_stage_epoch_keeps_tail_batch():
+    """ceil(N/B) batches; every sample appears exactly once with weight 1
+    (the seed loop dropped the tail partial batch)."""
+    xs = jnp.arange(10, dtype=jnp.float32)[:, None]
+    ys = jnp.arange(10, dtype=jnp.int32)
+    bx, by, bw, _ = stage_epoch(jax.random.PRNGKey(0), xs, ys, 4)
+    assert bx.shape == (3, 4, 1) and bw.shape == (3, 4)
+    assert float(jnp.sum(bw)) == 10.0
+    real = np.asarray(by).ravel()[np.asarray(bw).ravel() == 1.0]
+    assert sorted(real.tolist()) == list(range(10))
+
+
+def test_stage_epoch_dataset_smaller_than_batch():
+    """pad > N (dataset smaller than half a batch): padding cycles the
+    permutation instead of under-filling the reshape."""
+    xs = jnp.arange(10, dtype=jnp.float32)[:, None]
+    ys = jnp.arange(10, dtype=jnp.int32)
+    bx, by, bw, _ = stage_epoch(jax.random.PRNGKey(0), xs, ys, 64)
+    assert bx.shape == (1, 64, 1)
+    assert float(jnp.sum(bw)) == 10.0
+    real = np.asarray(by).ravel()[np.asarray(bw).ravel() == 1.0]
+    assert sorted(real.tolist()) == list(range(10))
+
+
+def test_engine_rejects_scalar_mean_loss(tiny_bundle, tiny_digits):
+    """A legacy scalar-mean loss (pipeline.cross_entropy) must error loudly
+    instead of silently training on tail-padding duplicates."""
+    from repro.core.pipeline import cross_entropy
+
+    train, test = tiny_digits
+    eng = TrainEngine(
+        lenet.forward,
+        EngineConfig(batch_size=BATCH, eval_every=2, log=lambda s: None),
+        qcfg=tiny_bundle.qcfg, loss_fn=cross_entropy)
+    eng.bind_sites(tiny_bundle.sites, tiny_bundle.signed)
+    state = eng.init_quant_state(tiny_bundle.params, tiny_bundle.betas,
+                                 tiny_bundle.gates, tiny_bundle.probes)
+    with pytest.raises(ValueError, match="PER-EXAMPLE"):
+        eng.run_stage(state, "range", train, 1)
+
+
+def test_stage_epoch_full_batches_unweighted():
+    xs = jnp.zeros((8, 2))
+    ys = jnp.zeros((8,), jnp.int32)
+    bx, by, bw, _ = stage_epoch(jax.random.PRNGKey(0), xs, ys, 4)
+    assert bx.shape == (2, 4, 2)
+    assert float(jnp.min(bw)) == 1.0
+
+
+def test_eval_is_batched_and_matches_full_forward(tiny_bundle, tiny_digits):
+    _, test = tiny_digits
+    eng = _engine(tiny_bundle, "scan", CGMQConfig(check_every=5))
+    acc = eng.eval_accuracy(tiny_bundle.params, test, quant=False)
+    from repro.core.sites import QuantContext
+
+    logits = lenet.forward(QuantContext(mode="off"), tiny_bundle.params,
+                           test[0])
+    want = float(jnp.mean((jnp.argmax(logits, -1) == test[1])
+                          .astype(jnp.float32)))
+    assert abs(acc - want) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Scan == python-loop reference (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _run_cgmq(bundle, train, test, loop, epochs=4):
+    ccfg = CGMQConfig(budget_rbop=0.02, direction="dir1", gate_lr=0.01,
+                      check_every=steps_per_epoch(train[0].shape[0], BATCH))
+    eng = _engine(bundle, loop, ccfg)
+    state = eng.init_quant_state(bundle.params, bundle.betas, bundle.gates,
+                                 bundle.probes, seed=7)
+    state, history = eng.run_stage(state, "cgmq", train, epochs,
+                                   eval_data=test)
+    return eng, state, history
+
+
+def test_scan_epoch_matches_python_loop(tiny_bundle, tiny_digits):
+    """Same seed => identical gate trajectory, Sat flags and eval accuracy
+    between the jitted-scan engine and the per-batch python reference."""
+    train, test = tiny_digits
+    _, s_scan, h_scan = _run_cgmq(tiny_bundle, train, test, "scan")
+    _, s_py, h_py = _run_cgmq(tiny_bundle, train, test, "python")
+
+    # The two loop modes share staging + step code but compile as different
+    # XLA programs, so trajectories agree to float-reassociation tolerance,
+    # not bitwise: gates to < 5e-4 gate-units after 4 epochs, Sat flags
+    # exactly, eval accuracy to < 1 test sample (120 samples -> 1/120).
+    for k in s_scan.cgmq.gates:
+        np.testing.assert_allclose(
+            np.asarray(s_scan.cgmq.gates[k]), np.asarray(s_py.cgmq.gates[k]),
+            rtol=0, atol=5e-4, err_msg=k)
+    assert bool(s_scan.cgmq.sat) == bool(s_py.cgmq.sat)
+    assert bool(s_scan.cgmq.best_valid) == bool(s_py.cgmq.best_valid)
+    assert [h["sat"] for h in h_scan] == [h["sat"] for h in h_py]
+    for a, b in zip(h_scan, h_py):
+        assert abs(a["acc"] - b["acc"]) < 0.5 / 120, (a, b)  # same hit count
+        assert abs(a["rbop"] - b["rbop"]) < 1e-5
+
+
+def test_one_host_sync_per_eval_window(tiny_bundle, tiny_digits):
+    train, test = tiny_digits
+    eng, _, history = _run_cgmq(tiny_bundle, train, test, "scan", epochs=6)
+    # eval_every=2, 6 epochs => 3 windows => exactly 3 host transfers
+    assert len(history) == 3
+    assert eng.host_syncs == 3
+
+
+# ---------------------------------------------------------------------------
+# check_every semantics (satellite: honor user-set values)
+# ---------------------------------------------------------------------------
+
+
+def test_user_check_every_is_honored(tiny_bundle, tiny_digits):
+    """A user-set check_every must survive run_cgmq_stage; only an unset
+    (None) value defaults to steps-per-epoch (the seed overwrote both)."""
+    train, test = tiny_digits
+    spe = steps_per_epoch(train[0].shape[0], BATCH)
+    assert spe == 5  # 300 samples / 64 -> 4 full + 1 tail batch
+
+    # A trivially satisfiable budget with a check interval that never comes
+    # due: no check fires, so nothing is ever certified. The seed replaced
+    # check_every with steps-per-epoch, which would certify at the first
+    # epoch end — best_valid distinguishes the two behaviors.
+    never = CGMQConfig(budget_rbop=1.0, direction="dir1", gate_lr=0.01,
+                       check_every=10**9)
+    res = run_cgmq_stage(lenet.forward, tiny_bundle, train, test, never,
+                         _pcfg(cgmq_epochs=2))
+    assert not bool(res.state.best_valid)
+    assert int(res.state.step) == 2 * spe  # tail batch runs as a real step
+
+    # Unset (None) defaults to end-of-epoch checking: certifies immediately.
+    res2 = run_cgmq_stage(lenet.forward, tiny_bundle, train, test,
+                          CGMQConfig(budget_rbop=1.0, direction="dir1",
+                                     gate_lr=0.01),
+                          _pcfg(cgmq_epochs=2))
+    assert bool(res2.state.best_valid)
+
+
+def test_controller_update_treats_none_as_every_step():
+    gates = {"a.w": jnp.asarray(5.5), "a.a": jnp.asarray(5.5)}
+    from repro.core.sites import SiteInfo
+
+    sites = {"a": SiteInfo(name="a", weight_shape=(4, 4), fan_in=4,
+                           out_features=4, positions=1, stack=1,
+                           active_frac=1.0, act_quantized=True)}
+    state = ctrl.init_state(gates, sites)
+    cfg = CGMQConfig(budget_rbop=1.0)  # check_every defaults to None
+    probe = {"a.w": jnp.asarray(0.1), "a.a": jnp.asarray(0.1)}
+    wstats = {"a.w": jnp.asarray(1.0)}
+    astats = {"a.a": {"mean_abs": jnp.asarray(1.0)}}
+    budget = bop_lib.budget_from_rbop(sites, 1.0)
+    new = ctrl.controller_update(state, cfg, sites, probe, wstats, astats,
+                                 budget)
+    # due on step 1 (None == check every step): bop refreshed, sat=True
+    assert bool(new.sat)
+
+
+# ---------------------------------------------------------------------------
+# Full-state checkpoint / resume (satellite: bit-identical continuation)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_resume_is_bit_identical(tiny_bundle, tiny_digits,
+                                            tmp_path):
+    train, test = tiny_digits
+    ccfg = CGMQConfig(budget_rbop=0.02, direction="dir1", gate_lr=0.01,
+                      check_every=steps_per_epoch(train[0].shape[0], BATCH))
+
+    # uninterrupted: 4 epochs
+    eng_a = _engine(tiny_bundle, "scan", ccfg)
+    sa = eng_a.init_quant_state(tiny_bundle.params, tiny_bundle.betas,
+                                tiny_bundle.gates, tiny_bundle.probes, seed=3)
+    sa, ha = eng_a.run_stage(sa, "cgmq", train, 4, eval_data=test)
+
+    # interrupted: 2 epochs, save, restore into a FRESH engine, 2 more
+    ck_dir = str(tmp_path / "ck")
+    eng_b = _engine(tiny_bundle, "scan", ccfg)
+    sb = eng_b.init_quant_state(tiny_bundle.params, tiny_bundle.betas,
+                                tiny_bundle.gates, tiny_bundle.probes, seed=3)
+    sb, hb1 = eng_b.run_stage(sb, "cgmq", train, 2, eval_data=test)
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    ck = Checkpointer(ck_dir)
+    save_state(ck, 2, sb, extra={"stage": "cgmq", "epoch": 2})
+
+    eng_c = _engine(tiny_bundle, "scan", ccfg)
+    template = eng_c.init_quant_state(tiny_bundle.params, tiny_bundle.betas,
+                                      tiny_bundle.gates, tiny_bundle.probes,
+                                      seed=3)
+    sc, epoch, extra = restore_state(ck, template)
+    assert epoch == 2 and extra["stage"] == "cgmq"
+    sc, hb2 = eng_c.run_stage(sc, "cgmq", train, 4, eval_data=test,
+                              start_epoch=epoch)
+
+    # gate trajectory, controller flags and eval accuracy: bit-identical
+    for k in sa.cgmq.gates:
+        np.testing.assert_array_equal(np.asarray(sa.cgmq.gates[k]),
+                                      np.asarray(sc.cgmq.gates[k]), err_msg=k)
+        np.testing.assert_array_equal(np.asarray(sa.cgmq.best_gates[k]),
+                                      np.asarray(sc.cgmq.best_gates[k]))
+    assert bool(sa.cgmq.sat) == bool(sc.cgmq.sat)
+    assert bool(sa.cgmq.best_valid) == bool(sc.cgmq.best_valid)
+    assert int(sa.cgmq.step) == int(sc.cgmq.step)
+    assert int(sa.step) == int(sc.step)
+    np.testing.assert_array_equal(np.asarray(sa.rng), np.asarray(sc.rng))
+    full = ha[-1]
+    resumed = hb2[-1]
+    assert full["sat"] == resumed["sat"]
+    assert abs(full["acc"] - resumed["acc"]) < 1e-7
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(sa.params)[0]),
+        np.asarray(jax.tree.leaves(sc.params)[0]), rtol=0, atol=0)
+
+
+def test_run_cgmq_stage_resume_path(tiny_bundle, tiny_digits, tmp_path):
+    """The pipeline-level ckpt_dir/resume plumbing reproduces the full run."""
+    train, test = tiny_digits
+    ck_dir = str(tmp_path / "stage_ck")
+
+    def _cfg():
+        return CGMQConfig(budget_rbop=0.02, direction="dir1", gate_lr=0.01)
+
+    full = run_cgmq_stage(lenet.forward, tiny_bundle, train, test, _cfg(),
+                          _pcfg(cgmq_epochs=4))
+
+    # run to epoch 2 (checkpointing every eval window = 2 epochs), then kill
+    run_cgmq_stage(lenet.forward, tiny_bundle, train, test, _cfg(),
+                   _pcfg(cgmq_epochs=2), ckpt_dir=ck_dir)
+    resumed = run_cgmq_stage(lenet.forward, tiny_bundle, train, test, _cfg(),
+                             _pcfg(cgmq_epochs=4), ckpt_dir=ck_dir,
+                             resume=True)
+
+    assert full.satisfied == resumed.satisfied
+    assert abs(full.final_test_acc - resumed.final_test_acc) < 1e-6
+    assert abs(full.final_rbop - resumed.final_rbop) < 1e-9
+    for k in full.state.gates:
+        np.testing.assert_array_equal(np.asarray(full.state.gates[k]),
+                                      np.asarray(resumed.state.gates[k]))
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel sharding (subprocess: multi-device host platform)
+# ---------------------------------------------------------------------------
+
+
+def test_data_parallel_engine_matches_unsharded():
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import bop as bop_lib
+        from repro.core.controller import CGMQConfig
+        from repro.core.pipeline import prepare_bundle, PipelineConfig, steps_per_epoch
+        from repro.core.sites import QuantConfig
+        from repro.data.synthetic import digits
+        from repro.distributed.sharding import ShardingPlan
+        from repro.models import lenet
+        from repro.train import EngineConfig, TrainEngine
+
+        xtr, ytr = digits(128, split="train")
+        xte, yte = digits(64, split="test")
+        train = (jnp.asarray(xtr), jnp.asarray(ytr))
+        test = (jnp.asarray(xte), jnp.asarray(yte))
+        pcfg = PipelineConfig(pretrain_epochs=1, range_epochs=1, cgmq_epochs=2,
+                              batch_size=32, eval_every=2, log=lambda s: None)
+        params = lenet.init_params(jax.random.PRNGKey(0))
+        bundle = prepare_bundle(lenet.forward, lenet.weight_lookup, params,
+                                train, test, QuantConfig(), pcfg)
+        ccfg = CGMQConfig(budget_rbop=0.05, direction="dir1", gate_lr=0.01,
+                          check_every=steps_per_epoch(128, 32))
+        out = {}
+        for shard in (False, True):
+            plan = None
+            if shard:
+                # plain Mesh (not launch.mesh.make_test_mesh): works on jax
+                # versions without jax.sharding.AxisType
+                mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("data",))
+                plan = ShardingPlan(mesh=mesh, cfg=None, batch_axes=("data",))
+            eng = TrainEngine(lenet.forward,
+                              EngineConfig(batch_size=32, eval_every=2,
+                                           log=lambda s: None),
+                              qcfg=bundle.qcfg, plan=plan)
+            eng.bind_sites(bundle.sites, bundle.signed)
+            eng.bind_controller(ccfg, bop_lib.budget_from_rbop(bundle.sites, 0.05))
+            state = eng.shard_state(eng.init_quant_state(
+                bundle.params, bundle.betas, bundle.gates, bundle.probes, seed=1))
+            state, hist = eng.run_stage(state, "cgmq", train, 2, eval_data=test)
+            out[str(shard)] = {"loss": hist[-1]["loss"], "acc": hist[-1]["acc"],
+                               "rbop": hist[-1]["rbop"]}
+        print(json.dumps(out))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    import json
+
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert abs(res["False"]["loss"] - res["True"]["loss"]) < 5e-3
+    assert abs(res["False"]["acc"] - res["True"]["acc"]) < 1e-4
+    assert abs(res["False"]["rbop"] - res["True"]["rbop"]) < 1e-6
