@@ -31,24 +31,37 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--fp32", action="store_true",
                     help="serve fp32 instead of the int8 export")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "paged", "ring"],
+                    help="KV cache substrate (DESIGN.md §10); auto = paged "
+                         "for attention archs")
+    ap.add_argument("--same-prefix", action="store_true",
+                    help="submit every request with one shared prompt to "
+                         "demo paged prefix sharing (N admissions ~ 1 "
+                         "prefill)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
     qs = None if args.fp32 else make_uniform_quant_state(cfg, params)
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
-                        quant_state=qs)
+                        quant_state=qs, kv_layout=args.kv_layout)
     if eng.qweights:
         bits = sorted(set(eng.int8_report.values()))
         print(f"serving int8 export: {len(eng.qweights)} sites at {bits} bits")
+    print(f"kv layout: {eng.kv_layout}"
+          + (f" ({eng.num_blocks} blocks x {eng.block_size} tokens, "
+             f"prefix sharing {'on' if eng.prefix_sharing else 'off'})"
+             if eng.paged else ""))
 
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, (16,))
     t0 = time.time()
     for i in range(args.requests):
         plen = int(rng.integers(3, 10))
-        eng.submit(Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab_size, (plen,)),
-            max_new=args.max_new))
+        prompt = (shared if args.same_prefix
+                  else rng.integers(0, cfg.vocab_size, (plen,)))
+        eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
     finished = eng.run_to_completion()
     dt = time.time() - t0
     total_new = sum(len(r.output) for r in finished)
@@ -58,6 +71,12 @@ def main():
     print(f"  batched prefill: {st['prefill_forwards']} forwards for "
           f"{st['prompt_tokens']} prompt tokens (seed scan-of-decode-steps "
           f"would have run {st['seed_equiv_forwards']} x {args.slots}-wide)")
+    if eng.paged:
+        ps = eng.pool_stats()
+        print(f"  paged KV: prefix-hit rate {ps['prefix_hit_rate']:.2f}, "
+              f"{st['shared_admissions']} shared admissions, "
+              f"{st['cow_copies']} CoW copies, "
+              f"{ps['blocks_in_use']} blocks still in use")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  req {r.rid}: {list(r.output)}")
 

@@ -182,6 +182,18 @@ class ShardingPlan:
             return c
         return self._c(c, self.cache_spec(c.shape))
 
+    def pool_spec(self) -> P:
+        """Paged KV pool (num_blocks, bs, KV, hd): blocks over every axis —
+        the paged analogue of split-KV decode (a block is a sequence range,
+        like the slots axis of the contiguous cache; DESIGN.md §10)."""
+        axes = tuple(self.batch_axes) + (self.model_axis,)
+        return P(axes, None, None, None)
+
+    def shard_pool(self, c):
+        if c.ndim != 4:
+            return c
+        return self._c(c, self.pool_spec())
+
     def shard_moe(self, t):
         """(ng, E, C, d) dispatch tensors."""
         if t.ndim != 4:

@@ -1,0 +1,30 @@
+"""Jit'd dispatch wrapper for paged decode attention (ref / Pallas)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .paged_attention import paged_attention_pallas
+from .ref import paged_attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "use_pallas", "interpret"))
+def paged_attention_op(q, k_pool, v_pool, block_table, pos, *,
+                       window: int | None = None,
+                       softcap: float | None = None,
+                       use_pallas: bool = False,
+                       interpret: bool = True):
+    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd);
+    block_table: (B, max_blocks) int32; pos: (B,) int32 → (B, KV, G, hd) f32.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if use_pallas:
+        return paged_attention_pallas(
+            q, k_pool, v_pool, block_table, pos,
+            window=window, softcap=softcap, interpret=interpret)
+    return paged_attention_ref(
+        q, k_pool, v_pool, block_table, pos, window=window, softcap=softcap)

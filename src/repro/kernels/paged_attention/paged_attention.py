@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: paged single-token decode attention (vLLM-style).
+
+The decode-time half of the paged KV cache (DESIGN.md §10): each serving
+slot's K/V lives in fixed-size token blocks scattered through a physical
+pool, addressed by a per-slot block table. The kernel walks one slot's table
+entries and runs an online-softmax accumulation over its blocks — the paged
+analogue of FlashDecoding — without ever materializing the gathered
+(B, L, KV, hd) K/V that the jnp oracle builds.
+
+Layout and TPU mapping:
+
+  * grid ``(B, max_blocks)`` with the block dimension innermost, so the
+    softmax statistics (m, l) and the output accumulator stay resident in
+    VMEM scratch across a slot's blocks — same carry discipline as the
+    flash_attention kernel.
+  * the block table and per-slot positions ride in as **scalar prefetch**
+    (``PrefetchScalarGridSpec``): the K/V BlockSpec index_map reads
+    ``table[b, j]`` to DMA exactly the physical block the slot's j-th
+    logical block lives in. Unallocated entries (-1) clip to the reserved
+    garbage block 0 and are masked out by the position test.
+  * GQA: q arrives as (B, KV*G, hd); scores run as a KV-batched dot_general
+    so every query group hits the MXU against its own KV head.
+  * blocks wholly past the row's position (and, for sliding-window layers,
+    wholly fallen out of the window) are pruned with ``pl.when`` before any
+    compute.
+
+On CPU containers the kernel runs in interpret mode (the repo-wide kernel
+contract, DESIGN.md §3); on TPU it lowers natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, block_size: int, blocks: int,
+            kv_heads: int, groups: int, window: int | None,
+            softcap: float | None, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    p = pos_ref[b]
+    start = j * block_size
+    run = (start <= p) & (table_ref[b, j] >= 0)
+    if window is not None:
+        run = jnp.logical_and(run, p - (start + block_size - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (KV*G, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bs, KV, hd)
+        v = v_ref[0].astype(jnp.float32)          # (bs, KV, hd)
+        qr = q.reshape(kv_heads, groups, q.shape[-1])
+        # batched over the KV head axis: (KV, G, hd) x (bs, KV, hd)
+        s = jax.lax.dot_general(
+            qr, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # (KV, G, bs)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        cols = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = cols <= p
+        if window is not None:
+            mask &= (p - cols) < window
+        s = jnp.where(mask, s, NEG_INF).reshape(kv_heads * groups, -1)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1)[:, None])
+        pexp = jnp.exp(s - m_new)                  # (KV*G, bs)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(pexp, axis=1)[:, None]
+        pv = jax.lax.dot_general(
+            pexp.reshape(kv_heads, groups, -1), v,
+            (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        )                                          # (KV, G, hd)
+        acc_scr[...] = acc_scr[...] * alpha + pv.reshape(acc_scr.shape)
+        m_scr[...] = m_new
+
+    @pl.when(j == blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, block_table, pos, *,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           interpret: bool = True):
+    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd);
+    block_table: (B, max_blocks); pos: (B,). Returns (B, KV, G, hd)."""
+    b, kvh, g, hd = q.shape
+    bs = k_pool.shape[1]
+    mb = block_table.shape[1]
+    qf = q.reshape(b, kvh * g, hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, kvh * g, hd), lambda bi, j, tbl, ps: (bi, 0, 0)),
+            pl.BlockSpec(
+                (1, bs, kvh, hd),
+                lambda bi, j, tbl, ps: (jnp.maximum(tbl[bi, j], 0), 0, 0, 0)),
+            pl.BlockSpec(
+                (1, bs, kvh, hd),
+                lambda bi, j, tbl, ps: (jnp.maximum(tbl[bi, j], 0), 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kvh * g, hd),
+                               lambda bi, j, tbl, ps: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kvh * g, 1), jnp.float32),   # running max m
+            pltpu.VMEM((kvh * g, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((kvh * g, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, block_size=bs, blocks=mb, kv_heads=kvh, groups=g,
+            window=window, softcap=softcap, scale=hd ** -0.5,
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh * g, hd), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(block_table, pos, qf, k_pool, v_pool)
+    return out.reshape(b, kvh, g, hd)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle: single-token GQA decode through a paged KV cache.
+
+Numerics deliberately mirror ``models.attention.attention_decode`` (bf16
+matmuls with fp32 accumulation, fp32 softmax) so the paged path's logits can
+be gated against the contiguous ring-cache path at bf16 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
+                        window: int | None = None,
+                        softcap: float | None = None):
+    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd);
+    block_table: (B, max_blocks) int32 (-1 = unallocated); pos: (B,) int32.
+    Returns (B, KV, G, hd).
+
+    Unallocated table entries gather the garbage block 0; every logical
+    position they cover is > ``pos`` for that row, so the mask discards them.
+    """
+    b, kvh, g, hd = q.shape
+    bs = k_pool.shape[1]
+    mb = block_table.shape[1]
+    safe = jnp.where(block_table >= 0, block_table, 0)
+    k = k_pool[safe].reshape(b, mb * bs, kvh, hd)
+    v = v_pool[safe].reshape(b, mb * bs, kvh, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", q, k.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    sids = jnp.arange(mb * bs)[None, :]
+    posb = pos[:, None]
+    valid = sids <= posb
+    if window is not None:
+        valid &= (posb - sids) < window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(q.dtype),
+                      preferred_element_type=jnp.float32)

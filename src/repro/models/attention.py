@@ -212,6 +212,80 @@ def attention_decode(
     return y, {"k": ck, "v": cv}
 
 
+def attention_decode_paged(
+    qc: QuantContext,
+    p,
+    x,
+    pool: dict,
+    block_table,
+    pos,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    mrope_pos=None,
+    plan=None,
+    write_mask=None,
+):
+    """One-token decode through a paged KV pool (DESIGN.md §10).
+
+    ``pool``: {"k", "v"} of (num_blocks, bs, KV, hd) — one layer's physical
+    block pool; ``block_table``: (B, max_blocks) int32 mapping each row's
+    logical blocks to physical ids (-1 = unallocated); ``pos``: (B,) int32.
+
+    The new K/V lands at physical block ``table[b, pos // bs]`` offset
+    ``pos % bs``; rows outside ``write_mask`` (idle slots, teacher steps for
+    another slot) are routed to the reserved garbage block 0 so they can
+    never corrupt pool blocks they don't own. The attend then gathers
+    through the table (``kernels/paged_attention``: jnp oracle, or the
+    Pallas kernel per ``qc.matmul_impl``). Local layers keep full history in
+    blocks and mask to the window — the ring buffer's O(window) residency is
+    traded for block-granular allocation.
+
+    Returns (y, new_pool).
+    """
+    from repro.kernels.paged_attention.ops import paged_attention_op
+
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    mp = None
+    if cfg.mrope_sections is not None:
+        mp = (
+            mrope_pos
+            if mrope_pos is not None
+            else jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+        )
+    q, k, v = _project_qkv(qc, p, x, cfg, pos[:, None], mp)
+
+    bs = pool["k"].shape[1]
+    mb = block_table.shape[1]
+    lp = jnp.clip(pos, 0, mb * bs - 1)
+    rows = jnp.arange(b)
+    phys = block_table[rows, lp // bs]
+    ok = phys >= 0
+    if write_mask is not None:
+        ok &= write_mask.astype(bool)
+    tgt = jnp.where(ok, phys, 0)
+    ck = pool["k"].at[tgt, lp % bs].set(k[:, 0].astype(pool["k"].dtype))
+    cv = pool["v"].at[tgt, lp % bs].set(v[:, 0].astype(pool["v"].dtype))
+    if plan is not None:
+        ck = plan.shard_pool(ck)
+        cv = plan.shard_pool(cv)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q[:, 0].reshape(b, cfg.n_kv_heads, groups, cfg.head_dim)
+    impl = qc.matmul_impl
+    out = paged_attention_op(
+        qg.astype(COMPUTE_DTYPE), ck, cv, block_table, pos,
+        window=cfg.window if kind == "local" else None,
+        softcap=cfg.attn_softcap,
+        use_pallas=impl != "ref", interpret=impl != "pallas",
+    )
+    out = out.astype(COMPUTE_DTYPE).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    y = qmatmul(qc, "attn_o", out, p["wo"])
+    y = qc.act("attn_o", y)
+    return y, {"k": ck, "v": cv}
+
+
 def write_prefill_slot(cfg: ModelConfig, kind: str, cache: dict, k, v, slot,
                        plen):
     """Write one serving slot's prefill K/V range in one shot.

@@ -120,11 +120,19 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 
 def _apply_block_full(qc, bp, h, cfg: ModelConfig, kind: str, *, positions,
-                      mrope_pos, plan, moe_impl):
-    """Full-sequence block application. Returns (h, cache_entry)."""
+                      mrope_pos, plan, moe_impl, init_entry=None):
+    """Full-sequence block application. Returns (h, cache_entry).
+
+    ``init_entry`` threads a slot's carried recurrent state into the chunked
+    scans (ssm / recurrent), so a prefill can continue from where a previous
+    forward left off — the one-batched-forward SSM tail (DESIGN.md §8).
+    Attention blocks have no carried-state analogue here (continuing them
+    needs past-KV attention), so they require ``init_entry=None``.
+    """
     resid = h
     hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
     if kind in ("global", "local"):
+        assert init_entry is None, "attention blocks can't resume mid-prefill"
         with qc.scope("attn"):
             y, (k, v) = attn.attention_train(
                 qc, bp["attn"], hn, cfg, kind,
@@ -149,13 +157,18 @@ def _apply_block_full(qc, bp, h, cfg: ModelConfig, kind: str, *, positions,
         cache_entry = {"k": k.astype(COMPUTE_DTYPE), "v": v.astype(COMPUTE_DTYPE)}
     elif kind == "ssm":
         with qc.scope("ssd"):
-            y, (conv_st, ssm_st) = ssd_lib.ssd_chunked(qc, bp["ssd"], hn, cfg, plan=plan)
+            y, (conv_st, ssm_st) = ssd_lib.ssd_chunked(
+                qc, bp["ssd"], hn, cfg, plan=plan,
+                conv_state=None if init_entry is None else init_entry["conv"],
+                ssm_state=None if init_entry is None else init_entry["ssm"])
         h = resid + y.astype(resid.dtype)
         cache_entry = {"conv": conv_st.astype(jnp.float32), "ssm": ssm_st}
     elif kind == "recurrent":
         with qc.scope("rglru"):
-            y, (conv_st, h_last) = rglru_lib.rglru_forward(qc, bp["rglru"], hn, cfg,
-                                                           plan=plan)
+            y, (conv_st, h_last) = rglru_lib.rglru_forward(
+                qc, bp["rglru"], hn, cfg, plan=plan,
+                conv_state=None if init_entry is None else init_entry["conv"],
+                h0=None if init_entry is None else init_entry["h"])
         if cfg.post_norm:
             y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
         h = resid + y.astype(resid.dtype)
@@ -175,15 +188,21 @@ def _apply_block_full(qc, bp, h, cfg: ModelConfig, kind: str, *, positions,
 
 
 def _apply_block_decode(qc, bp, h, cache, pos, cfg: ModelConfig, kind: str, *,
-                        mrope_pos, plan):
+                        mrope_pos, plan, block_table=None, write_mask=None):
     resid = h
     hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
     if kind in ("global", "local"):
         with qc.scope("attn"):
-            y, new_cache = attn.attention_decode(
-                qc, bp["attn"], hn, cache, pos, cfg, kind,
-                mrope_pos=mrope_pos, plan=plan,
-            )
+            if block_table is not None:
+                y, new_cache = attn.attention_decode_paged(
+                    qc, bp["attn"], hn, cache, block_table, pos, cfg, kind,
+                    mrope_pos=mrope_pos, plan=plan, write_mask=write_mask,
+                )
+            else:
+                y, new_cache = attn.attention_decode(
+                    qc, bp["attn"], hn, cache, pos, cfg, kind,
+                    mrope_pos=mrope_pos, plan=plan,
+                )
         if cfg.post_norm:
             y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
         h = resid + y.astype(resid.dtype)
@@ -293,10 +312,17 @@ def _head(qc: QuantContext, params, h, cfg: ModelConfig):
 
 def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
                   plan=None, mrope_pos=None, moe_impl="capacity",
-                  want_cache=False, remat=True, scan_unroll=False):
+                  want_cache=False, remat=True, scan_unroll=False,
+                  init_state=None, positions=None):
+    """``init_state``: optional per-layer list (pattern entries stacked along
+    the scan axis) of recurrent-state entries to resume from — the SSM
+    prefill-tail path (see ``prefill_slot_tail``); ``None`` per layer (or
+    entirely) means a fresh sequence. ``positions``: (1, S) absolute
+    positions override for continued prefills (attention layers only)."""
     h = _embed(qc, params, batch, cfg)
     s = h.shape[1]
-    positions = jnp.arange(s)[None, :]
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
     if plan is not None:
         h = plan.shard_hidden(h)
 
@@ -307,15 +333,17 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
     for pi, kind in enumerate(pat):
         prefix = f"p{pi}_{kind}/"
         gates_xs, betas_xs, probes_xs, qw_xs = _scan_quant_xs(qc, prefix)
+        init_xs = None if init_state is None else init_state[pi]
 
         def body(carry, xs, _pi=pi, _kind=kind, _prefix=prefix):
             hh = carry
-            bp, g_s, b_s, p_s, qw_s = xs
+            bp, g_s, b_s, p_s, qw_s, init_s = xs
             sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s)
             with sub.scope(_prefix[:-1]):
                 hh, cache_entry = _apply_block_full(
                     sub, bp, hh, cfg, _kind, positions=positions,
                     mrope_pos=mrope_pos, plan=plan, moe_impl=moe_impl,
+                    init_entry=init_s,
                 )
             out = (sub.act_stats, sub.weight_stats)
             if want_cache:
@@ -326,7 +354,9 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
             # single repeat: quant state is unstacked (no scan axis) — apply
             # the body directly on slice 0 of the (1, ...) param stack.
             bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
-            ys = body(h, (bp, gates_xs, betas_xs, probes_xs, qw_xs))
+            init_s = (None if init_xs is None
+                      else jax.tree.map(lambda x: x[0], init_xs))
+            ys = body(h, (bp, gates_xs, betas_xs, probes_xs, qw_xs, init_s))
             h, out = ys
             qc.absorb_stacked_stats(out[0], out[1])
             if want_cache:
@@ -340,13 +370,14 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
                 h, ys = jax.lax.scan(
                     body_fn, h,
                     (params["blocks"][pi], gates_xs, betas_xs, probes_xs,
-                     qw_xs),
+                     qw_xs, init_xs),
                     unroll=unroll,
                 )
         else:
             h, ys = jax.lax.scan(
                 body_fn, h,
-                (params["blocks"][pi], gates_xs, betas_xs, probes_xs, qw_xs),
+                (params["blocks"][pi], gates_xs, betas_xs, probes_xs, qw_xs,
+                 init_xs),
                 unroll=unroll,
             )
         qc.absorb_stacked_stats(ys[0], ys[1])
@@ -356,10 +387,12 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
     # remainder layers (unrolled)
     for i, kind in enumerate(cfg.remainder_kinds):
         prefix = f"rem{i}_{kind}"
+        init_s = None if init_state is None else init_state[len(pat) + i]
         with qc.scope(prefix):
             h, cache_entry = _apply_block_full(
                 qc, params["rem"][i], h, cfg, kind, positions=positions,
                 mrope_pos=mrope_pos, plan=plan, moe_impl=moe_impl,
+                init_entry=init_s,
             )
         if want_cache:
             caches.append(cache_entry)
@@ -429,7 +462,8 @@ def _write_state_slot(lc, entry, slot, stacked: bool):
 
 def prefill_slot(qc: QuantContext, params, tokens, plen, cache, slot,
                  cfg: ModelConfig, *, plan=None, mrope_pos=None,
-                 moe_impl="dense_all", scan_unroll=False):
+                 moe_impl="dense_all", scan_unroll=False, block_table=None,
+                 start_blk=0):
     """True batched prefill for one serving slot (DESIGN.md §8).
 
     Runs the whole (right-padded) prompt through ONE causal forward and
@@ -442,6 +476,12 @@ def prefill_slot(qc: QuantContext, params, tokens, plen, cache, slot,
     Only row ``slot`` of ``cache`` is touched; its pos is set to ``plen``.
     Returns (logits (1, S_pad, V), cache) — the slot's first generated token
     is ``argmax(logits[0, plen - 1])``.
+
+    With ``block_table`` (paged layout, DESIGN.md §10), attention K/V is
+    scattered into the layer block pools as whole blocks at the physical ids
+    in the slot's table row; logical blocks below ``start_blk`` (a shared
+    prompt prefix already resident in the pool) are skipped. The caller must
+    have allocated blocks ``start_blk .. ceil(plen/bs)-1`` for the slot.
     """
     logits, raw = _forward_full(
         qc, params, tokens, cfg, plan=plan, mrope_pos=mrope_pos,
@@ -457,12 +497,76 @@ def prefill_slot(qc: QuantContext, params, tokens, plen, cache, slot,
         lc = cache["layers"][li]
         stacked = li < len(pat)  # pattern entries carry the scan (R) axis
         if kind in ("global", "local"):
-            new_layers.append(
-                attn.write_prefill_slot(cfg, kind, lc, entry["k"], entry["v"],
-                                        slot, plen))
+            if block_table is None:
+                new_layers.append(
+                    attn.write_prefill_slot(cfg, kind, lc, entry["k"],
+                                            entry["v"], slot, plen))
+            else:
+                from repro.serving import kv_pool
+
+                bs = lc["k"].shape[-3]
+                nblk = (plen + bs - 1) // bs
+                k = entry["k"][:, 0] if stacked else entry["k"][0]
+                v = entry["v"][:, 0] if stacked else entry["v"][0]
+                new_layers.append(kv_pool.write_prompt_blocks(
+                    lc, k, v, block_table[slot], start_blk, nblk, bs))
         else:
             new_layers.append(_write_state_slot(lc, entry, slot, stacked))
     pos = cache["pos"].at[slot].set(plen)
+    return logits, {"pos": pos, "layers": new_layers}
+
+
+def _slice_state_slot(lc, slot, stacked: bool):
+    """Read one slot's recurrent-state entry out of the multi-slot cache."""
+    ax = 1 if stacked else 0
+
+    def rd(c):
+        start = [0] * c.ndim
+        start[ax] = slot
+        size = list(c.shape)
+        size[ax] = 1
+        return jax.lax.dynamic_slice(c, tuple(start), tuple(size))
+
+    return jax.tree.map(rd, lc)
+
+
+def prefill_slot_tail(qc: QuantContext, params, tokens, cache, slot,
+                      cfg: ModelConfig, *, plan=None, moe_impl="dense_all"):
+    """Absorb a prefill's sub-chunk remainder in ONE batched forward.
+
+    ``ssd_chunked`` requires chunk-multiple lengths, so SSM prompts prefill
+    their largest chunk-aligned prefix via ``prefill_slot`` and then continue
+    here: the slot's carried recurrent state (conv tail + SSM state) is read
+    out of the cache, threaded into a second forward over the ``tokens``
+    remainder (< ssm_chunk of them), and the updated state written back —
+    replacing the seed's teacher-forced single decode steps (DESIGN.md §8).
+    Recurrent-state architectures only; attention blocks would need past-KV
+    attention, which this path deliberately does not implement.
+
+    ``tokens``: (1, r); slot pos advances by r. Returns (logits, cache);
+    the slot's first generated token is ``argmax(logits[0, -1])``.
+    """
+    pat = cfg.block_pattern
+    kinds = list(pat) + list(cfg.remainder_kinds)
+    assert all(k in ("ssm", "recurrent") for k in kinds), \
+        "tail prefill requires a recurrent-state-only architecture"
+    init_state = [
+        _slice_state_slot(cache["layers"][li], slot, li < len(pat))
+        for li in range(len(kinds))
+    ]
+    r = tokens.shape[1]
+    start = cache["pos"][slot]
+    positions = (start + jnp.arange(r))[None, :]
+    logits, raw = _forward_full(
+        qc, params, tokens, cfg, plan=plan, moe_impl=moe_impl,
+        want_cache=True, remat=False, init_state=init_state,
+        positions=positions,
+    )
+    new_layers = [
+        _write_state_slot(cache["layers"][li], raw[li], slot, li < len(pat))
+        for li in range(len(kinds))
+    ]
+    pos = cache["pos"].at[slot].add(r)
     return logits, {"pos": pos, "layers": new_layers}
 
 
@@ -493,16 +597,60 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
     return {"pos": jnp.zeros((batch,), jnp.int32), "layers": layers}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int):
+    """Decode cache with paged attention layers (DESIGN.md §10).
+
+    Attention entries are physical block pools ``(R?, num_blocks, bs, KV,
+    hd)`` addressed through the engine's shared block table; recurrent-state
+    entries stay per-slot rows exactly as in ``init_cache``. Local
+    (sliding-window) layers page full history like global ones and mask to
+    the window at attend time.
+    """
+    from repro.serving import kv_pool
+
+    pat = cfg.block_pattern
+    reps = cfg.pattern_repeats
+    layers = []
+    for kind in pat:
+        if kind in ("global", "local"):
+            one = kv_pool.init_pool(cfg, num_blocks, block_size)
+        elif kind == "ssm":
+            one = ssd_lib.init_ssd_cache(cfg, batch)
+        else:
+            one = rglru_lib.init_rglru_cache(cfg, batch)
+        layers.append(jax.tree.map(lambda x: jnp.stack([x] * reps), one))
+    for kind in cfg.remainder_kinds:
+        if kind in ("global", "local"):
+            layers.append(kv_pool.init_pool(cfg, num_blocks, block_size))
+        elif kind == "ssm":
+            layers.append(ssd_lib.init_ssd_cache(cfg, batch))
+        else:
+            layers.append(rglru_lib.init_rglru_cache(cfg, batch))
+    return {"pos": jnp.zeros((batch,), jnp.int32), "layers": layers}
+
+
 def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
-                plan=None, mrope_pos=None, scan_unroll=False, advance=None):
+                plan=None, mrope_pos=None, scan_unroll=False, advance=None,
+                block_table=None):
     """One decode step for the whole batch. tokens: (B,) int32 or (B,1,d)
     embeddings for stub-modality models. ``cache["pos"]`` is per-row (B,), so
     slots of a continuous-batching engine decode at independent positions.
     ``advance`` (optional (B,) bool/int) selects which rows bump their
     position — inactive serving slots pass 0 and stay put (their KV write
     lands at their frozen position and is re-overwritten, never attended).
+
+    ``block_table`` ((B, max_blocks) int32) switches attention layers to the
+    paged KV pools of an ``init_paged_cache`` cache (DESIGN.md §10). Paged
+    pool writes are additionally gated by ``advance``: unlike the ring
+    layout, pool blocks are shared hardware, so a row that isn't advancing
+    must not touch them (its write is routed to the garbage block).
+
     Returns (logits (B, 1, V), cache)."""
     pos = cache["pos"]
+    write_mask = None
+    if block_table is not None and advance is not None:
+        write_mask = advance.astype(bool)
     if cfg.embed_input:
         batch = tokens[:, None]
     else:
@@ -523,6 +671,7 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
                 hh, nc = _apply_block_decode(
                     sub, bp, hh, lc, pos, cfg, _kind,
                     mrope_pos=mrope_pos, plan=plan,
+                    block_table=block_table, write_mask=write_mask,
                 )
             return hh, nc
 
@@ -555,6 +704,7 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
             h, nc = _apply_block_decode(
                 qc, params["rem"][i], h, cache["layers"][len(pat) + i], pos,
                 cfg, kind, mrope_pos=mrope_pos, plan=plan,
+                block_table=block_table, write_mask=write_mask,
             )
         new_layers.append(nc)
 

@@ -30,6 +30,7 @@ vector), so slots at unrelated sequence positions share one decode step.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Any
 
@@ -42,6 +43,7 @@ from repro.core.gates import gate_to_bits
 from repro.core.quantizer import quantize_to_int
 from repro.core.sites import QuantContext, merge_ranges
 from repro.models import transformer as tfm
+from repro.serving import kv_pool
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +180,9 @@ class Request:
     max_new: int = 16
     done: bool = False
     output: list = dataclasses.field(default_factory=list)
+    # paged layout: the chain-hash keys of this request's full prompt blocks
+    # in the engine's prefix map (for eviction at retirement)
+    prefix_keys: list = dataclasses.field(default_factory=list)
 
 
 class ServingEngine:
@@ -188,12 +193,33 @@ class ServingEngine:
     ``matmul_impl`` picks the fused-dequant GEMM backend: "pallas" on TPU,
     "pallas_interpret" for kernel validation, "ref" (jnp) elsewhere; the
     default auto-detects.
+
+    ``kv_layout`` picks the attention cache substrate (DESIGN.md §10):
+
+      * ``"paged"`` (the "auto" default whenever the arch has attention
+        layers) — K/V lives in a block pool addressed through a per-slot
+        block table with a device-resident free-list allocator, and the
+        scheduler shares physical blocks between requests with a common
+        prompt prefix (copy-on-write at the first divergent write). A fully
+        cached prompt admits with NO prefill forward: its table row maps the
+        existing blocks and only the sub-block remainder is teacher-forced.
+      * ``"ring"`` — the §8 contiguous per-slot rows (local layers as ring
+        buffers). Kept as the equivalence oracle for the paged path and used
+        automatically for attention-free (pure recurrent-state) archs.
+
+    Prefix sharing applies only to pure-attention archs (recurrent state is
+    per-slot and can't be block-shared); ``prefix_sharing=False`` disables
+    it. ``block_size``/``num_blocks`` size the pool — the default pool
+    (``slots * ceil(max_seq/bs) + 1`` blocks) can always hold every slot at
+    ``max_seq``, so the in-tick allocator can never run dry.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 256, quant_state: dict | None = None,
                  plan=None, use_int8: bool = True,
-                 matmul_impl: str | None = None):
+                 matmul_impl: str | None = None, kv_layout: str = "auto",
+                 block_size: int = 8, num_blocks: int | None = None,
+                 prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -208,7 +234,41 @@ class ServingEngine:
             self.qweights, self.int8_report = export_int_model(
                 params, cfg, quant_state, plan=plan)
 
-        self.cache = tfm.init_cache(cfg, slots, max_seq)
+        kinds = list(cfg.block_pattern) + list(cfg.remainder_kinds)
+        has_attn = any(k in ("global", "local") for k in kinds)
+        self._state_only = not has_attn
+        assert kv_layout in ("auto", "paged", "ring"), kv_layout
+        if kv_layout == "auto":
+            kv_layout = "paged" if has_attn else "ring"
+        if not has_attn:
+            kv_layout = "ring"  # nothing to page: pure state rows
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        self.prefix_sharing = (
+            self.paged and prefix_sharing
+            and all(k in ("global", "local") for k in kinds))
+        if self.paged:
+            self.block_size = block_size
+            self.max_blocks = -(-max_seq // block_size)
+            min_blocks = slots * self.max_blocks + 1
+            if num_blocks is not None and num_blocks < min_blocks:
+                # the in-tick allocator has no error path: an exhausted free
+                # stack would silently alias a live block into two slots
+                raise ValueError(
+                    f"num_blocks={num_blocks} can't back {slots} slots at "
+                    f"max_seq={max_seq} (need >= {min_blocks})")
+            self.num_blocks = num_blocks or min_blocks
+            self.cache = tfm.init_paged_cache(cfg, slots, self.num_blocks,
+                                              block_size)
+            self.alloc = kv_pool.init_alloc(self.num_blocks, slots,
+                                            self.max_blocks)
+        else:
+            self.cache = tfm.init_cache(cfg, slots, max_seq)
+            self.alloc = None
+        # host side of the prefix cache: chain-hash of full-block prompt
+        # content -> physical block id, plus live-request counts per key
+        self._prefix_map: dict[Any, int] = {}
+        self._key_refs: dict[Any, int] = {}
         # Device-resident generation state: one row per slot.
         self.state = {
             "last_tok": jnp.zeros((slots,), jnp.int32),
@@ -223,9 +283,16 @@ class ServingEngine:
         #   seed_equiv_forwards    decode_step forwards the seed's
         #                          scan-of-decode-steps prefill would have run
         #                          (one per prompt token, each slots wide)
-        self.stats = {"prefill_forwards": 0, "tail_decode_steps": 0,
+        #   prefix_hit_blocks /    paged: prompt blocks served from the
+        #     prompt_blocks        prefix cache vs total full prompt blocks
+        #   shared_admissions      admissions that skipped the prefill
+        #                          forward entirely (fully cached prompt)
+        self.stats = {"prefill_forwards": 0, "tail_forwards": 0,
+                      "teacher_steps": 0,
                       "prompt_tokens": 0, "seed_equiv_forwards": 0,
                       "decode_ticks": 0, "generated_tokens": 0,
+                      "prefix_hit_blocks": 0, "prompt_blocks": 0,
+                      "shared_admissions": 0, "cow_copies": 0,
                       "prefill_time_s": 0.0, "decode_time_s": 0.0}
 
         # Small quant state (gates/ranges) rides as jit closure constants;
@@ -244,17 +311,26 @@ class ServingEngine:
                 qweights=qweights, matmul_impl=matmul_impl,
             )
 
+        paged = self.paged
+
         @jax.jit
-        def _tick(params, qweights, cache, state):
+        def _tick(params, qweights, cache, state, alloc):
             """One device-resident generation step for the whole batch.
 
-            Greedy sampling, the per-slot position bump (via ``advance``) and
-            the done-flag updates all happen on device; the caller fetches
-            (next_tokens, emitted, done) in a single host transfer.
+            Greedy sampling, the per-slot position bump (via ``advance``),
+            the done-flag updates — and, in the paged layout, the free-list
+            pop for rows entering an unallocated block — all happen on
+            device; the caller fetches (next_tokens, emitted, done) in a
+            single host transfer, exactly as in the ring layout.
             """
+            table = None
+            if paged:
+                alloc = kv_pool.tick_alloc(alloc, cache["pos"],
+                                           state["active"], block_size)
+                table = alloc["table"]
             logits, cache = tfm.decode_step(
                 _qc(qweights), params, cache, state["last_tok"], cfg,
-                plan=plan, advance=state["active"])
+                plan=plan, advance=state["active"], block_table=table)
             nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size],
                              axis=-1).astype(jnp.int32)
             emitted = state["active"]
@@ -263,21 +339,24 @@ class ServingEngine:
             done_now = emitted & (remaining <= 0)
             state = {"last_tok": nxt, "active": emitted & ~done_now,
                      "remaining": remaining}
-            return cache, state, nxt, emitted, done_now
+            return cache, state, alloc, nxt, emitted, done_now
 
         self._tick = _tick
 
         @jax.jit
-        def _prefill(params, qweights, cache, state, toks, plen, slot,
-                     max_new):
+        def _prefill(params, qweights, cache, state, table, toks, plen, slot,
+                     max_new, start_blk):
             """Admit one request: batched prefill into the slot + state init.
 
             Specializes per padded prompt-bucket shape; ``plen``/``slot``/
-            ``max_new`` are traced, so admissions don't recompile.
+            ``max_new``/``start_blk`` are traced, so admissions don't
+            recompile. In the paged layout ``table`` is the block table and
+            ``start_blk`` skips writing a shared prompt prefix.
             """
             logits, cache = tfm.prefill_slot(
                 _qc(qweights), params, toks, plen, cache, slot, cfg,
-                plan=plan)
+                plan=plan, block_table=table if paged else None,
+                start_blk=start_blk)
             first = jnp.argmax(
                 logits[0, plen - 1, : cfg.vocab_size]).astype(jnp.int32)
             remaining = jnp.asarray(max_new, jnp.int32) - 1
@@ -291,23 +370,66 @@ class ServingEngine:
         self._prefill = _prefill
 
         @jax.jit
-        def _teacher_step(params, qweights, cache, state, tok, slot):
+        def _prefill_tail(params, qweights, cache, toks, slot):
+            """Continue an SSM prefill: absorb the < ssm_chunk remainder in
+            one batched forward threading the slot's carried recurrent state
+            into the chunked scan (DESIGN.md §8)."""
+            logits, cache = tfm.prefill_slot_tail(
+                _qc(qweights), params, toks, cache, slot, cfg, plan=plan)
+            first = jnp.argmax(
+                logits[0, -1, : cfg.vocab_size]).astype(jnp.int32)
+            return cache, first
+
+        self._prefill_tail = _prefill_tail
+
+        @jax.jit
+        def _teacher_step(params, qweights, cache, state, table, tok, slot):
             """Teacher-forced decode of one PROMPT token into one slot.
 
-            Used for the sub-chunk tail of SSM prefills. Only ``slot``
-            advances; decode_step keeps every non-advancing row's recurrent
-            state untouched, so concurrent slots are unaffected.
+            Used to replay the sub-block remainder of a prefix-shared
+            admission. Only ``slot`` advances (and, paged, only it writes);
+            every other row's cache state is untouched, so concurrent slots
+            are unaffected.
             """
             toks = state["last_tok"].at[slot].set(tok)
             adv = jnp.zeros((slots,), jnp.int32).at[slot].set(1)
             logits, cache = tfm.decode_step(
                 _qc(qweights), params, cache, toks, cfg, plan=plan,
-                advance=adv)
+                advance=adv, block_table=table if paged else None)
             nxt = jnp.argmax(
                 logits[slot, 0, : cfg.vocab_size]).astype(jnp.int32)
             return cache, nxt
 
         self._teacher_step = _teacher_step
+
+        @jax.jit
+        def _arm_slot(state, slot, first, max_new):
+            """Arm a slot's generation row for admission paths that bypass
+            ``_prefill`` (fully-shared prompts, SSM tails)."""
+            remaining = jnp.asarray(max_new, jnp.int32) - 1
+            return {
+                "last_tok": state["last_tok"].at[slot].set(first),
+                "active": state["active"].at[slot].set(remaining > 0),
+                "remaining": state["remaining"].at[slot].set(remaining),
+            }
+
+        self._arm_slot = _arm_slot
+
+        if self.paged:
+            self._alloc_range = jax.jit(kv_pool.alloc_range)
+            self._share_prefix = jax.jit(kv_pool.share_prefix)
+            self._free_slot_op = jax.jit(kv_pool.free_slot)
+            self._set_pos = jax.jit(
+                lambda cache, slot, p:
+                {**cache, "pos": cache["pos"].at[slot].set(p)})
+
+            @jax.jit
+            def _cow(alloc, cache, slot, blk):
+                alloc, layers = kv_pool.cow_block(alloc, cache["layers"],
+                                                  slot, blk)
+                return alloc, {**cache, "layers": layers}
+
+            self._cow = _cow
 
     # ------------------------------------------------------------------
     def _prefill_shape(self, plen: int) -> tuple[int, int]:
@@ -338,6 +460,154 @@ class ServingEngine:
     def submit(self, req: Request):
         self.waiting.append(req)
 
+    # ------------------------------------------------------------------
+    # Prefix cache (host side; DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def _block_keys(self, prompt: np.ndarray):
+        """Chain-digest keys for the prompt's FULL blocks: key_j hashes
+        key_{j-1} with block j's tokens, so it commits to the entire content
+        of blocks 0..j and equal keys imply equal prefixes — at O(1) key
+        size and O(plen) total work per admission (a nested-tuple chain
+        would re-hash the whole prefix on every map probe)."""
+        bs = self.block_size
+        keys, h = [], b""
+        for j in range(len(prompt) // bs):
+            h = hashlib.blake2b(
+                h + np.ascontiguousarray(prompt[j * bs:(j + 1) * bs],
+                                         np.int32).tobytes(),
+                digest_size=16).digest()
+            keys.append(h)
+        return keys
+
+    def _admit_paged(self, s: int, req: Request, prompt: np.ndarray):
+        """Paged admission: map any cached prompt prefix onto its existing
+        physical blocks, allocate the rest, and prefill only what the cache
+        can't supply. Returns the slot's first generated token."""
+        plen = len(prompt)
+        bs = self.block_size
+        nblk = -(-plen // bs)
+        fb = plen // bs
+        keys = self._block_keys(prompt) if self.prefix_sharing else []
+        shared: list[int] = []
+        for key in keys:
+            if key not in self._prefix_map:
+                break
+            shared.append(self._prefix_map[key])
+        ns = len(shared)
+        if ns:
+            phys = np.zeros((self.max_blocks,), np.int32)
+            phys[:ns] = shared
+            self.alloc = self._share_prefix(self.alloc, s,
+                                            jnp.asarray(phys), ns)
+        if nblk > ns:
+            self.alloc = self._alloc_range(self.alloc, s, ns, nblk - ns)
+
+        if ns and ns == fb:
+            # Fully cached prompt: NO prefill forward. Teacher-force the sub-
+            # block remainder (and at least the final prompt token, which
+            # must run to produce the first-token logits). A block-aligned
+            # prompt replays its last token INTO the shared final block, so
+            # that block is copy-on-write'd to a private one first.
+            r = plen - ns * bs
+            t0 = ns * bs if r else plen - 1
+            kept_keys = keys[:ns]
+            if r == 0:
+                self.alloc, self.cache = self._cow(self.alloc, self.cache,
+                                                   s, fb - 1)
+                self.stats["cow_copies"] += 1
+                # after CoW this slot no longer maps the registered physical
+                # block for the final key — holding it would keep the map
+                # entry alive past the block's device refcount reaching 0
+                # (a later sharer would then map a freed/recycled block)
+                kept_keys = keys[:ns - 1]
+            self.cache = self._set_pos(self.cache, s, t0)
+            first = None
+            for t in prompt[t0:]:
+                self.cache, first = self._teacher_step(
+                    self.params, self.qweights, self.cache, self.state,
+                    self.alloc["table"], jnp.asarray(int(t), jnp.int32), s)
+                self.stats["teacher_steps"] += 1
+            self.state = self._arm_slot(self.state, s, first, req.max_new)
+            self.stats["shared_admissions"] += 1
+            req.prefix_keys = kept_keys
+        else:
+            l0, tail = self._prefill_shape(plen)
+            # tail > 0 only for hybrid ssm+attention archs (pure-SSM archs
+            # take the ring/state layout): the attention layers rule out the
+            # state-threaded tail forward, so teacher-force the remainder.
+            toks = np.zeros((1, max(l0, plen - tail)), np.int32)
+            toks[0, : plen - tail] = prompt[: plen - tail]
+            self.cache, self.state, first = self._prefill(
+                self.params, self.qweights, self.cache, self.state,
+                self.alloc["table"], jnp.asarray(toks), plen - tail, s,
+                req.max_new, ns)
+            self.stats["prefill_forwards"] += 1
+            for t in prompt[plen - tail:]:
+                self.cache, first = self._teacher_step(
+                    self.params, self.qweights, self.cache, self.state,
+                    self.alloc["table"], jnp.asarray(int(t), jnp.int32), s)
+                self.stats["teacher_steps"] += 1
+            if tail:
+                self.state = self._arm_slot(self.state, s, first,
+                                            req.max_new)
+            if keys:
+                # register this prompt's full blocks for later sharers; the
+                # table row read is an admission-time sync, not a tick sync
+                row = np.asarray(jax.device_get(self.alloc["table"][s]))
+                for j, key in enumerate(keys):
+                    self._prefix_map.setdefault(key, int(row[j]))
+                req.prefix_keys = keys
+        for key in req.prefix_keys:
+            self._key_refs[key] = self._key_refs.get(key, 0) + 1
+        self.stats["prefix_hit_blocks"] += ns
+        self.stats["prompt_blocks"] += fb
+        return first
+
+    def _admit_ring(self, s: int, req: Request, prompt: np.ndarray):
+        """Contiguous-layout admission. SSM prompts run the chunk-aligned
+        prefix in one forward, then absorb the < ssm_chunk remainder in a
+        SECOND batched forward that threads the slot's recurrent state into
+        the chunked scan (``prefill_slot_tail``) — no teacher-forced single
+        steps. A hybrid arch mixing recurrent-state and attention blocks
+        can't take the tail forward (attention has no carried state to
+        resume from), so its tail falls back to teacher-forced steps."""
+        plen = len(prompt)
+        l0, tail = self._prefill_shape(plen)
+        toks = np.zeros((1, max(l0, plen - tail)), np.int32)
+        toks[0, : plen - tail] = prompt[: plen - tail]
+        self.cache, self.state, first = self._prefill(
+            self.params, self.qweights, self.cache, self.state, None,
+            jnp.asarray(toks), plen - tail, s, req.max_new, 0)
+        self.stats["prefill_forwards"] += 1
+        if tail and self._state_only:
+            tail_toks = np.asarray(prompt[plen - tail:], np.int32)[None, :]
+            self.cache, first = self._prefill_tail(
+                self.params, self.qweights, self.cache,
+                jnp.asarray(tail_toks), s)
+            self.stats["tail_forwards"] += 1
+        elif tail:
+            for t in prompt[plen - tail:]:
+                self.cache, first = self._teacher_step(
+                    self.params, self.qweights, self.cache, self.state,
+                    None, jnp.asarray(int(t), jnp.int32), s)
+                self.stats["teacher_steps"] += 1
+        if tail:
+            self.state = self._arm_slot(self.state, s, first, req.max_new)
+        return first
+
+    def _retire(self, s: int, req: Request):
+        req.done = True
+        self.finished.append(req)
+        self.slot_req[s] = None
+        if self.paged:
+            self.alloc = self._free_slot_op(self.alloc, s)
+            for key in req.prefix_keys:
+                self._key_refs[key] -= 1
+                if self._key_refs[key] == 0:
+                    del self._key_refs[key]
+                    self._prefix_map.pop(key, None)
+
     def _admit(self):
         t0 = time.perf_counter()
         admitted = []
@@ -348,21 +618,10 @@ class ServingEngine:
                 assert 1 <= plen <= self.max_seq, (plen, self.max_seq)
                 self.slot_req[s] = req
                 prompt = np.asarray(req.prompt, np.int32)
-                l0, tail = self._prefill_shape(plen)
-                toks = np.zeros((1, max(l0, plen - tail)), np.int32)
-                toks[0, : plen - tail] = prompt[: plen - tail]
-                self.cache, self.state, first = self._prefill(
-                    self.params, self.qweights, self.cache, self.state,
-                    jnp.asarray(toks), plen - tail, s, req.max_new)
-                for t in prompt[plen - tail:]:
-                    self.cache, first = self._teacher_step(
-                        self.params, self.qweights, self.cache, self.state,
-                        jnp.asarray(int(t), jnp.int32), s)
-                if tail:
-                    self.state["last_tok"] = \
-                        self.state["last_tok"].at[s].set(first)
-                self.stats["prefill_forwards"] += 1
-                self.stats["tail_decode_steps"] += tail
+                if self.paged:
+                    first = self._admit_paged(s, req, prompt)
+                else:
+                    first = self._admit_ring(s, req, prompt)
                 self.stats["prompt_tokens"] += plen
                 self.stats["seed_equiv_forwards"] += plen
                 admitted.append((s, req, first))
@@ -370,9 +629,7 @@ class ServingEngine:
             req.output.append(int(first))
             self.stats["generated_tokens"] += 1
             if req.max_new <= 1:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[s] = None
+                self._retire(s, req)
         if admitted:
             self.stats["prefill_time_s"] += time.perf_counter() - t0
 
@@ -382,8 +639,8 @@ class ServingEngine:
         if all(r is None for r in self.slot_req):
             return False
         t0 = time.perf_counter()
-        self.cache, self.state, nxt, emitted, done = self._tick(
-            self.params, self.qweights, self.cache, self.state)
+        self.cache, self.state, self.alloc, nxt, emitted, done = self._tick(
+            self.params, self.qweights, self.cache, self.state, self.alloc)
         # The one host sync of the tick: three (slots,)-sized vectors.
         nxt, emitted, done = map(np.asarray,
                                  jax.device_get((nxt, emitted, done)))
@@ -395,10 +652,23 @@ class ServingEngine:
             req.output.append(int(nxt[s]))
             self.stats["generated_tokens"] += 1
             if done[s]:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[s] = None
+                self._retire(s, req)
         return True
+
+    def pool_stats(self) -> dict:
+        """Paged-pool occupancy snapshot (one small host sync; benchmarking
+        only — never called on the tick path)."""
+        if not self.paged:
+            return {}
+        n_free = int(jax.device_get(self.alloc["n_free"]))
+        hits, total = self.stats["prefix_hit_blocks"], self.stats[
+            "prompt_blocks"]
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "blocks_in_use": self.num_blocks - 1 - n_free,
+            "prefix_hit_rate": hits / total if total else 0.0,
+        }
 
     def run_to_completion(self, max_ticks: int = 1000):
         ticks = 0

@@ -1,0 +1,220 @@
+"""Paged KV cache: block pool, block tables, device-resident allocator.
+
+The paged serving substrate (DESIGN.md §10). Instead of one contiguous
+``(slots, max_seq, KV, hd)`` row per serving slot, each attention layer keeps
+a **pool** of ``num_blocks`` fixed-size token blocks
+
+    {"k": (num_blocks, block_size, KV, hd), "v": ...}
+
+(with a leading scan axis for pattern-stacked layers), and every slot owns a
+row of the shared **block table** ``(slots, max_blocks)`` mapping its logical
+block index to a physical block id (``-1`` = unallocated). One table serves
+every layer: an allocation reserves the same physical id across all pools.
+
+**Allocator.** The allocator state is four device arrays — a free *stack*
+(``free`` int32 vector + ``n_free`` scalar), per-block ``ref`` counts, and the
+block table — and every transition is a jitted gather/scatter:
+
+  * ``alloc_range`` / ``share_prefix``  — admission-time fills of a table row
+    (fresh pops, or mapping leading entries to another request's physical
+    blocks with a refcount bump: prefix sharing);
+  * ``tick_alloc``       — the in-decode-tick pop: rows whose position enters
+    an unallocated block each take one block off the stack *inside* the
+    jitted tick, so the §8 one-host-sync-per-tick contract survives paging;
+  * ``free_slot``        — retirement: decref the row, push blocks that hit
+    refcount 0 back on the stack;
+  * ``cow_block``        — copy-on-write: give a slot a private copy of one
+    shared block across every layer pool before it writes into it.
+
+Physical block 0 is reserved as the **garbage block**: writes by rows that
+must not touch the pool (inactive slots, masked prefill padding) are routed
+to it, and it is never referenced by a valid table entry, so it is never
+attended.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+              dtype=jnp.bfloat16):
+    """One attention layer's K/V block pool (unstacked)."""
+    shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_alloc(num_blocks: int, slots: int, max_blocks: int):
+    """Allocator state. Block 0 is the reserved garbage block, so the free
+    stack starts holding blocks ``1 .. num_blocks-1`` (``n_free`` of them);
+    entries past ``n_free`` are don't-care."""
+    free = jnp.concatenate([jnp.arange(1, num_blocks, dtype=jnp.int32),
+                            jnp.zeros((1,), jnp.int32)])
+    return {
+        "free": free,
+        "n_free": jnp.asarray(num_blocks - 1, jnp.int32),
+        "ref": jnp.zeros((num_blocks,), jnp.int32).at[0].set(1),
+        "table": jnp.full((slots, max_blocks), -1, jnp.int32),
+    }
+
+
+def alloc_range(alloc, slot, start, n):
+    """Pop ``n`` fresh blocks into ``table[slot, start:start+n]`` (ref=1).
+
+    ``slot`` / ``start`` / ``n`` may be traced scalars. The caller must
+    guarantee ``n <= n_free`` (the engine sizes the pool so a full slot
+    complement always fits; see DESIGN.md §10).
+    """
+    nb = alloc["free"].shape[0]
+    mb = alloc["table"].shape[1]
+    j = jnp.arange(mb)
+    take = (j >= start) & (j < start + n)
+    si = alloc["n_free"] - 1 - (j - start)
+    ids = alloc["free"][jnp.clip(si, 0, nb - 1)]
+    row = alloc["table"][slot]
+    return {
+        "free": alloc["free"],
+        "n_free": alloc["n_free"] - jnp.asarray(n, jnp.int32),
+        "ref": alloc["ref"].at[jnp.where(take, ids, 0)].add(
+            take.astype(jnp.int32)),
+        "table": alloc["table"].at[slot].set(jnp.where(take, ids, row)),
+    }
+
+
+def share_prefix(alloc, slot, phys, n):
+    """Map ``table[slot, :n]`` onto existing physical blocks ``phys[:n]``
+    (another request's prompt prefix), bumping their refcounts. ``phys`` is a
+    ``(max_blocks,)`` vector padded past ``n`` with anything."""
+    mb = alloc["table"].shape[1]
+    take = jnp.arange(mb) < n
+    row = alloc["table"][slot]
+    return {
+        "free": alloc["free"],
+        "n_free": alloc["n_free"],
+        "ref": alloc["ref"].at[jnp.where(take, phys, 0)].add(
+            take.astype(jnp.int32)),
+        "table": alloc["table"].at[slot].set(jnp.where(take, phys, row)),
+    }
+
+
+def free_slot(alloc, slot):
+    """Retire a slot: decref every valid table entry, push blocks whose
+    refcount hits 0 back on the stack (in row order), clear the row."""
+    nb = alloc["free"].shape[0]
+    row = alloc["table"][slot]
+    valid = row >= 0
+    safe = jnp.where(valid, row, 0)
+    ref = alloc["ref"].at[safe].add(-valid.astype(jnp.int32))
+    freed = valid & (ref[safe] == 0)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    # Junk (non-freed) scatter lanes write free[nb-1] back to itself: the
+    # stack holds at most nb-1 entries, so index nb-1 is never live.
+    idx = jnp.where(freed, alloc["n_free"] + rank, nb - 1)
+    vals = jnp.where(freed, safe, alloc["free"][nb - 1])
+    return {
+        "free": alloc["free"].at[idx].set(vals),
+        "n_free": alloc["n_free"] + jnp.sum(freed.astype(jnp.int32)),
+        "ref": ref,
+        "table": alloc["table"].at[slot].set(jnp.full_like(row, -1)),
+    }
+
+
+def tick_alloc(alloc, pos, mask, block_size: int):
+    """In-tick allocation: every row in ``mask`` whose current position lies
+    in an unallocated logical block pops one block off the free stack. Runs
+    INSIDE the jitted decode tick — no host round-trip."""
+    nb = alloc["free"].shape[0]
+    mb = alloc["table"].shape[1]
+    b = pos.shape[0]
+    lp = jnp.clip(pos, 0, mb * block_size - 1)
+    blk = lp // block_size
+    rows = jnp.arange(b)
+    cur = alloc["table"][rows, blk]
+    need = mask.astype(bool) & (cur < 0)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    ids = alloc["free"][jnp.clip(alloc["n_free"] - 1 - rank, 0, nb - 1)]
+    chosen = jnp.where(need, ids, cur)
+    return {
+        "free": alloc["free"],
+        "n_free": alloc["n_free"] - jnp.sum(need.astype(jnp.int32)),
+        "ref": alloc["ref"].at[jnp.where(need, ids, 0)].add(
+            need.astype(jnp.int32)),
+        "table": alloc["table"].at[rows, blk].set(chosen),
+    }
+
+
+def _is_pool(entry) -> bool:
+    return isinstance(entry, dict) and "k" in entry and "v" in entry
+
+
+def cow_block(alloc, layers, slot, blk):
+    """Copy-on-write: replace the shared block at ``table[slot, blk]`` with a
+    fresh private copy across every attention layer pool. The caller must
+    know the block is shared (ref > 1) — CoW of an unshared block would leak
+    it. Returns ``(alloc, layers)``."""
+    nb = alloc["free"].shape[0]
+    old = alloc["table"][slot, blk]
+    old_safe = jnp.clip(old, 0, nb - 1)
+    new = alloc["free"][jnp.clip(alloc["n_free"] - 1, 0, nb - 1)]
+
+    def copy_entry(entry):
+        if not _is_pool(entry):
+            return entry  # recurrent state rows: nothing to page
+        out = {}
+        for name, pool in entry.items():
+            if pool.ndim == 5:  # (R, nb, bs, KV, hd) scan-stacked
+                out[name] = pool.at[:, new].set(pool[:, old_safe])
+            else:
+                out[name] = pool.at[new].set(pool[old_safe])
+        return out
+
+    new_layers = [copy_entry(e) for e in layers]
+    alloc = {
+        "free": alloc["free"],
+        "n_free": alloc["n_free"] - 1,
+        "ref": alloc["ref"].at[old_safe].add(-1).at[new].set(1),
+        "table": alloc["table"].at[slot, blk].set(new),
+    }
+    return alloc, new_layers
+
+
+def write_prompt_blocks(pool, k, v, row, start_blk, nblk, block_size: int):
+    """Scatter a prompt's K/V into the pool as whole blocks.
+
+    ``pool``: {"k","v"} of (R?, num_blocks, bs, KV, hd); ``k``/``v``: the
+    prefill K/V for one slot, (R?, S, KV, hd) — S is padded here to a block
+    multiple. Blocks ``start_blk <= j < nblk`` land at ``row[j]``; the rest
+    (shared prefix the slot must not overwrite, and the pad tail) are routed
+    to the garbage block 0. ``start_blk`` / ``nblk`` may be traced.
+    """
+    bs = block_size
+    stacked = k.ndim == 4
+    s = k.shape[-3]
+    pad = (-s) % bs
+    if pad:
+        width = [(0, 0)] * k.ndim
+        width[-3] = (0, pad)
+        k = jnp.pad(k, width)
+        v = jnp.pad(v, width)
+    nblocks = (s + pad) // bs
+    if stacked:
+        r = k.shape[0]
+        kb = k.reshape(r, nblocks, bs, *k.shape[-2:])
+        vb = v.reshape(r, nblocks, bs, *v.shape[-2:])
+    else:
+        kb = k.reshape(nblocks, bs, *k.shape[-2:])
+        vb = v.reshape(nblocks, bs, *v.shape[-2:])
+    j = jnp.arange(nblocks)
+    write = (j >= start_blk) & (j < nblk)
+    phys = jnp.where(write, jnp.clip(row[:nblocks], 0, None), 0)
+    ck, cv = pool["k"], pool["v"]
+    if stacked:
+        ck = ck.at[:, phys].set(kb.astype(ck.dtype))
+        cv = cv.at[:, phys].set(vb.astype(cv.dtype))
+    else:
+        ck = ck.at[phys].set(kb.astype(ck.dtype))
+        cv = cv.at[phys].set(vb.astype(cv.dtype))
+    return {"k": ck, "v": cv}

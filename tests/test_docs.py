@@ -1,0 +1,104 @@
+"""Docs/code contract tests.
+
+Two invariants keep the documentation load-bearing instead of decorative:
+
+  * every ``DESIGN.md §N`` reference in ``src/`` and ``tests/`` must resolve
+    to an existing ``## §N`` section header in DESIGN.md (section numbers are
+    cited from code comments, so a renumber must sweep the repo);
+  * every ``path.py:symbol`` site named in ``docs/paper_map.md`` must exist —
+    the file is real, the symbol is defined in it, the referenced test
+    function exists, and every ``src/`` module in the table imports cleanly.
+"""
+
+import ast
+import importlib
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DESIGN = ROOT / "DESIGN.md"
+PAPER_MAP = ROOT / "docs" / "paper_map.md"
+
+
+def _design_sections() -> set[str]:
+    return set(re.findall(r"^## §(\d+)", DESIGN.read_text(), re.MULTILINE))
+
+
+def _code_refs():
+    """(path, section) for every DESIGN.md §N mention under src/ and tests/
+    (and the docs themselves)."""
+    refs = []
+    files = [*(ROOT / "src").rglob("*.py"), *(ROOT / "tests").rglob("*.py"),
+             PAPER_MAP, ROOT / "README.md"]
+    for path in files:
+        for m in re.finditer(r"DESIGN\.md §(\d+)|§(\d+)\b",
+                             path.read_text()):
+            sec = m.group(1) or m.group(2)
+            refs.append((path.relative_to(ROOT), sec))
+    return refs
+
+
+def test_design_section_references_resolve():
+    sections = _design_sections()
+    assert sections, "DESIGN.md has no ## §N headers?"
+    dangling = [(str(p), f"§{s}") for p, s in _code_refs()
+                if s not in sections]
+    assert not dangling, f"dangling DESIGN.md references: {dangling}"
+
+
+# ---------------------------------------------------------------------------
+# paper_map.md rows
+# ---------------------------------------------------------------------------
+
+
+def _map_rows():
+    """Every code/test site referenced from a paper_map.md TABLE row."""
+    rows = []
+    for line in PAPER_MAP.read_text().splitlines():
+        if line.startswith("|"):
+            rows.extend(re.findall(r"`([\w/.]+\.py):(\w+)`", line))
+    assert rows, "docs/paper_map.md has no table site references?"
+    return rows
+
+
+def _defined_symbols(path: Path) -> set[str]:
+    tree = ast.parse(path.read_text())
+    names = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+    return names
+
+
+@pytest.mark.parametrize("relpath,symbol", sorted(set(_map_rows())))
+def test_paper_map_site_exists(relpath, symbol):
+    path = ROOT / relpath
+    assert path.is_file(), f"paper_map names missing file {relpath}"
+    assert symbol in _defined_symbols(path), \
+        f"{relpath} does not define `{symbol}`"
+
+
+@pytest.mark.parametrize(
+    "relpath",
+    sorted({r for r, _ in _map_rows() if r.startswith("src/repro/")}))
+def test_paper_map_module_imports(relpath):
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        module = relpath[len("src/"):-len(".py")].replace("/", ".")
+        mod = importlib.import_module(module)
+        for r, symbol in _map_rows():
+            if r == relpath:
+                assert hasattr(mod, symbol), f"{module} lacks {symbol}"
+    finally:
+        sys.path.remove(str(ROOT / "src"))

@@ -1,0 +1,430 @@
+"""Paged KV cache tests (DESIGN.md §10).
+
+Four layers of coverage:
+  * the hard equivalence gate — paged decode logits match the ring-cache
+    path to bf16 tolerance on EVERY transformer config with attention;
+  * kernel validation — the Pallas paged-attention kernel (interpret mode)
+    against the pure-jnp oracle;
+  * allocator state machine — alloc / share / tick-alloc / CoW / free
+    round-trips on the device-resident free list;
+  * scheduler behavior — prefix sharing admits N same-prefix requests with
+    ONE prefill, copy-on-write isolates divergent continuations, and
+    retirement returns every block to the pool.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core.sites import QuantContext
+from repro.kernels.paged_attention.ops import paged_attention_op
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.models import transformer as tfm
+from repro.serving import kv_pool
+from repro.serving.engine import Request, ServingEngine
+
+ATTN_ARCHS = [
+    a for a in ALL_ARCHS
+    if any(k in ("global", "local")
+           for k in (list(get_smoke_config(a).block_pattern)
+                     + list(get_smoke_config(a).remainder_kinds)))
+]
+
+BS = 8          # block size
+MAX_SEQ = 32
+
+
+def _model(arch, seed=0):
+    cfg = get_smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _inputs(cfg, plen, key=0):
+    k = jax.random.PRNGKey(key)
+    if cfg.embed_input:
+        return jax.random.randint(k, (1, plen), 0, cfg.vocab_size)
+    return jax.random.normal(k, (1, plen, cfg.d_model), jnp.float32) * 0.3
+
+
+def _mrope(cfg, s):
+    if cfg.mrope_sections is None:
+        return None
+    return jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, 1, s))
+
+
+# ---------------------------------------------------------------------------
+# Equivalence gate: paged decode == ring decode on every transformer config
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ATTN_ARCHS)
+def test_paged_decode_matches_ring_every_config(arch):
+    """The acceptance gate: after an identical prefill, the paged block-pool
+    decode path must reproduce the ring-cache decode logits to bf16
+    tolerance, step after step, for every attention-bearing architecture
+    (global, local/ring-window, GQA/MQA/MHA, softcap, qk-norm, M-RoPE, MoE,
+    hybrid recurrent). Attention-free archs have no KV to page."""
+    cfg, params = _model(arch)
+    qc = QuantContext(mode="off")
+    plen = 9
+    x = _inputs(cfg, plen, key=1)
+
+    cache_r = tfm.init_cache(cfg, 1, MAX_SEQ)
+    logits_r, cache_r = tfm.prefill_slot(
+        qc, params, x, plen, cache_r, 0, cfg, mrope_pos=_mrope(cfg, plen))
+
+    mb = MAX_SEQ // BS
+    nb = mb + 1
+    cache_p = tfm.init_paged_cache(cfg, 1, nb, BS)
+    alloc = kv_pool.init_alloc(nb, 1, mb)
+    alloc = kv_pool.alloc_range(alloc, 0, 0, -(-plen // BS))
+    logits_p, cache_p = tfm.prefill_slot(
+        qc, params, x, plen, cache_p, 0, cfg, mrope_pos=_mrope(cfg, plen),
+        block_table=alloc["table"])
+
+    np.testing.assert_allclose(
+        np.asarray(logits_p[0, plen - 1, : cfg.vocab_size]),
+        np.asarray(logits_r[0, plen - 1, : cfg.vocab_size]),
+        rtol=2e-2, atol=2e-2)
+
+    rng = np.random.default_rng(2)
+    adv = jnp.ones((1,), jnp.int32)
+    for t in range(4):
+        if cfg.embed_input:
+            tok = jnp.asarray([int(rng.integers(0, cfg.vocab_size))],
+                              jnp.int32)
+        else:
+            tok = jax.random.normal(jax.random.PRNGKey(10 + t),
+                                    (1, 1, cfg.d_model), jnp.float32) * 0.3
+        lr, cache_r = tfm.decode_step(qc, params, cache_r, tok, cfg,
+                                      advance=adv)
+        alloc = kv_pool.tick_alloc(alloc, cache_p["pos"], adv, BS)
+        lp, cache_p = tfm.decode_step(qc, params, cache_p, tok, cfg,
+                                      advance=adv,
+                                      block_table=alloc["table"])
+        np.testing.assert_allclose(
+            np.asarray(lp[..., : cfg.vocab_size]),
+            np.asarray(lr[..., : cfg.vocab_size]),
+            rtol=2e-2, atol=2e-2, err_msg=f"{arch} step {t}")
+        assert int(cache_p["pos"][0]) == int(cache_r["pos"][0]) == plen + t + 1
+
+
+# ---------------------------------------------------------------------------
+# Kernel: Pallas (interpret) vs jnp oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window,softcap", [(None, None), (8, None),
+                                            (None, 30.0), (8, 50.0)])
+def test_paged_attention_pallas_matches_ref(window, softcap):
+    rng = np.random.default_rng(0)
+    b, kvh, g, hd, bs, mb, nb = 3, 2, 4, 16, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    # distinct physical blocks per row, with unallocated (-1) tails
+    table = np.full((b, mb), -1, np.int32)
+    phys = rng.permutation(np.arange(1, nb))
+    pos = np.asarray([5, 12, 25], np.int32)
+    k = 0
+    for r in range(b):
+        for j in range(int(pos[r]) // bs + 1):
+            table[r, j] = phys[k]
+            k += 1
+    table = jnp.asarray(table)
+    posj = jnp.asarray(pos)
+    want = paged_attention_ref(q, kp, vp, table, posj, window=window,
+                               softcap=softcap)
+    got = paged_attention_op(q, kp, vp, table, posj, window=window,
+                             softcap=softcap, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Allocator state machine
+# ---------------------------------------------------------------------------
+
+
+def _snap(alloc):
+    return {k: np.asarray(jax.device_get(v)) for k, v in alloc.items()}
+
+
+def test_alloc_free_roundtrip_preserves_free_list():
+    alloc = kv_pool.init_alloc(9, 2, 4)
+    a0 = _snap(alloc)
+    assert a0["n_free"] == 8 and a0["ref"][0] == 1
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 3)
+    alloc = kv_pool.alloc_range(alloc, 1, 0, 2)
+    a = _snap(alloc)
+    assert a["n_free"] == 3
+    row0, row1 = a["table"][0], a["table"][1]
+    assert (row0[:3] > 0).all() and (row1[:2] > 0).all()
+    used = set(row0[:3]) | set(row1[:2])
+    assert len(used) == 5, "blocks must be distinct"
+    assert all(a["ref"][i] == 1 for i in used)
+    alloc = kv_pool.free_slot(alloc, 0)
+    alloc = kv_pool.free_slot(alloc, 1)
+    a = _snap(alloc)
+    assert a["n_free"] == 8
+    assert (a["table"] == -1).all()
+    assert set(a["free"][:8]) == set(range(1, 9)), "free list lost blocks"
+    assert (a["ref"][1:] == 0).all()
+
+
+def test_share_prefix_refcounts_block_until_last_user_frees():
+    alloc = kv_pool.init_alloc(9, 2, 4)
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 2)
+    row0 = np.asarray(jax.device_get(alloc["table"][0]))
+    alloc = kv_pool.share_prefix(alloc, 1, jnp.asarray(row0), 2)
+    a = _snap(alloc)
+    assert (a["table"][1][:2] == row0[:2]).all()
+    assert all(a["ref"][i] == 2 for i in row0[:2])
+    alloc = kv_pool.free_slot(alloc, 0)
+    a = _snap(alloc)
+    assert a["n_free"] == 6, "shared blocks must survive the first free"
+    assert all(a["ref"][i] == 1 for i in row0[:2])
+    alloc = kv_pool.free_slot(alloc, 1)
+    a = _snap(alloc)
+    assert a["n_free"] == 8
+    assert set(a["free"][:8]) == set(range(1, 9))
+
+
+def test_tick_alloc_pops_only_for_rows_entering_new_blocks():
+    alloc = kv_pool.init_alloc(17, 4, 4)
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 1)
+    alloc = kv_pool.alloc_range(alloc, 1, 0, 1)
+    pos = jnp.asarray([8, 3, 0, 0], jnp.int32)   # row 0 crosses into block 1
+    mask = jnp.asarray([1, 1, 0, 0], jnp.int32)  # rows 2/3 idle
+    before = _snap(alloc)["n_free"]
+    alloc = kv_pool.tick_alloc(alloc, pos, mask, 8)
+    a = _snap(alloc)
+    assert a["n_free"] == before - 1
+    assert a["table"][0, 1] > 0 and a["ref"][a["table"][0, 1]] == 1
+    assert a["table"][1, 1] == -1           # row 1 still inside block 0
+    assert (a["table"][2:] == -1).all()     # idle rows untouched
+
+
+def test_cow_block_gives_private_copy():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    alloc = kv_pool.init_alloc(9, 2, 2)
+    pool = kv_pool.init_pool(cfg, 9, BS)
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 1)
+    old = int(jax.device_get(alloc["table"][0, 0]))
+    pool["k"] = pool["k"].at[old].set(1.5)
+    row0 = np.asarray(jax.device_get(alloc["table"][0]))
+    alloc = kv_pool.share_prefix(alloc, 1, jnp.asarray(row0), 1)
+    alloc, layers = kv_pool.cow_block(alloc, [pool], 1, 0)
+    a = _snap(alloc)
+    new = int(a["table"][1, 0])
+    assert new != old and a["ref"][old] == 1 and a["ref"][new] == 1
+    np.testing.assert_array_equal(
+        np.asarray(layers[0]["k"][new]), np.asarray(layers[0]["k"][old]))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: prefix sharing, CoW, retirement
+# ---------------------------------------------------------------------------
+
+
+def _solo_output(cfg, params, prompt, max_new, **kw):
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64, **kw)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=max_new))
+    return eng.run_to_completion()[0].output
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma2-2b",
+                                  "recurrentgemma-2b"])
+def test_engine_ring_and_paged_layouts_agree(arch):
+    """End-to-end: the engine emits identical token streams under both KV
+    layouts, with requests admitted mid-flight at staggered lengths."""
+    cfg, params = _model(arch)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(p),))
+               for p in (5, 9, 4, 12)]
+    outs = {}
+    for layout in ("ring", "paged"):
+        eng = ServingEngine(cfg, params, slots=2, max_seq=64,
+                            kv_layout=layout)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=6))
+        outs[layout] = {r.rid: r.output for r in eng.run_to_completion()}
+    assert outs["ring"] == outs["paged"]
+
+
+@pytest.mark.parametrize("plen", [11, 16])
+def test_prefix_sharing_admits_n_requests_with_one_prefill(plen):
+    """The headline paged-KV property: N same-prompt admissions run ONE
+    prefill forward (plus sub-block teacher steps), and every request's
+    output matches a solo run. plen=16 is block-aligned, exercising the
+    copy-on-write of the final shared block."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(plen)
+    prompt = rng.integers(0, cfg.vocab_size, (plen,))
+    n = 4
+    eng = ServingEngine(cfg, params, slots=n, max_seq=64)
+    for i in range(n):
+        eng.submit(Request(rid=i, prompt=prompt, max_new=5))
+    fin = {r.rid: r.output for r in eng.run_to_completion()}
+    st = eng.stats
+    assert st["prefill_forwards"] == 1, "N same-prefix admissions != 1 prefill"
+    assert st["shared_admissions"] == n - 1
+    assert st["teacher_steps"] <= (n - 1) * eng.block_size
+    if plen % eng.block_size == 0:
+        assert st["cow_copies"] == n - 1
+    want = _solo_output(cfg, params, prompt, 5)
+    for i in range(n):
+        assert fin[i] == want, f"shared request {i} diverged from solo"
+
+
+def test_divergent_prompts_share_leading_blocks_only():
+    """Two prompts equal through the first block but divergent INSIDE a
+    later full block map only their leading table entries to the same
+    physical blocks; the second request still runs its own prefill (from the
+    divergent block on) and both outputs match their solo runs."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(9)
+    head = rng.integers(0, cfg.vocab_size, (8,))
+    pa = np.concatenate([head, rng.integers(0, cfg.vocab_size, (9,))])
+    pb = np.concatenate([head, rng.integers(0, cfg.vocab_size, (9,))])
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=pa, max_new=4))
+    eng.submit(Request(rid=1, prompt=pb, max_new=4))
+    fin = {r.rid: r.output for r in eng.run_to_completion()}
+    st = eng.stats
+    assert st["prefix_hit_blocks"] == 1 and st["prompt_blocks"] == 4
+    assert st["prefill_forwards"] == 2   # divergence in block 1: both prefill
+    assert st["shared_admissions"] == 0
+    assert fin[0] == _solo_output(cfg, params, pa, 4)
+    assert fin[1] == _solo_output(cfg, params, pb, 4)
+
+
+def test_divergent_tail_takes_fast_path_with_private_block():
+    """Prompts sharing every FULL block but divergent in the sub-block tail
+    admit without a second prefill: the tail is teacher-forced into a
+    private block, so no CoW is needed and outputs match the solo runs."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(10)
+    head = rng.integers(0, cfg.vocab_size, (8,))
+    pa = np.concatenate([head, rng.integers(0, cfg.vocab_size, (3,))])
+    pb = np.concatenate([head, rng.integers(0, cfg.vocab_size, (3,))])
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=pa, max_new=4))
+    eng.submit(Request(rid=1, prompt=pb, max_new=4))
+    fin = {r.rid: r.output for r in eng.run_to_completion()}
+    st = eng.stats
+    assert st["prefill_forwards"] == 1 and st["shared_admissions"] == 1
+    assert st["cow_copies"] == 0 and st["teacher_steps"] == 3
+    assert fin[0] == _solo_output(cfg, params, pa, 4)
+    assert fin[1] == _solo_output(cfg, params, pb, 4)
+
+
+def test_cow_sharer_does_not_keep_stale_prefix_entry():
+    """Regression: a CoW'd sharer must drop the CoW'd block's prefix-cache
+    key. If it kept the key, the map entry would outlive the registrant's
+    retirement (which frees the physical block), and a later same-prefix
+    admission would map a freed — possibly recycled — block. Interleaving:
+    registrant A retires while CoW sharer B still runs, an unrelated
+    request D recycles A's freed blocks, then C re-admits the shared
+    prompt; C's output must match a solo run."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, (16,))   # block-aligned -> CoW
+    other = rng.integers(0, cfg.vocab_size, (16,))
+    eng = ServingEngine(cfg, params, slots=3, max_seq=64)
+    eng.submit(Request(rid=0, prompt=shared, max_new=2))    # registrant
+    eng.submit(Request(rid=1, prompt=shared, max_new=20))   # CoW sharer
+    while not any(r.rid == 0 for r in eng.finished):
+        eng.step()
+    assert eng.stats["cow_copies"] == 1
+    eng.submit(Request(rid=2, prompt=other, max_new=2))     # recycles blocks
+    eng.submit(Request(rid=3, prompt=shared, max_new=4))
+    fin = {r.rid: r.output for r in eng.run_to_completion()}
+    assert fin[3] == _solo_output(cfg, params, shared, 4), \
+        "late same-prefix admission mapped a freed/recycled block"
+
+
+def test_retirement_returns_all_blocks_and_evicts_prefix_cache():
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, (16,))
+    eng = ServingEngine(cfg, params, slots=3, max_seq=64)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=prompt, max_new=3))
+    mid_blocks = None
+    eng.step()
+    mid_blocks = eng.pool_stats()["blocks_in_use"]
+    assert mid_blocks > 0
+    eng.run_to_completion()
+    ps = eng.pool_stats()
+    assert ps["blocks_in_use"] == 0, "retirement leaked pool blocks"
+    assert not eng._prefix_map and not eng._key_refs
+    assert ps["prefix_hit_rate"] > 0
+
+
+def test_undersized_pool_rejected_at_construction():
+    """The in-tick allocator has no error path, so a pool too small to back
+    every slot at max_seq must be refused up front — an exhausted free
+    stack would silently alias one physical block into two slots."""
+    cfg, params = _model("tinyllama-1.1b")
+    with pytest.raises(ValueError, match="num_blocks"):
+        ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=16)
+    # exactly the minimum is fine
+    ServingEngine(cfg, params, slots=2, max_seq=16, num_blocks=2 * 2 + 1)
+
+
+def test_hybrid_ssm_attention_arch_serves_in_both_layouts():
+    """A jamba-style config mixing SSM and attention blocks has a sub-chunk
+    prefill tail but can't take the state-threaded tail forward (attention
+    has no carried state to resume) — both layouts must fall back to
+    teacher-forced tail steps and match the scan-of-decode-steps oracle."""
+    import dataclasses
+
+    base = get_smoke_config("tinyllama-1.1b")
+    cfg = dataclasses.replace(
+        base, name="hybrid-smoke", block_pattern=("ssm", "global"),
+        n_layers=4, ssm_state=16, ssm_head_dim=16, ssm_expand=2,
+        ssm_chunk=8, conv_kernel=4)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, (11,))  # chunk 8 -> 3-token tail
+
+    qc = QuantContext(mode="off")
+    cache = tfm.init_cache(cfg, 1, 32)
+    for t in prompt:
+        logits, cache = tfm.decode_step(qc, params, cache,
+                                        jnp.asarray([int(t)], jnp.int32), cfg)
+    want = [int(jnp.argmax(logits[0, 0, : cfg.vocab_size]))]
+    for _ in range(3):
+        logits, cache = tfm.decode_step(
+            qc, params, cache, jnp.asarray([want[-1]], jnp.int32), cfg)
+        want.append(int(jnp.argmax(logits[0, 0, : cfg.vocab_size])))
+
+    for layout in ("ring", "paged"):
+        eng = ServingEngine(cfg, params, slots=2, max_seq=32,
+                            kv_layout=layout)
+        eng.submit(Request(rid=0, prompt=prompt, max_new=4))
+        out = eng.run_to_completion()[0].output
+        assert out == want, f"{layout} hybrid tail diverged from oracle"
+        assert eng.stats["teacher_steps"] == 3
+
+
+def test_paged_int8_serve_mode():
+    """Paged layout composes with the int8 fused-dequant decode path."""
+    from repro.serving.engine import make_uniform_quant_state
+
+    cfg, params = _model("tinyllama-1.1b")
+    qs = make_uniform_quant_state(cfg, params)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, (9,))
+    outs = {}
+    for layout in ("ring", "paged"):
+        eng = ServingEngine(cfg, params, slots=2, max_seq=64, quant_state=qs,
+                            matmul_impl="ref", kv_layout=layout)
+        assert len(eng.qweights) >= 8
+        eng.submit(Request(rid=0, prompt=prompt, max_new=4))
+        outs[layout] = eng.run_to_completion()[0].output
+    assert outs["ring"] == outs["paged"]
