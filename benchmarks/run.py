@@ -207,6 +207,9 @@ def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
             st["seed_equiv_forwards"] * slots / max(admission_forwards, 1),
         "int8_sites": len(eng.qweights),
     }
+    if eng.export_ledger is not None:
+        # bytes/BOPs ledger of the artifact this run actually served
+        out["quant_report"] = eng.quant_report()
     if eng.paged:
         ps = eng.pool_stats()
         out.update({
@@ -250,6 +253,19 @@ def bench_serving(tier: str):
     print(f"serving_int8,{int8['decode_tok_s']:.0f},ttft_ms="
           f"{int8['ttft_s']*1e3:.1f};int8_sites={int8['int8_sites']}")
 
+    # mixed 2/4/8-bit export: packed sub-byte storage (DESIGN.md §11). The
+    # quant_report ledger in BENCH_serving.json is CI-asserted: packed
+    # bytes/weight must land strictly below the uniform-int8 baseline.
+    from repro.serving.engine import make_mixed_quant_state
+
+    qs_mixed = make_mixed_quant_state(cfg, params)
+    mixed = _serving_run(cfg, params, quant_state=qs_mixed, nreq=nreq)
+    t = mixed["quant_report"]["totals"]
+    print(f"serving_mixed_sub_byte,{mixed['decode_tok_s']:.0f},"
+          f"bytes_per_weight={t['bytes_per_weight']:.3f};"
+          f"vs_int8={t['bytes_per_weight']/t['uniform_int8_bytes_per_weight']:.2f}x;"
+          f"rbop={mixed['quant_report']['bops']['rbop']*100:.2f}%")
+
     # paged-KV additions (DESIGN.md §10): decode throughput at a high slot
     # count, and same-prefix admission cost through the prefix cache.
     hi_slots = {"smoke": 16, "quick": 24, "paper": 32}.get(tier, 16)
@@ -264,8 +280,9 @@ def bench_serving(tier: str):
           f"{prefix['prefill_forwards']};hit_rate="
           f"{prefix['prefix_hit_rate']:.2f}")
     print(f"serving_total,{(time.time()-t0)*1e6:.0f},"
-          f"requests={3*nreq + 2*hi_slots + nreq}")
+          f"requests={4*nreq + 2*hi_slots + nreq}")
     return {"fp32": fp32, "fp32_ring": ring, "int8": int8,
+            "mixed_sub_byte": mixed,
             "paged_high_slots": high, "prefix_sharing": prefix}
 
 

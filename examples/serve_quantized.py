@@ -1,9 +1,11 @@
 """Serving example: batched requests against a (smoke) LM with the
 continuous-batching engine — batched prefill, device-resident generation
-loop, and the CGMQ int8 fused-dequant decode path (DESIGN.md §8).
+loop, and the CGMQ mixed-precision packed-int decode path (DESIGN.md
+§8/§11).
 
     PYTHONPATH=src python examples/serve_quantized.py --arch tinyllama-1.1b
-    PYTHONPATH=src python examples/serve_quantized.py --fp32   # skip int8
+    PYTHONPATH=src python examples/serve_quantized.py --mixed  # 2/4/8-bit
+    PYTHONPATH=src python examples/serve_quantized.py --fp32   # skip int
 """
 
 import argparse
@@ -20,6 +22,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import transformer as tfm
 from repro.serving.engine import (Request, ServingEngine, export_int_codes,
+                                  make_mixed_quant_state,
                                   make_uniform_quant_state)
 
 
@@ -30,7 +33,10 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--fp32", action="store_true",
-                    help="serve fp32 instead of the int8 export")
+                    help="serve fp32 instead of the quantized export")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed 2/4/8-bit gates (packed sub-byte storage) "
+                         "instead of uniform 8-bit")
     ap.add_argument("--kv-layout", default="auto",
                     choices=["auto", "paged", "ring"],
                     help="KV cache substrate (DESIGN.md §10); auto = paged "
@@ -39,19 +45,37 @@ def main():
                     help="submit every request with one shared prompt to "
                          "demo paged prefix sharing (N admissions ~ 1 "
                          "prefill)")
+    ap.add_argument("--prefix-lru-blocks", type=int, default=0,
+                    help="retain up to this many fully-retired prefix "
+                         "blocks in an LRU pool (0 = evict at zero refs)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
-    qs = None if args.fp32 else make_uniform_quant_state(cfg, params)
+    if args.fp32:
+        qs = None
+    elif args.mixed:
+        qs = make_mixed_quant_state(cfg, params)
+    else:
+        qs = make_uniform_quant_state(cfg, params)
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
-                        quant_state=qs, kv_layout=args.kv_layout)
+                        quant_state=qs, kv_layout=args.kv_layout,
+                        prefix_lru_blocks=args.prefix_lru_blocks)
     if eng.qweights:
-        bits = sorted(set(eng.int8_report.values()))
-        print(f"serving int8 export: {len(eng.qweights)} sites at {bits} bits")
+        storages = sorted({qt.storage_bits for qt in eng.qweights.values()})
+        print(f"serving quantized export: {len(eng.qweights)} sites at "
+              f"{storages}-bit packed storage")
+        rep = eng.quant_report()
+        t = rep["totals"]
+        print(f"  device bytes/weight {t['bytes_per_weight']:.3f} incl. "
+              f"affine aux (uniform int8 = "
+              f"{t['uniform_int8_bytes_per_weight']:.3f}, fp32 = 4.0); "
+              f"{t['fallback_sites']} fake-quant fallback sites; "
+              f"RBOP {rep['bops']['rbop']*100:.2f}%")
     print(f"kv layout: {eng.kv_layout}"
           + (f" ({eng.num_blocks} blocks x {eng.block_size} tokens, "
-             f"prefix sharing {'on' if eng.prefix_sharing else 'off'})"
+             f"prefix sharing {'on' if eng.prefix_sharing else 'off'}, "
+             f"LRU retention {eng.lru_capacity} blocks)"
              if eng.paged else ""))
 
     rng = np.random.default_rng(0)
@@ -76,11 +100,12 @@ def main():
         print(f"  paged KV: prefix-hit rate {ps['prefix_hit_rate']:.2f}, "
               f"{st['shared_admissions']} shared admissions, "
               f"{st['cow_copies']} CoW copies, "
-              f"{ps['blocks_in_use']} blocks still in use")
+              f"{ps['blocks_in_use']} blocks still in use "
+              f"({ps['retained_blocks']} LRU-retained)")
     for r in sorted(finished, key=lambda r: r.rid):
         print(f"  req {r.rid}: {list(r.output)}")
 
-    # single-tensor export path: int8 codes for one weight
+    # single-tensor export path: packed codes for one weight
     b0 = params["blocks"][0]
     if "attn" in b0:
         w = b0["attn"]["wq"][0]
@@ -88,12 +113,13 @@ def main():
         w = b0["ssd"]["in_proj"][0]
     else:
         w = b0["rglru"]["wx"][0]
-    q = export_int_codes(w, gate=jnp.asarray(2.5),
-                         beta=jnp.max(jnp.abs(w)), signed=True)
-    deq_err = float(jnp.abs(
-        q["codes"].astype(jnp.float32) * q["scale"] + q["bias"] - w).max())
-    print(f"\nexported wq[0] at {q['bits']} bits; max dequant error "
-          f"{deq_err:.4f} (|w|max {float(jnp.abs(w).max()):.3f})")
+    for gate, label in ((2.5, "8-bit"), (1.5, "4-bit packed")):
+        q = export_int_codes(w, gate=jnp.asarray(gate),
+                             beta=jnp.max(jnp.abs(w)), signed=True)
+        deq_err = float(jnp.abs(q.dequantize() - w).max())
+        print(f"exported wq[0] {label}: {q.codes_bytes()} code bytes for "
+              f"{q.weight_count()} weights; max dequant error {deq_err:.4f} "
+              f"(|w|max {float(jnp.abs(w).max()):.3f})")
 
 
 if __name__ == "__main__":

@@ -22,15 +22,22 @@ activation -> Q(a)``). Models never touch gates directly; they call::
   export     -- weight-capture pass: ``weight()`` records the full tensor per
                 site name in ``weight_stats`` (stacked along the scan axis by
                 the existing stats plumbing) and everything else is identity.
-                Used by ``serving.engine.export_int_model`` to build the
-                site-name -> weight mapping without a hand-maintained table.
-  serve      -- deployment forward (DESIGN.md §8): matmul sites with an
-                int-code export in ``qweights`` dispatch the fused-dequant
-                GEMM (``layers.qmatmul`` consults ``serving_weight``);
-                remaining sites fall back to fake quantization at the learned
-                bit-width. Activations are fake-quantized exactly as in
-                ``train`` but with no stats / probes, so serve logits match
-                the train-mode fake-quant reference.
+                Used by ``quant.export.export_sites`` (via
+                ``serving.engine.export_int_model``) to build the site-name
+                -> weight mapping without a hand-maintained table.
+  serve      -- deployment forward (DESIGN.md §8/§11). Serve mode carries NO
+                gates or ranges: it runs off ``specs`` (site ->
+                ``quant.QuantSpec``, the frozen bits/range/sign the
+                controller certified) plus ``qweights`` (site ->
+                ``quant.QuantizedTensor``, the packed int-code export).
+                Matmul sites with an export dispatch the bit-width-matched
+                fused-dequant GEMM (``layers.qmatmul`` consults
+                ``serving_weight``); non-matmul callers of ``weight()`` get
+                the dequantized frozen codes; remaining sites fall back to
+                fake quantization at the spec bit-width. Activations
+                fake-quantize at the spec bits — numerically the train-mode
+                path with ``bits = T(g)`` precomputed — so serve logits
+                match the train-mode fake-quant reference.
 
 The probe trick: ``a + probe`` with ``probe = 0`` of the gate-group shape makes
 ``dL/dprobe = sum over batch (and group) of dL/da`` — exactly the
@@ -113,6 +120,7 @@ class QuantContext:
         ranges: dict[str, Any] | None = None,
         probes: dict[str, jnp.ndarray] | None = None,
         qweights: dict[str, Any] | None = None,
+        specs: dict[str, Any] | None = None,
         matmul_impl: str = "ref",
     ):
         assert mode in ("off", "collect", "calibrate", "train", "export",
@@ -123,8 +131,10 @@ class QuantContext:
         self.gates = gates or {}
         self.ranges = ranges or {}
         self.probes = probes or {}
-        # serve mode: site name -> {codes, scale, bias, bits} int-code export
+        # serve mode: site name -> quant.QuantizedTensor (packed int codes)
         self.qweights = qweights or {}
+        # serve mode: site name -> quant.QuantSpec (frozen bits/range/sign)
+        self.specs = specs or {}
         self.matmul_impl = matmul_impl
         # Outputs populated during tracing:
         self.sites: dict[str, SiteInfo] = {}
@@ -136,7 +146,7 @@ class QuantContext:
 
     # ---- naming / scan support -------------------------------------------
     def child(self, gates=None, ranges=None, probes=None,
-              qweights=None) -> "QuantContext":
+              qweights=None, specs=None) -> "QuantContext":
         """Sub-context for a ``lax.scan`` body with per-layer slices.
 
         The body must return ``(child.act_stats, child.weight_stats)`` as scan
@@ -149,6 +159,7 @@ class QuantContext:
             ranges=self.ranges if ranges is None else ranges,
             probes=self.probes if probes is None else probes,
             qweights=self.qweights if qweights is None else qweights,
+            specs=self.specs if specs is None else specs,
             matmul_impl=self.matmul_impl,
         )
         c._prefix = list(self._prefix)
@@ -236,14 +247,21 @@ class QuantContext:
         if self.mode in ("off", "collect", "calibrate") or not self.cfg.enabled:
             return w
         key = full + ".w"
+        if self.mode == "serve":
+            qt = self.qweights.get(key)
+            if qt is not None:
+                # Non-matmul consumers of an exported site (e.g. LeNet's
+                # explicit `h @ w`): serve the dequantized frozen codes, so
+                # every serving path reads the same artifact.
+                return qt.dequantize().astype(w.dtype)
+            # Fallback for sites without an int-code export (per-weight
+            # granularity, >8-bit, MoE/conv shapes): fake-quant at the
+            # spec bit-width, no stats or probes.
+            spec = self.specs[key]
+            return fake_quant(w, spec.bits, spec.beta, spec.signed)
         g = self.gates[key]
         beta = self.ranges[key]["beta"]
         signed = self.ranges[key]["signed"]
-        if self.mode == "serve":
-            # Fallback for sites without an int-code export (per-weight
-            # granularity, >8-bit, MoE/conv shapes): fake-quant at the
-            # learned bit-width, no stats or probes.
-            return self._fq(w, g, beta, signed)
         # Group-reduced |w| for dir_2/dir_3 (paper §2.3).
         self.weight_stats[key] = self._w_group_stat(w, g)
         # Probe param: dL/dprobe == (group-summed) dL/dw through the STE.
@@ -263,11 +281,10 @@ class QuantContext:
         if self.mode == "collect":
             return a
         if self.mode == "serve":
-            g = self.gates[key]
-            beta = self.ranges[key]["beta"]
-            signed = self.ranges[key]["signed"]
-            return self._fq(a, self._expand_act_gate(g, a),
-                            self._expand_act_gate(beta, a), signed)
+            spec = self.specs[key]
+            return fake_quant(a, self._expand_act_gate(spec.bits, a),
+                              self._expand_act_gate(spec.beta, a),
+                              spec.signed)
         if self.mode == "calibrate":
             # Running-range statistics (momentum handled by the caller loop).
             red = tuple(i for i in range(a.ndim) if i != a.ndim + feature_axis)

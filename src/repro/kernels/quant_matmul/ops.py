@@ -1,11 +1,17 @@
-"""Jit'd wrapper for the fused dequant GEMM.
+"""Jit'd wrappers for the bit-width-dispatched fused dequant GEMM.
 
-The kernel computes the complete affine dequant
+The kernels compute the complete affine dequant
 ``y = scale * (x @ codes) + bias * rowsum(x)`` (== ``x @ (codes*scale+bias)``
-exactly) in its epilogue; this wrapper flattens the leading activation dims,
-computes ``rowsum(x)`` (one VPU reduction, fused into the x load by XLA) and
-picks the Pallas kernel or the pure-jnp oracle. See quant_matmul.py for the
-kernel contract.
+exactly) in their epilogue; these wrappers flatten the leading activation
+dims, compute ``rowsum(x)`` (one VPU reduction, fused into the x load by
+XLA) and pick the Pallas kernel or the pure-jnp oracle. See quant_matmul.py
+for the kernel contracts.
+
+``quant_matmul_op`` is the raw int8 entry point (unchanged: the oracle path
+every packed configuration is gated against). ``quant_matmul_qt`` is the
+serving dispatcher: it takes a ``quant.QuantizedTensor`` and selects the
+int8 or packed-sub-byte kernel from its static storage class — the one
+place bit-width dispatch happens, for every model layer.
 """
 
 from __future__ import annotations
@@ -15,8 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .quant_matmul import quant_matmul_pallas
-from .ref import quant_matmul_ref
+from .quant_matmul import quant_matmul_packed_pallas, quant_matmul_pallas
+from .ref import quant_matmul_packed_ref, quant_matmul_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -39,3 +45,49 @@ def quant_matmul_op(
     else:
         y = quant_matmul_ref(x2, codes, scale, bias)
     return y.reshape(orig[:-1] + (codes.shape[1],))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "k", "use_pallas", "interpret"))
+def quant_matmul_packed_op(
+    x: jnp.ndarray,
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    bits: int,
+    k: int,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Packed twin of ``quant_matmul_op``: packed (ceil(K/per), N) uint8."""
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1]).astype(jnp.float32)
+    if use_pallas:
+        rowsum = jnp.sum(x2, axis=1)
+        y = quant_matmul_packed_pallas(x2, packed, scale, bias, rowsum,
+                                       bits=bits, k=k, interpret=interpret)
+    else:
+        y = quant_matmul_packed_ref(x2, packed, scale, bias, bits=bits, k=k)
+    return y.reshape(orig[:-1] + (packed.shape[-1],))
+
+
+def quant_matmul_qt(x, qt, *, use_pallas: bool = True,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Serving dispatcher: ``y = x @ dequant(qt)`` off a QuantizedTensor.
+
+    Static dispatch on ``qt.storage_bits`` (pytree aux data, so each jit /
+    scan specialization compiles exactly one kernel per site): 8-bit codes
+    take the int8 kernel unchanged; 2/4-bit packed codes take the fused
+    unpack+dequant kernel. ``scale``/``bias`` arrive per-tensor (scalar-ish)
+    or per-channel; the kernel contract is per-output-channel (N,) vectors.
+    """
+    n = qt.codes.shape[-1]
+    scale = jnp.broadcast_to(qt.scale.reshape(-1), (n,))
+    bias = jnp.broadcast_to(qt.bias.reshape(-1), (n,))
+    if qt.storage_bits == 8:
+        return quant_matmul_op(x, qt.codes, scale, bias,
+                               use_pallas=use_pallas, interpret=interpret)
+    return quant_matmul_packed_op(
+        x, qt.codes, scale, bias, bits=qt.storage_bits, k=qt.k,
+        use_pallas=use_pallas, interpret=interpret)

@@ -1,9 +1,12 @@
-"""Pallas TPU kernel: fused int8-dequant GEMM (CGMQ serving path).
+"""Pallas TPU kernels: bit-width-dispatched fused dequant GEMM (CGMQ
+serving path).
 
-Weights exported by CGMQ (core.quantizer.quantize_to_int) are stored as int8
-codes with per-output-channel affine terms ``w = codes * scale + bias``.
-Serving wants ``y = x @ w`` without materializing the fp16/fp32 weight in
-HBM — the Marlin/AWQ idiom (taxonomy B.12) adapted to the MXU:
+Weights exported by CGMQ (``quant.QuantizedTensor``) are stored as integer
+codes with per-output-channel affine terms ``w = codes * scale + bias`` —
+int8 words for the 8-bit storage class, bit-PACKED uint8 words for the 2/4-
+bit classes (``quant.pack``: ``8 // bits`` codes per byte along K). Serving
+wants ``y = x @ w`` without materializing the fp16/fp32 weight in HBM — the
+Marlin/AWQ idiom (taxonomy B.12) adapted to the MXU:
 
     y[m, n] = scale[n] * (x @ codes)[m, n] + bias[n] * rowsum(x)[m]
 
@@ -12,16 +15,24 @@ rank-1 bias term reuses ``rowsum(x)``, a single cheap VPU reduction over the
 activations, which the wrapper (ops.py) computes once and feeds in as a
 fourth operand. Both terms are applied in the epilogue on the final K step,
 while the fp32 output tile is still in VMEM — the full affine dequant costs
-zero extra passes over the (M, N) output in HBM. int8 codes halve (vs bf16)
-or quarter (vs fp32) the weight bytes streamed from HBM — decode is
-weight-bandwidth-bound, so roofline time drops proportionally.
+zero extra passes over the (M, N) output in HBM.
+
+The PACKED variant additionally unpacks the sub-byte codes in-register
+(shift/mask on the int32-widened tile, interleave, ONE dot) before the same
+epilogue — the weight bytes streamed from HBM are ``K * bits / 8`` per
+column, i.e. 16x fewer than fp32 at 2 bits. Decode is weight-bandwidth-
+bound, so roofline decode time drops proportionally to the certified
+bit-width, not to a uniform int8 floor.
 
 Tiling: grid (M/bm, N/bn, K/bk); accumulation in the fp32 output tile across
 the K grid dimension (output revisiting), 128-aligned tiles for the MXU.
+For the packed kernel the K block is counted in UNPACKED columns (``bk``
+must be a multiple of ``8 // bits``; the packed block is ``bk * bits / 8``
+rows), so the two kernels share one grid/masking scheme.
 
-Kernel contract (DESIGN.md §8):
+Kernel contract (DESIGN.md §8/§11):
     x:      (M, K)  fp32/bf16 activations
-    codes:  (K, N)  int8 centered codes
+    codes:  (K, N) int8 centered codes, or (ceil(K/per), N) uint8 packed
     scale:  (N,)    fp32 per-output-channel scale
     bias:   (N,)    fp32 per-output-channel offset (asymmetric / unsigned
                     grids; exactly zero only for symmetric signed grids)
@@ -104,3 +115,86 @@ def quant_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         interpret=interpret,
     )(x, codes, scale, bias, rowsum)
+
+
+# ---------------------------------------------------------------------------
+# Packed sub-byte variant: fused unpack + dequant GEMM
+# ---------------------------------------------------------------------------
+
+
+def _packed_kernel(x_ref, p_ref, s_ref, b_ref, r_ref, o_ref, *, bits: int,
+                   k_steps: int, k_total: int, bk: int):
+    per = 8 // bits
+    offset = 1 << (bits - 1)
+    mask = (1 << bits) - 1
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                # (bm, bk)
+    # Mask x columns past K: pack-padding words and ragged-K block tails
+    # then multiply a zeroed activation, so garbage codes contribute nothing.
+    k0 = pl.program_id(2) * bk
+    kx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + k0
+    x = jnp.where(kx < k_total, x, 0.0)
+    p = p_ref[...].astype(jnp.int32)                  # (bk // per, bn)
+    # In-register unpack: byte i holds codes i*per + j (j little-endian).
+    cols = [((p >> (j * bits)) & mask) - offset for j in range(per)]
+    stacked = jnp.stack(cols, axis=1)                 # (bk//per, per, bn)
+    codes = stacked.reshape(bk, stacked.shape[-1]).astype(jnp.float32)
+    o_ref[...] += jax.lax.dot(x, codes, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = (
+            o_ref[...] * s_ref[...][None, :]
+            + r_ref[...][:, None] * b_ref[...][None, :]
+        )
+
+
+def quant_matmul_packed_pallas(
+    x: jnp.ndarray,
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    rowsum: jnp.ndarray,
+    *,
+    bits: int,
+    k: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x: (M, K); packed: (ceil(K/per), N) uint8 sub-byte codes.
+
+    Returns (M, N) fp32 ``x @ (unpack(packed) * scale + bias)`` with the
+    unpack fused into the K loop (see module docstring). ``bits`` in {2, 4};
+    ``k`` is the logical (unpacked) fan-in.
+    """
+    assert bits in (2, 4), bits
+    per = 8 // bits
+    m = x.shape[0]
+    kp, n = packed.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    # K block in unpacked columns, forced to a whole number of packed rows.
+    bkp = min(max(block_k // per, 1), kp)
+    bk = bkp * per
+    k_steps = pl.cdiv(kp, bkp)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps)
+    return pl.pallas_call(
+        functools.partial(_packed_kernel, bits=bits, k_steps=k_steps,
+                          k_total=k, bk=bk),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkp, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=interpret,
+    )(x, packed, scale, bias, rowsum)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused dequant GEMM."""
+"""Pure-jnp oracles for the fused dequant GEMM (int8 and packed)."""
 
 from __future__ import annotations
 
@@ -13,3 +13,18 @@ def quant_matmul_ref(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
     """
     w = codes.astype(jnp.float32) * scale[None, :] + bias[None, :]
     return x.astype(jnp.float32) @ w
+
+
+def quant_matmul_packed_ref(x: jnp.ndarray, packed: jnp.ndarray,
+                            scale: jnp.ndarray, bias: jnp.ndarray, *,
+                            bits: int, k: int) -> jnp.ndarray:
+    """Packed oracle: unpack to int8 codes, then ``quant_matmul_ref``.
+
+    Literally unpack-then-int8-oracle, so the packed serving path is
+    bit-for-bit identical to the int8 path whenever the pack/unpack
+    round-trip is exact (guaranteed by ``quant.pack``) — the property the
+    every-config equivalence test in ``tests/test_serving.py`` pins down.
+    """
+    from repro.quant.pack import unpack_codes
+
+    return quant_matmul_ref(x, unpack_codes(packed, bits, k), scale, bias)

@@ -32,10 +32,11 @@ def qmatmul(qc: QuantContext, name: str, x, w, *, positions: int = 1,
     bf16 with fp32 accumulation. The *output activation* quantization is the
     caller's job (after the nonlinearity, paper Fig. 1) via ``qc.act``.
 
-    In serve mode, sites with an int-code export dispatch the fused-dequant
-    GEMM instead (Pallas on TPU, jnp reference elsewhere — DESIGN.md §8): the
-    fp weight is never materialized, ``y = x @ (codes * scale + bias)`` comes
-    straight off the int8 codes.
+    In serve mode, sites with an int-code export dispatch the bit-width-
+    matched fused-dequant GEMM instead (Pallas on TPU, jnp reference
+    elsewhere — DESIGN.md §8/§11): the fp weight is never materialized,
+    ``y = x @ (codes * scale + bias)`` comes straight off the int8 codes —
+    unpacked in-kernel for 2/4-bit packed storage.
     """
     if register:
         qc.register_matmul(
@@ -44,15 +45,10 @@ def qmatmul(qc: QuantContext, name: str, x, w, *, positions: int = 1,
         )
     qw = qc.serving_weight(name)
     if qw is not None:
-        from repro.kernels.quant_matmul.ops import quant_matmul_op
+        from repro.kernels.quant_matmul.ops import quant_matmul_qt
 
-        n = qw["codes"].shape[-1]
-        # scale/bias arrive per-tensor (scalar-ish) or per-channel; the
-        # kernel contract is per-output-channel (N,) vectors.
-        scale = jnp.broadcast_to(qw["scale"].reshape(-1), (n,))
-        bias = jnp.broadcast_to(qw["bias"].reshape(-1), (n,))
-        y = quant_matmul_op(
-            x, qw["codes"], scale, bias,
+        y = quant_matmul_qt(
+            x, qw,
             use_pallas=qc.matmul_impl != "ref",
             interpret=qc.matmul_impl != "pallas",
         )

@@ -120,3 +120,23 @@ WEIGHT_LOOKUP = {
 
 def weight_lookup(params):
     return lambda name: params.get(WEIGHT_LOOKUP.get(name, ""), None)
+
+
+def export_qweights(params, gates, betas, signed, *, pack: bool = True):
+    """Freeze a CGMQ-trained LeNet for deployment (DESIGN.md §11).
+
+    Same path as the transformer exporter: one export-mode forward captures
+    every site's weight under its canonical name, then
+    ``quant.export.export_sites`` packs the eligible ones (the fc matmuls;
+    the 4-D conv kernels are ledgered as shape fallbacks and serve
+    fake-quant). Serve with ``QuantContext(mode="serve",
+    specs=quant.specs_from_state(gates, betas, signed), qweights=...)`` —
+    ``qc.weight`` dequantizes the frozen codes for the explicit ``h @ w``
+    matmuls, so the classification path serves the same artifact format as
+    the LLM engine.
+    """
+    from repro.quant import export_sites
+
+    qc = QuantContext(mode="export")
+    forward(qc, params, jnp.zeros((1, 28, 28, 1), jnp.float32))
+    return export_sites(qc, gates, betas, signed, pack=pack)

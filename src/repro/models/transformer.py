@@ -256,17 +256,23 @@ def _prefixed(d: dict, prefix: str) -> dict:
 
 
 def _scan_quant_xs(qc: QuantContext, prefix: str):
-    """Per-layer-stacked quant state entering the scan as xs."""
+    """Per-layer-stacked quant state entering the scan as xs.
+
+    Train mode stacks gates/betas/probes; serve mode stacks the frozen
+    ``QuantSpec``s and ``QuantizedTensor``s instead (both are pytrees, so
+    ``lax.scan`` slices their per-layer leaves exactly like raw arrays).
+    """
     return (
         _prefixed(qc.gates, prefix),
         {k: v["beta"] for k, v in qc.ranges.items() if k.startswith(prefix)},
         _prefixed(qc.probes, prefix),
         _prefixed(qc.qweights, prefix),
+        _prefixed(qc.specs, prefix),
     )
 
 
 def _child_for_slice(qc: QuantContext, gates_s, betas_s, probes_s,
-                     qweights_s=None):
+                     qweights_s=None, specs_s=None):
     ranges = dict(qc.ranges)
     for k, b in betas_s.items():
         ranges[k] = {"beta": b, "signed": qc.ranges[k]["signed"]}
@@ -275,6 +281,7 @@ def _child_for_slice(qc: QuantContext, gates_s, betas_s, probes_s,
         ranges=ranges,
         probes={**qc.probes, **probes_s},
         qweights={**qc.qweights, **(qweights_s or {})},
+        specs={**qc.specs, **(specs_s or {})},
     )
 
 
@@ -332,13 +339,14 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
 
     for pi, kind in enumerate(pat):
         prefix = f"p{pi}_{kind}/"
-        gates_xs, betas_xs, probes_xs, qw_xs = _scan_quant_xs(qc, prefix)
+        gates_xs, betas_xs, probes_xs, qw_xs, sp_xs = _scan_quant_xs(
+            qc, prefix)
         init_xs = None if init_state is None else init_state[pi]
 
         def body(carry, xs, _pi=pi, _kind=kind, _prefix=prefix):
             hh = carry
-            bp, g_s, b_s, p_s, qw_s, init_s = xs
-            sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s)
+            bp, g_s, b_s, p_s, qw_s, sp_s, init_s = xs
+            sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s, sp_s)
             with sub.scope(_prefix[:-1]):
                 hh, cache_entry = _apply_block_full(
                     sub, bp, hh, cfg, _kind, positions=positions,
@@ -356,7 +364,8 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
             bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
             init_s = (None if init_xs is None
                       else jax.tree.map(lambda x: x[0], init_xs))
-            ys = body(h, (bp, gates_xs, betas_xs, probes_xs, qw_xs, init_s))
+            ys = body(h, (bp, gates_xs, betas_xs, probes_xs, qw_xs, sp_xs,
+                          init_s))
             h, out = ys
             qc.absorb_stacked_stats(out[0], out[1])
             if want_cache:
@@ -365,19 +374,20 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
 
         body_fn = jax.checkpoint(body) if remat else body
         unroll = reps if scan_unroll else 1
-        if qc.mode == "collect":
+        if qc.mode in ("collect", "export"):
+            # both modes register sites; the stack multiplier must match
             with qc.layer_stack(reps):
                 h, ys = jax.lax.scan(
                     body_fn, h,
                     (params["blocks"][pi], gates_xs, betas_xs, probes_xs,
-                     qw_xs, init_xs),
+                     qw_xs, sp_xs, init_xs),
                     unroll=unroll,
                 )
         else:
             h, ys = jax.lax.scan(
                 body_fn, h,
                 (params["blocks"][pi], gates_xs, betas_xs, probes_xs, qw_xs,
-                 init_xs),
+                 sp_xs, init_xs),
                 unroll=unroll,
             )
         qc.absorb_stacked_stats(ys[0], ys[1])
@@ -661,12 +671,13 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
     new_layers = []
     for pi, kind in enumerate(pat):
         prefix = f"p{pi}_{kind}/"
-        gates_xs, betas_xs, probes_xs, qw_xs = _scan_quant_xs(qc, prefix)
+        gates_xs, betas_xs, probes_xs, qw_xs, sp_xs = _scan_quant_xs(
+            qc, prefix)
 
         def body(carry, xs, _kind=kind, _prefix=prefix):
             hh = carry
-            bp, lc, g_s, b_s, p_s, qw_s = xs
-            sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s)
+            bp, lc, g_s, b_s, p_s, qw_s, sp_s = xs
+            sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s, sp_s)
             with sub.scope(_prefix[:-1]):
                 hh, nc = _apply_block_decode(
                     sub, bp, hh, lc, pos, cfg, _kind,
@@ -678,23 +689,24 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
         if cfg.pattern_repeats == 1:
             bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
             lc = jax.tree.map(lambda x: x[0], cache["layers"][pi])
-            h, nc = body(h, (bp, lc, gates_xs, betas_xs, probes_xs, qw_xs))
+            h, nc = body(h, (bp, lc, gates_xs, betas_xs, probes_xs, qw_xs,
+                             sp_xs))
             new_layers.append(jax.tree.map(lambda x: x[None], nc))
             continue
 
         unroll = cfg.pattern_repeats if scan_unroll else 1
-        if qc.mode == "collect":
+        if qc.mode in ("collect", "export"):
             with qc.layer_stack(cfg.pattern_repeats):
                 h, nc = jax.lax.scan(
                     body, h,
                     (params["blocks"][pi], cache["layers"][pi], gates_xs,
-                     betas_xs, probes_xs, qw_xs), unroll=unroll,
+                     betas_xs, probes_xs, qw_xs, sp_xs), unroll=unroll,
                 )
         else:
             h, nc = jax.lax.scan(
                 body, h,
                 (params["blocks"][pi], cache["layers"][pi], gates_xs,
-                 betas_xs, probes_xs, qw_xs), unroll=unroll,
+                 betas_xs, probes_xs, qw_xs, sp_xs), unroll=unroll,
             )
         new_layers.append(nc)
 

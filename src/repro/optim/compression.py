@@ -12,7 +12,9 @@ residual so compression error does not bias convergence:
 
 Implemented with ``shard_map`` over the ``pod`` axis only — the int8 payload
 is what crosses pods, visible as an 8-bit collective in the dry-run HLO
-(4x fewer inter-pod bytes than fp32, 2x fewer than bf16).
+(4x fewer inter-pod bytes than fp32, 2x fewer than bf16). The wire format
+itself (blockwise symmetric int8) lives with every other integer
+storage/wire format in ``repro.quant`` (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -22,27 +24,17 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.quant import blockwise_int8_decode, blockwise_int8_encode
+
 BLOCK = 256
 
 
 def _q8_flat(x):
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % BLOCK
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True),
-                        1e-12) / 127.0
-    codes = jnp.round(blocks / scale).astype(jnp.int8)
-    return codes, scale.astype(jnp.float32)
+    return blockwise_int8_encode(x, BLOCK)
 
 
 def _dq8_flat(codes, scale, shape):
-    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
-    n = 1
-    for d in shape:
-        n *= d
-    return flat[:n].reshape(shape)
+    return blockwise_int8_decode(codes, scale, shape)
 
 
 def compressed_psum_leaf(g, resid, axis: str):

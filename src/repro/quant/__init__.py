@@ -1,0 +1,31 @@
+"""One quantization representation from controller to kernel (DESIGN.md §11).
+
+Before this package the repo carried three divergent quantization
+representations: training fake-quant (gates + learnable ranges in
+``core/quantizer.py`` / ``core/gates.py``), the serving export's ad-hoc
+``{codes, scale, bias, bits}`` dicts, and the serve-time ``QuantContext``
+re-deriving bit-widths from gates. They are consolidated here:
+
+  * ``spec.QuantSpec``      — one per-site spec (bit-widths, range, sign) the
+                              CGMQ controller emits; a pytree, so it rides
+                              through jit / scan exactly like the gates did.
+  * ``spec.QuantizedTensor``— one frozen weight: (packed) integer codes plus
+                              the affine dequant terms, at a 2/4/8-bit
+                              storage class. What the exporter produces and
+                              the kernels consume.
+  * ``pack``                — sub-byte bit packing (2/4-bit codes into int8
+                              words) with round-trip guarantees.
+  * ``export``              — the model-agnostic exporter: capture weights
+                              via an export-mode forward, freeze each
+                              eligible site, ledger the rest.
+  * ``report``              — the bytes/BOPs ledger (``quant_report``): what
+                              the served artifact actually costs vs fp32 and
+                              vs uniform int8.
+"""
+
+from .export import ExportLedger, export_sites  # noqa: F401
+from .pack import (blockwise_int8_decode, blockwise_int8_encode,  # noqa: F401
+                   pack_codes, unpack_codes)
+from .report import quant_report  # noqa: F401
+from .spec import (QuantSpec, QuantizedTensor,  # noqa: F401
+                   specs_from_state)

@@ -1,0 +1,154 @@
+"""Model-agnostic quantized-weight export (DESIGN.md §11).
+
+``export_sites`` turns the weights captured by an export-mode forward
+(``QuantContext(mode="export")`` records every site's full weight tensor
+under its canonical name) into ``QuantizedTensor``s at the learned per-site
+bit-widths, and ledgers EVERY site — exported or not. The transformer
+wrapper is ``serving.engine.export_int_model``; LeNet exports through
+``models.lenet.export_qweights``; both share this code path, so the old
+per-model ad-hoc export dicts are gone.
+
+The ledger is the fix for the silent >8-bit fallback: a site the exporter
+rejects (trained above 8 bits, per-weight granularity, non-2-D weight) used
+to vanish from the report and silently serve fake-quant — a "quantized"
+model could ship fp32 sites with no trace. Now every rejection is recorded
+with its reason, and an export with >8-bit rejections warns once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gates import gate_to_bits
+
+from .spec import QuantizedTensor, storage_class_for
+
+
+@dataclasses.dataclass
+class ExportLedger:
+    """Per-site record of what the export did (one entry per ``.w`` key).
+
+    Entry fields: ``served`` ("int" | "fake_quant"), ``bits`` (max learned
+    bit-width; None for ungated sites), ``storage_bits`` (2/4/8, exported
+    sites only), ``reason`` (fallback sites only: "bits>8" | "granularity"
+    | "shape" | "ungated"), ``weight_count``, ``codes_bytes`` /
+    ``aux_bytes`` (exported) or ``fp_bytes`` (fallback: the fp32 tensor
+    keeps living on device).
+    """
+
+    entries: dict[str, dict] = dataclasses.field(default_factory=dict)
+    sites: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def exported(self) -> dict[str, dict]:
+        return {k: e for k, e in self.entries.items() if e["served"] == "int"}
+
+    def fallbacks(self) -> dict[str, dict]:
+        return {k: e for k, e in self.entries.items()
+                if e["served"] == "fake_quant"}
+
+    def max_bits(self) -> dict[str, int]:
+        """Site -> max learned bit-width (the old ``report`` dict, exported
+        sites only — kept for engine/benchmark summaries)."""
+        return {k: e["bits"] for k, e in self.exported().items()}
+
+
+def _expand_group(a, w, stacked: bool):
+    """Broadcast a gate-group array against weight ``w``.
+
+    Group shapes are () (per-tensor) or (N,) (per-channel), with a leading
+    stack axis when ``stacked``; channels align with w's LAST axis.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    if stacked:
+        core = a.shape[1:]
+        return a.reshape((a.shape[0],) + (1,) * (w.ndim - 1 - len(core)) + core)
+    if a.ndim == 0:
+        return a
+    return a.reshape((1,) * (w.ndim - a.ndim) + a.shape)
+
+
+def _weight_count(w) -> int:
+    n = 1
+    for d in w.shape:
+        n *= int(d)
+    return n
+
+
+def export_sites(qc, gates: dict, betas: dict, signed: dict, *,
+                 pack: bool = True, warn: bool = True):
+    """Freeze every eligible captured site; ledger all of them.
+
+    ``qc`` is an export-mode ``QuantContext`` that has been run through a
+    forward (``qc.weight_stats`` holds the tensors, ``qc.sites`` the
+    metadata). Eligible: per-tensor / per-channel gates over a 2-D weight
+    (scan-stacked allowed), learned max bit-width <= 8. The int grid
+    reproduces the fake-quant grid EXACTLY (mixed per-channel widths ride in
+    scale/bias; codes are stored at the site's 2/4/8 storage class, packed
+    sub-byte when ``pack``). ``pack=False`` forces the unpacked int8 oracle
+    layout — the packed path's bit-for-bit reference.
+
+    Returns ``(qweights, ledger)``: ``qweights`` maps "<site>.w" ->
+    ``QuantizedTensor`` (absent for fallback sites, which serve fake-quant
+    at their learned bits); ``ledger`` is the complete ``ExportLedger``.
+    """
+    qweights: dict[str, QuantizedTensor] = {}
+    ledger = ExportLedger(sites=dict(qc.sites))
+    for key, w in qc.weight_stats.items():
+        site = qc.sites.get(key[: -len(".w")])
+        if site is None:
+            continue
+        w = jnp.asarray(w)
+        if key not in gates:
+            # A captured site the quant_state knows nothing about (config /
+            # checkpoint mismatch): it will serve full precision — record
+            # it, don't let it vanish.
+            ledger.entries[key] = {
+                "served": "fake_quant", "bits": None, "reason": "ungated",
+                "weight_count": _weight_count(w),
+                "fp_bytes": 4 * _weight_count(w)}
+            continue
+        g = jnp.asarray(gates[key])
+        bits = gate_to_bits(g)
+        max_bits = int(np.asarray(jax.device_get(bits)).max())
+        entry = {"served": "fake_quant", "bits": max_bits,
+                 "weight_count": _weight_count(w), "fp_bytes": 4 * _weight_count(w)}
+        ledger.entries[key] = entry
+        if len(site.weight_shape) != 2:
+            entry["reason"] = "shape"
+            continue
+        stacked = w.ndim == len(site.weight_shape) + 1
+        core = g.shape[1:] if stacked else g.shape
+        if core not in ((), (w.shape[-1],)):
+            entry["reason"] = "granularity"  # per-weight: no per-element scale
+            continue
+        if stacked and (g.ndim == 0 or g.shape[0] != w.shape[0]):
+            entry["reason"] = "granularity"
+            continue
+        storage = storage_class_for(max_bits)
+        if storage is None:
+            entry["reason"] = "bits>8"  # int storage can't carry the grid
+            continue
+        qt = QuantizedTensor.from_float(
+            w, _expand_group(bits, w, stacked),
+            _expand_group(jnp.asarray(betas[key]), w, stacked),
+            bool(signed[key]), storage_bits=storage, pack=pack)
+        qweights[key] = qt
+        entry.update(served="int", storage_bits=qt.storage_bits,
+                     codes_bytes=qt.codes_bytes(), aux_bytes=qt.aux_bytes())
+        del entry["fp_bytes"]
+    high = [k for k, e in ledger.entries.items()
+            if e.get("reason") in ("bits>8", "ungated")]
+    if warn and high:
+        warnings.warn(
+            f"export: {len(high)} site(s) (trained above 8 bits, or absent "
+            f"from the quant state) keep full-precision weights on device: "
+            f"{sorted(high)[:4]}{'...' if len(high) > 4 else ''} — the "
+            f"served model is NOT fully integer-quantized",
+            UserWarning, stacklevel=2)
+    return qweights, ledger

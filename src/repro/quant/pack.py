@@ -1,0 +1,108 @@
+"""Sub-byte bit packing for quantized weight codes (DESIGN.md §11).
+
+2- and 4-bit codes are packed along the K (fan-in) axis into int8-sized
+words so the device array for a b-bit site really is ``ceil(K * b / 8)``
+bytes per output channel — the memory the CGMQ controller certified, not a
+byte per code.
+
+Layout (consumed by the packed ``quant_matmul`` kernel): byte ``i`` of a
+column holds codes ``i*per + j`` for ``j in 0..per-1`` (``per = 8 // bits``),
+code ``j`` in bits ``[j*b, (j+1)*b)`` — little-endian within the byte, K
+consecutive within a word. Codes are stored *biased* (centered code +
+``2^(b-1)``, i.e. unsigned), so packing needs no sign handling; unpacking
+subtracts the offset back. A K tail shorter than ``per`` is zero-padded;
+``unpack_codes`` slices it off, and the matmul kernels instead mask the
+matching activation columns (padding codes only ever multiply a zeroed x).
+
+Round-trip guarantee: ``unpack_codes(pack_codes(c, b), b, K) == c`` for any
+int codes in ``[-2^(b-1), 2^(b-1)-1]``, any K (odd / ragged included), any
+leading batch/stack dims — property-tested in ``tests/test_quant_spec.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Codes per packed byte for each sub-byte storage class.
+CODES_PER_BYTE = {2: 4, 4: 2, 8: 1}
+
+
+def packed_rows(k: int, bits: int) -> int:
+    """Packed K-axis length: ``ceil(k / (8 // bits))``."""
+    per = CODES_PER_BYTE[bits]
+    return -(-k // per)
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack centered int codes (..., K, N) into uint8 (..., ceil(K/per), N).
+
+    ``bits`` in {2, 4}; 8-bit codes have nothing to pack (use them as-is).
+    Values must lie in the signed b-bit range ``[-2^(b-1), 2^(b-1)-1]``.
+    """
+    assert bits in (2, 4), bits
+    per = CODES_PER_BYTE[bits]
+    offset = 1 << (bits - 1)
+    k = codes.shape[-2]
+    pad = (-k) % per
+    biased = (codes.astype(jnp.int32) + offset).astype(jnp.uint8)
+    if pad:
+        width = [(0, 0)] * codes.ndim
+        width[-2] = (0, pad)
+        biased = jnp.pad(biased, width)  # tail values never unpacked/attended
+    kp = (k + pad) // per
+    grouped = biased.reshape(biased.shape[:-2] + (kp, per, biased.shape[-1]))
+    out = jnp.zeros(grouped.shape[:-2] + grouped.shape[-1:], jnp.uint8)
+    for j in range(per):
+        out = out | (grouped[..., j, :] << (j * bits))
+    return out
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
+    """Inverse of ``pack_codes``: uint8 (..., Kp, N) -> int8 (..., k, N)."""
+    assert bits in (2, 4), bits
+    per = CODES_PER_BYTE[bits]
+    offset = 1 << (bits - 1)
+    mask = (1 << bits) - 1
+    p = packed.astype(jnp.int32)
+    cols = [(p >> (j * bits)) & mask for j in range(per)]
+    stacked = jnp.stack(cols, axis=-2)  # (..., Kp, per, N)
+    flat = stacked.reshape(stacked.shape[:-3]
+                           + (stacked.shape[-3] * per, stacked.shape[-1]))
+    sl = [slice(None)] * flat.ndim
+    sl[-2] = slice(0, k)
+    return (flat[tuple(sl)] - offset).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise symmetric int8 (the gradient-compression wire format)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_int8_encode(x: jnp.ndarray, block: int):
+    """Flatten ``x`` and absmax-quantize int8 per ``block`` elements.
+
+    Returns ``(codes (nblk, block) int8, scale (nblk, 1) fp32)`` — the
+    symmetric per-block grid used by the inter-pod gradient compression
+    (``optim/compression.py``); the same affine-grid family as the weight
+    export, kept here so every integer wire/storage format lives in one
+    package.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True),
+                        1e-12) / 127.0
+    codes = jnp.round(blocks / scale).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def blockwise_int8_decode(codes: jnp.ndarray, scale: jnp.ndarray,
+                          shape: tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of ``blockwise_int8_encode`` (crops the block padding)."""
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)

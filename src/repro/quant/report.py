@@ -1,0 +1,93 @@
+"""The bytes/BOPs ledger: what the served artifact actually costs
+(DESIGN.md §11).
+
+CGMQ certifies a BOP budget at training time; ``quant_report`` verifies the
+*deployed* artifact realizes it — per-site device bytes under packed
+sub-byte storage, and the model BOP count — against two baselines: fp32 and
+a uniform-int8 export (what the old serving path shipped for every model,
+regardless of certified 2/4-bit sites). Surfaced by
+``benchmarks/run.py --json`` into ``BENCH_serving.json`` and asserted by CI
+(bytes/weight strictly below the uniform-int8 baseline on a mixed export).
+"""
+
+from __future__ import annotations
+
+from repro.core import bop as bop_lib
+
+
+def quant_report(ledger, gates: dict) -> dict:
+    """Bytes + BOPs of an export vs fp32 and uniform-int8 baselines.
+
+    ``ledger``: the ``ExportLedger`` from ``quant.export.export_sites``;
+    ``gates``: the trained gate pytree (for the certified BOP count).
+
+    Returns a plain-JSON dict:
+      per_site:  key -> {served, bits, storage_bits?, bytes, weight_count}
+      totals:    weight_count, bytes_packed (codes/fp tensors), bytes_aux
+                 (fp32 scale+bias — real device residents, counted in every
+                 headline number), bytes_device, bytes_uniform_int8,
+                 bytes_fp32, bytes_per_weight, uniform_int8_bytes_per_weight,
+                 packed_vs_int8 / packed_vs_fp32 ratios, fallback_sites
+      bops:      model (certified, from gates), fp32, uniform_int8, rbop
+
+    Baseline convention: the uniform-int8 baseline is what the pre-§11
+    serving path shipped — every exported site at 1 byte/code with the SAME
+    affine terms (identical scale/bias shapes at any storage class), and
+    fallback sites at their fp32 bytes. So packed-vs-int8 isolates exactly
+    the storage-class change, with aux bytes on both sides of the ratio.
+    """
+    per_site = {}
+    total_w = 0
+    bytes_packed = 0
+    bytes_aux = 0
+    bytes_int8 = 0
+    for key, e in ledger.entries.items():
+        n = e["weight_count"]
+        total_w += n
+        if e["served"] == "int":
+            site_bytes = e["codes_bytes"]
+            bytes_aux += e["aux_bytes"]
+            bytes_int8 += n  # uniform int8: one byte per code, same aux
+        else:
+            site_bytes = e["fp_bytes"]  # fallback keeps the fp32 tensor
+            bytes_int8 += e["fp_bytes"]
+        bytes_packed += site_bytes
+        per_site[key] = {
+            "served": e["served"],
+            "bits": e["bits"],
+            "storage_bits": e.get("storage_bits"),
+            "reason": e.get("reason"),
+            "bytes": site_bytes + e.get("aux_bytes", 0),
+            "weight_count": n,
+        }
+    sites = ledger.sites
+    bops_fp32 = bop_lib.fp32_bop(sites)
+    bops_int8 = sum(s.macs_per_token * s.stack * 8.0 * 8.0
+                    for s in sites.values() if s.act_quantized)
+    bops_model = float(bop_lib.model_bop(sites, gates)) if gates else 0.0
+    bytes_device = bytes_packed + bytes_aux
+    bytes_uniform_int8 = bytes_int8 + bytes_aux
+    totals = {
+        "weight_count": total_w,
+        "bytes_packed": bytes_packed,
+        "bytes_aux": bytes_aux,
+        "bytes_device": bytes_device,
+        "bytes_uniform_int8": bytes_uniform_int8,
+        "bytes_fp32": 4 * total_w,
+        "bytes_per_weight": bytes_device / max(total_w, 1),
+        "uniform_int8_bytes_per_weight": bytes_uniform_int8 / max(total_w, 1),
+        "packed_vs_int8": bytes_device / max(bytes_uniform_int8, 1),
+        "packed_vs_fp32": bytes_device / max(4 * total_w, 1),
+        "fallback_sites": len(ledger.fallbacks()),
+        "exported_sites": len(ledger.exported()),
+    }
+    return {
+        "per_site": per_site,
+        "totals": totals,
+        "bops": {
+            "model": bops_model,
+            "fp32": bops_fp32,
+            "uniform_int8": bops_int8,
+            "rbop": bops_model / bops_fp32 if bops_fp32 else 0.0,
+        },
+    }

@@ -1,0 +1,198 @@
+"""QuantSpec / QuantizedTensor: the single quantization representation
+(DESIGN.md §11).
+
+``QuantSpec`` is what the CGMQ controller emits for one site: the bit-width
+array implied by its (clamped) gates, the learned range, and the sign
+convention — as a registered pytree, so specs thread through jit and
+``lax.scan`` exactly like the raw gate arrays they replace. Serve-mode
+``QuantContext`` consumes specs directly (no gates at inference time), the
+exporter freezes weights against them, and the kernels consume the result.
+
+``QuantizedTensor`` is one frozen weight: integer codes — bit-packed for
+2/4-bit storage classes — plus the affine dequant terms, with the storage
+class and logical K as static metadata. ``dequantize()`` lands on the same
+grid as ``core.quantizer.quantize`` (via ``quantize_to_int``; values agree
+to fp32 rounding), and packing is lossless: the packed path's unpacked
+codes equal the int8 layout bit-for-bit, so packed serving is bitwise
+identical to the int8 oracle path.
+
+The gate→bits→storage-class logic that used to be copy-pasted between
+``serving/engine.py`` and the quantizer lives in ``QuantSpec.from_gate`` /
+``storage_bits`` — every call site imports it from here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gates import gate_to_bits
+from repro.core.quantizer import quantize_to_int
+
+from .pack import pack_codes, unpack_codes
+
+# Integer storage classes the serving path can carry (bits -> packed words).
+STORAGE_CLASSES = (2, 4, 8)
+SERVE_MIN_BITS = 2
+SERVE_MAX_BITS = 8
+
+
+def storage_class_for(max_bits: int) -> int | None:
+    """Smallest 2/4/8-bit storage class holding ``max_bits``-bit codes.
+
+    ``None`` when the site exceeds the serving GEMM's 8-bit ceiling — the
+    canonical clamp-to-[2, 8] decision, deduplicated here from the old
+    ``serving/engine.py`` / quantizer copies.
+    """
+    max_bits = max(int(max_bits), SERVE_MIN_BITS)
+    for b in STORAGE_CLASSES:
+        if max_bits <= b:
+            return b
+    return None
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantSpec:
+    """Per-site quantization spec: bits + range + sign, as one pytree.
+
+    ``bits``/``beta`` are gate-group shaped (per-tensor scalar, per-channel
+    ``(N,)``, per-weight full shape; leading stack axis for scan-stacked
+    sites) and broadcast against the tensor exactly like the gate arrays
+    they were derived from. ``signed`` is static (python bool).
+    """
+
+    bits: jnp.ndarray
+    beta: jnp.ndarray
+    signed: bool
+
+    def tree_flatten(self):
+        return (self.bits, self.beta), (self.signed,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, beta = children
+        return cls(bits=bits, beta=beta, signed=aux[0])
+
+    @classmethod
+    def from_gate(cls, gate, beta, signed: bool) -> "QuantSpec":
+        """Freeze a trained gate into a spec: ``bits = T(max(g, 0.5))``.
+
+        This is THE gate→bits entry point for deployment — the controller's
+        Eq. 4 transform with the no-pruning clamp, shared by the model
+        exporter, the single-tensor export helper and the serve-time
+        activation quantizers.
+        """
+        return cls(bits=gate_to_bits(jnp.asarray(gate)),
+                   beta=jnp.asarray(beta, jnp.float32), signed=bool(signed))
+
+    # ---- host-side (concrete) queries ------------------------------------
+    def max_bits(self) -> int:
+        """Largest bit-width in the spec (host sync; export-time only)."""
+        return int(np.asarray(jax.device_get(self.bits)).max())
+
+    def storage_bits(self) -> int | None:
+        """The site's integer storage class, or None (> 8 bits: fp fallback).
+        """
+        return storage_class_for(self.max_bits())
+
+
+def specs_from_state(gates: dict, betas: dict, signed: dict) -> dict:
+    """Controller state -> spec pytree: one ``QuantSpec`` per gated key.
+
+    ``gates``/``betas``/``signed`` are the ``quant_state`` maps produced by
+    training (``.w`` and ``.a`` keys). This is what a serve-mode
+    ``QuantContext`` carries instead of raw gates + ranges.
+    """
+    return {k: QuantSpec.from_gate(g, betas[k], signed[k])
+            for k, g in gates.items()}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """One exported weight: (packed) integer codes + affine dequant terms.
+
+    ``codes`` is uint8 bit-packed ``(..., ceil(K/per), N)`` for 2/4-bit
+    storage, int8 ``(..., K, N)`` for the 8-bit class (the unpacked oracle
+    layout). ``scale``/``bias`` broadcast to the unpacked code shape;
+    ``codes * scale + bias`` equals the fake-quant forward exactly.
+    ``storage_bits`` and the logical fan-in ``k`` are static, so jit/scan
+    specialization dispatches the right kernel per site.
+    """
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+    bias: jnp.ndarray
+    storage_bits: int
+    k: int
+
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.bias), (self.storage_bits, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale, bias = children
+        return cls(codes=codes, scale=scale, bias=bias,
+                   storage_bits=aux[0], k=aux[1])
+
+    @property
+    def packed(self) -> bool:
+        return self.storage_bits < 8
+
+    @classmethod
+    def from_float(cls, w, bits, beta, signed: bool, *,
+                   storage_bits: int, pack: bool = True) -> "QuantizedTensor":
+        """Freeze ``w`` on the ``bits`` grid into ``storage_bits`` storage.
+
+        ``bits``/``beta`` broadcast against ``w`` (mixed per-channel widths
+        ride in scale/bias; codes of a ``b <= storage_bits`` channel always
+        fit the storage class). ``pack=False`` keeps the int8 oracle layout
+        regardless of storage class — the packed path's equivalence
+        reference.
+        """
+        codes, scale, bias = quantize_to_int(w, bits, beta, signed)
+        k = int(w.shape[-2])
+        if pack and storage_bits < 8:
+            return cls(codes=pack_codes(codes, storage_bits), scale=scale,
+                       bias=bias, storage_bits=storage_bits, k=k)
+        return cls(codes=codes.astype(jnp.int8), scale=scale, bias=bias,
+                   storage_bits=8, k=k)
+
+    def int8_codes(self) -> jnp.ndarray:
+        """Unpacked centered codes ``(..., K, N)`` int8 (oracle layout)."""
+        if not self.packed:
+            return self.codes
+        return unpack_codes(self.codes, self.storage_bits, self.k)
+
+    def dequantize(self) -> jnp.ndarray:
+        """fp32 weight on the exact fake-quant grid."""
+        return self.int8_codes().astype(jnp.float32) * self.scale + self.bias
+
+    # ---- accounting (static; no device sync) ------------------------------
+    def codes_bytes(self) -> int:
+        """Device bytes of the code array (1 byte per stored word)."""
+        n = 1
+        for d in self.codes.shape:
+            n *= int(d)
+        return n
+
+    def aux_bytes(self) -> int:
+        """Device bytes of the affine terms (fp32 scale + bias)."""
+        n = 0
+        for a in (self.scale, self.bias):
+            m = 1
+            for d in jnp.shape(a):
+                m *= int(d)
+            n += 4 * m
+        return n
+
+    def weight_count(self) -> int:
+        """Logical weight element count (unpacked: stack x K x N)."""
+        n = 1
+        for d in self.codes.shape[:-2]:
+            n *= int(d)
+        return n * self.k * int(self.codes.shape[-1])

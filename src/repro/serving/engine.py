@@ -1,21 +1,24 @@
 """Batched serving engine over the CGMQ-quantized model.
 
-The deployment half of the CGMQ story (DESIGN.md §8). ``export_int_model``
-freezes a trained (params, gates, ranges) triple into int8 codes + affine
-terms per site — the ``quant_matmul`` kernel's format — and ``ServingEngine``
-runs a slot-based continuous-batching scheduler whose hot path actually
-serves that artifact:
+The deployment half of the CGMQ story (DESIGN.md §8/§11).
+``export_int_model`` freezes a trained (params, gates, ranges) triple into
+``quant.QuantizedTensor``s — packed sub-byte codes + affine terms per site,
+the ``quant_matmul`` kernel family's format — and ``ServingEngine`` runs a
+slot-based continuous-batching scheduler whose hot path actually serves
+that artifact:
 
   * **batched prefill** — each admitted request runs its whole prompt through
     ONE causal forward (``tfm.prefill_slot``), which writes the slot's KV
     range / recurrent state in one shot. The seed engine scanned
     ``decode_step`` token-by-token with the token broadcast across all
     slots: O(prompt_len x slots) slot-forwards per admission, now 1.
-  * **int8 decode** — with a ``quant_state``, decode runs in serve mode:
-    every exported matmul site dispatches the fused-dequant GEMM
-    (``quant_matmul``: Pallas on TPU, jnp reference elsewhere) straight off
-    int8 codes instead of fake-quant-then-fp32-matmul, so decode streams a
-    quarter of the weight bytes.
+  * **mixed-precision integer decode** — with a ``quant_state``, decode runs
+    in serve mode: every exported matmul site dispatches the bit-width-
+    matched fused-dequant GEMM (``quant_matmul_qt``: Pallas on TPU, jnp
+    reference elsewhere) straight off packed 2/4/8-bit codes instead of
+    fake-quant-then-fp32-matmul, so decode streams the weight bytes the
+    controller certified — ``bits/8`` of a byte per weight, not a uniform
+    int8 (let alone fp32) footprint.
   * **device-resident generation loop** — greedy sampling, the per-slot
     position bump and done-flag computation all live inside the jitted tick;
     the Python loop does ONE small host sync per batch tick (next tokens +
@@ -29,6 +32,7 @@ vector), so slots at unrelated sequence positions share one decode step.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import time
@@ -39,10 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.gates import gate_to_bits
-from repro.core.quantizer import quantize_to_int
-from repro.core.sites import QuantContext, merge_ranges
+from repro.core.sites import QuantContext
 from repro.models import transformer as tfm
+from repro.quant import (QuantizedTensor, QuantSpec, export_sites,
+                         quant_report, specs_from_state)
 from repro.serving import kv_pool
 
 
@@ -51,72 +55,40 @@ from repro.serving import kv_pool
 # ---------------------------------------------------------------------------
 
 
-def export_int_codes(w, gate, beta, signed: bool):
-    """Int-code export for one tensor at its learned bit-width."""
-    bits = int(np.asarray(gate_to_bits(jnp.asarray(gate))).max())
-    bits = max(2, min(bits, 8))  # serving GEMM packs <= 8 bits
-    codes, scale, bias = quantize_to_int(w, bits, beta, signed)
-    return {"codes": codes, "scale": scale, "bias": bias, "bits": bits}
+def export_int_codes(w, gate, beta, signed: bool) -> QuantizedTensor:
+    """Single-tensor export at its learned bit-width (packed sub-byte).
 
-
-def _expand_group(a, w, stacked: bool):
-    """Broadcast a gate-group array against weight ``w``.
-
-    Group shapes are () (per-tensor) or (N,) (per-channel), with a leading
-    stack axis when ``stacked``; channels align with w's LAST axis.
+    The gate→bits→storage-class decision is ``QuantSpec.from_gate`` /
+    ``storage_bits`` — the same constructor the full-model exporter uses.
+    Gates above 8 bits clamp to the 8-bit storage ceiling here (this helper
+    has no fake-quant fallback to reject into).
     """
-    a = jnp.asarray(a, jnp.float32)
-    if stacked:
-        core = a.shape[1:]
-        return a.reshape((a.shape[0],) + (1,) * (w.ndim - 1 - len(core)) + core)
-    if a.ndim == 0:
-        return a
-    return a.reshape((1,) * (w.ndim - a.ndim) + a.shape)
-
-
-def _site_int_export(w, gate, beta, signed: bool, stacked: bool):
-    """One dense site -> ({codes, scale, bias}, max_bits) or None.
-
-    Eligible layouts: per-tensor / per-channel gates over a (K, N) weight,
-    optionally scan-stacked to (R, K, N). The int grid reproduces the
-    fake-quant grid EXACTLY (per-layer mixed bit-widths ride in scale/bias),
-    so serve-mode logits match the fake-quant reference. Sites trained above
-    8 bits are rejected — int8 can't carry their grid — and fall back to
-    fake-quant in serve mode.
-    """
-    g = jnp.asarray(gate)
-    w = jnp.asarray(w)
-    core = g.shape[1:] if stacked else g.shape
-    if core not in ((), (w.shape[-1],)):
-        return None  # per-weight granularity: kernel has no per-element scale
-    if stacked and (g.ndim == 0 or g.shape[0] != w.shape[0]):
-        return None
-    bits = gate_to_bits(g)
-    max_bits = int(np.asarray(jax.device_get(bits)).max())
-    if max_bits > 8:
-        return None
-    codes, scale, bias = quantize_to_int(
-        w, _expand_group(bits, w, stacked), _expand_group(beta, w, stacked),
-        signed)
-    return {"codes": codes, "scale": scale, "bias": bias}, max_bits
+    spec = QuantSpec.from_gate(gate, beta, signed)
+    storage = spec.storage_bits() or 8
+    bits = jnp.minimum(spec.bits, float(storage))
+    return QuantizedTensor.from_float(w, bits, spec.beta, spec.signed,
+                                      storage_bits=storage)
 
 
 def export_int_model(params, cfg: ModelConfig, quant_state: dict, *,
-                     plan=None):
-    """Full-model int-code export for the serving GEMM.
+                     plan=None, pack: bool = True, warn: bool = True):
+    """Full-model quantized export for the serving GEMMs.
 
     Captures every matmul site's weight tensor via an export-mode forward —
     the same code path serving runs, so site names line up by construction
     (scan-stacked sites come back stacked along the scan axis, exactly the
-    layout the decode scan re-slices). Each eligible dense site is then
-    quantized at its learned per-site (per-layer, per-channel) bit-widths.
+    layout the decode scan re-slices) — then freezes each eligible dense
+    site through ``quant.export.export_sites`` at its learned per-site
+    (per-layer, per-channel) bit-widths, packed into its 2/4/8-bit storage
+    class (``pack=False`` keeps the unpacked int8 oracle layout).
 
     ``quant_state``: {"qcfg", "gates", "betas", "signed"} as used for
-    train-mode forwards. Returns ``(qweights, report)``: ``qweights`` maps
-    "<site>.w" -> {codes, scale, bias} arrays (the pytree ``decode_step``
-    threads through its scan alongside gates); ``report`` maps the same keys
-    to the exported max bit-width. Ineligible sites (per-weight granularity,
-    >8-bit, MoE/conv weight shapes) are absent and served via fake-quant.
+    train-mode forwards. Returns ``(qweights, ledger)``: ``qweights`` maps
+    "<site>.w" -> ``QuantizedTensor`` (the pytree ``decode_step`` threads
+    through its scan alongside the specs); ``ledger`` is the
+    ``quant.ExportLedger`` recording EVERY site — including the ones
+    rejected to fake-quant fallback (per-weight granularity, >8-bit,
+    MoE/conv weight shapes), which used to be silently invisible.
     """
     qc = QuantContext(mode="export")
     s = 8  # long enough for chunked-SSD block sizes at smoke scale
@@ -129,21 +101,8 @@ def export_int_model(params, cfg: ModelConfig, quant_state: dict, *,
         mrope = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, 1, s))
     tfm.forward_train(qc, params, dummy, cfg, plan=plan, mrope_pos=mrope,
                       moe_impl="dense_all", remat=False)
-    gates = quant_state["gates"]
-    ranges = merge_ranges(quant_state["betas"], quant_state["signed"])
-    qweights: dict[str, Any] = {}
-    report: dict[str, int] = {}
-    for key, w in qc.weight_stats.items():
-        site = qc.sites.get(key[:-len(".w")])
-        if key not in gates or site is None or len(site.weight_shape) != 2:
-            continue
-        stacked = w.ndim == len(site.weight_shape) + 1
-        out = _site_int_export(w, gates[key], ranges[key]["beta"],
-                               ranges[key]["signed"], stacked)
-        if out is None:
-            continue
-        qweights[key], report[key] = out
-    return qweights, report
+    return export_sites(qc, quant_state["gates"], quant_state["betas"],
+                        quant_state["signed"], pack=pack, warn=warn)
 
 
 def make_uniform_quant_state(cfg: ModelConfig, params, *, gate_init=2.2,
@@ -159,13 +118,53 @@ def make_uniform_quant_state(cfg: ModelConfig, params, *, gate_init=2.2,
                                   split_learnable_ranges)
 
     qcfg = QuantConfig(granularity=granularity)
+    s = 8
+    if cfg.embed_input:
+        dummy = jnp.zeros((1, s), jnp.int32)
+    else:  # modality stub: embeddings come in directly
+        dummy = jnp.zeros((1, s, cfg.d_model), jnp.float32)
+    mrope = None
+    if cfg.mrope_sections is not None:
+        mrope = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, 1, s))
     sites = collect_sites(
-        lambda qc, p, x: tfm.forward_train(qc, p, x, cfg, remat=False),
-        params, jnp.zeros((1, 8), jnp.int32), cfg=qcfg)
+        lambda qc, p, x: tfm.forward_train(qc, p, x, cfg, mrope_pos=mrope,
+                                           moe_impl="dense_all", remat=False),
+        params, dummy, cfg=qcfg)
     gates = init_gates(sites, qcfg, init=gate_init)
     betas, signed = split_learnable_ranges(
         init_ranges_from_weights(sites, qcfg, lambda n: None))
     return {"qcfg": qcfg, "gates": gates, "betas": betas, "signed": signed}
+
+
+# Gate values landing exactly on T(g) = 2 / 4 / 8 bits (core.gates Eq. 4).
+MIXED_GATE_LEVELS = (0.8, 1.5, 2.5)
+
+
+def make_mixed_quant_state(cfg: ModelConfig, params, *,
+                           levels=MIXED_GATE_LEVELS,
+                           granularity="per_channel"):
+    """A stand-in trained CGMQ state with MIXED 2/4/8-bit weight sites.
+
+    Weight gates cycle through ``levels`` site-by-site (deterministic: sorted
+    site order), activations stay 8-bit — the shape of a real
+    budget-constrained CGMQ outcome, without running the controller. This is
+    the workload for the packed sub-byte serving path: exported storage is
+    2/4/8-bit packed, so device bytes land strictly below the uniform-int8
+    baseline (asserted in CI via ``quant_report``).
+    """
+    qs = make_uniform_quant_state(cfg, params, gate_init=2.5,
+                                  granularity=granularity)
+    gates = {}
+    wi = 0
+    for key in sorted(qs["gates"]):
+        g = qs["gates"][key]
+        if key.endswith(".w"):
+            gates[key] = jnp.full_like(g, levels[wi % len(levels)])
+            wi += 1
+        else:
+            gates[key] = g
+    qs["gates"] = gates
+    return qs
 
 
 # ---------------------------------------------------------------------------
@@ -189,10 +188,10 @@ class ServingEngine:
     """Slot-based continuous batching around prefill_slot / decode_step.
 
     ``quant_state=None`` serves fp32; with a quant_state the engine serves
-    the int-code export (``use_int8=True``, the default) or pure fake-quant.
-    ``matmul_impl`` picks the fused-dequant GEMM backend: "pallas" on TPU,
-    "pallas_interpret" for kernel validation, "ref" (jnp) elsewhere; the
-    default auto-detects.
+    the packed mixed-precision export (``use_int8=True``, the default) or
+    pure fake-quant. ``matmul_impl`` picks the fused-dequant GEMM backend:
+    "pallas" on TPU, "pallas_interpret" for kernel validation, "ref" (jnp)
+    elsewhere; the default auto-detects.
 
     ``kv_layout`` picks the attention cache substrate (DESIGN.md §10):
 
@@ -210,8 +209,19 @@ class ServingEngine:
     Prefix sharing applies only to pure-attention archs (recurrent state is
     per-slot and can't be block-shared); ``prefix_sharing=False`` disables
     it. ``block_size``/``num_blocks`` size the pool — the default pool
-    (``slots * ceil(max_seq/bs) + 1`` blocks) can always hold every slot at
-    ``max_seq``, so the in-tick allocator can never run dry.
+    (``slots * ceil(max_seq/bs) + 1 + prefix_lru_blocks`` blocks) can always
+    hold every slot at ``max_seq``, so the in-tick allocator can never run
+    dry.
+
+    ``prefix_lru_blocks`` (default 0 = retire-time eviction, the old
+    behavior) keeps up to that many fully-unreferenced prefix blocks alive
+    in an LRU pool: the prefix cache itself holds a device refcount, so a
+    popular prompt's blocks survive all its requests retiring and the next
+    same-prefix admission still skips the prefill. Retained blocks live in
+    pool surplus beyond the worst-case slot reservation (the pool is sized
+    up by exactly ``prefix_lru_blocks``), so generation can never be starved
+    by the cache; past capacity the least-recently-used key is evicted and
+    its block released.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
@@ -219,7 +229,7 @@ class ServingEngine:
                  plan=None, use_int8: bool = True,
                  matmul_impl: str | None = None, kv_layout: str = "auto",
                  block_size: int = 8, num_blocks: int | None = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, prefix_lru_blocks: int = 0):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -228,10 +238,15 @@ class ServingEngine:
         self.quant_state = quant_state
         if matmul_impl is None:
             matmul_impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-        self.qweights: dict[str, Any] = {}
-        self.int8_report: dict[str, int] = {}
+        self.qweights: dict[str, QuantizedTensor] = {}
+        self.export_ledger = None
+        self.specs: dict[str, QuantSpec] = {}
+        if quant_state is not None:
+            self.specs = specs_from_state(quant_state["gates"],
+                                          quant_state["betas"],
+                                          quant_state["signed"])
         if quant_state is not None and use_int8:
-            self.qweights, self.int8_report = export_int_model(
+            self.qweights, self.export_ledger = export_int_model(
                 params, cfg, quant_state, plan=plan)
 
         kinds = list(cfg.block_pattern) + list(cfg.remainder_kinds)
@@ -247,16 +262,21 @@ class ServingEngine:
         self.prefix_sharing = (
             self.paged and prefix_sharing
             and all(k in ("global", "local") for k in kinds))
+        self.lru_capacity = prefix_lru_blocks if self.prefix_sharing else 0
         if self.paged:
             self.block_size = block_size
             self.max_blocks = -(-max_seq // block_size)
-            min_blocks = slots * self.max_blocks + 1
+            # Retained (LRU) prefix blocks live in pool surplus BEYOND the
+            # worst-case slot reservation, so the in-tick allocator can
+            # never be starved by the cache (DESIGN.md §10).
+            min_blocks = slots * self.max_blocks + 1 + self.lru_capacity
             if num_blocks is not None and num_blocks < min_blocks:
                 # the in-tick allocator has no error path: an exhausted free
                 # stack would silently alias a live block into two slots
                 raise ValueError(
                     f"num_blocks={num_blocks} can't back {slots} slots at "
-                    f"max_seq={max_seq} (need >= {min_blocks})")
+                    f"max_seq={max_seq} with {self.lru_capacity} retained "
+                    f"prefix blocks (need >= {min_blocks})")
             self.num_blocks = num_blocks or min_blocks
             self.cache = tfm.init_paged_cache(cfg, slots, self.num_blocks,
                                               block_size)
@@ -269,6 +289,12 @@ class ServingEngine:
         # content -> physical block id, plus live-request counts per key
         self._prefix_map: dict[Any, int] = {}
         self._key_refs: dict[Any, int] = {}
+        # LRU retention (ROADMAP item): keys whose last live user retired
+        # but whose physical block the cache still holds (device ref +1),
+        # in eviction order. Only keys in ``_cache_held`` carry that ref.
+        self._lru: "collections.OrderedDict[Any, int]" = \
+            collections.OrderedDict()
+        self._cache_held: set = set()
         # Device-resident generation state: one row per slot.
         self.state = {
             "last_tok": jnp.zeros((slots,), jnp.int32),
@@ -295,19 +321,18 @@ class ServingEngine:
                       "shared_admissions": 0, "cow_copies": 0,
                       "prefill_time_s": 0.0, "decode_time_s": 0.0}
 
-        # Small quant state (gates/ranges) rides as jit closure constants;
-        # the int8 codes are passed as a jit ARGUMENT so the (potentially
-        # large) artifact isn't baked into every compiled executable — _tick
-        # plus each per-bucket _prefill specialization would otherwise embed
-        # its own copy.
+        # The small frozen specs (bits/ranges) ride as jit closure
+        # constants; the packed codes are passed as a jit ARGUMENT so the
+        # (potentially large) artifact isn't baked into every compiled
+        # executable — _tick plus each per-bucket _prefill specialization
+        # would otherwise embed its own copy.
+        specs = self.specs
+
         def _qc(qweights):
             if quant_state is None:
                 return QuantContext(mode="off")
             return QuantContext(
-                mode="serve", cfg=quant_state["qcfg"],
-                gates=quant_state["gates"],
-                ranges=merge_ranges(quant_state["betas"],
-                                    quant_state["signed"]),
+                mode="serve", cfg=quant_state["qcfg"], specs=specs,
                 qweights=qweights, matmul_impl=matmul_impl,
             )
 
@@ -419,6 +444,8 @@ class ServingEngine:
             self._alloc_range = jax.jit(kv_pool.alloc_range)
             self._share_prefix = jax.jit(kv_pool.share_prefix)
             self._free_slot_op = jax.jit(kv_pool.free_slot)
+            self._retain_block = jax.jit(kv_pool.retain_block)
+            self._release_block = jax.jit(kv_pool.release_block)
             self._set_pos = jax.jit(
                 lambda cache, slot, p:
                 {**cache, "pos": cache["pos"].at[slot].set(p)})
@@ -556,10 +583,19 @@ class ServingEngine:
                 # table row read is an admission-time sync, not a tick sync
                 row = np.asarray(jax.device_get(self.alloc["table"][s]))
                 for j, key in enumerate(keys):
-                    self._prefix_map.setdefault(key, int(row[j]))
+                    if key not in self._prefix_map:
+                        self._prefix_map[key] = int(row[j])
+                        if self.lru_capacity > 0:
+                            # LRU retention: the cache itself holds a device
+                            # ref, so the block outlives its live users
+                            self.alloc = self._retain_block(
+                                self.alloc, jnp.asarray(int(row[j]),
+                                                        jnp.int32))
+                            self._cache_held.add(key)
                 req.prefix_keys = keys
         for key in req.prefix_keys:
             self._key_refs[key] = self._key_refs.get(key, 0) + 1
+        self._touch_lru(keys)
         self.stats["prefix_hit_blocks"] += ns
         self.stats["prompt_blocks"] += fb
         return first
@@ -596,6 +632,32 @@ class ServingEngine:
             self.state = self._arm_slot(self.state, s, first, req.max_new)
         return first
 
+    # ------------------------------------------------------------------
+    # Prefix-cache LRU retention (DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def _touch_lru(self, keys):
+        """Re-derive LRU membership for ``keys``: cache-held keys with zero
+        live users sit in the LRU (most-recently-touched last); any live use
+        lifts them out. Then evict past capacity (oldest first), dropping
+        the cache's device ref — the only place retained blocks are
+        released, so capacity bounds cache-only blocks and the pool surplus
+        covers them."""
+        for key in keys:
+            if key not in self._cache_held:
+                continue
+            if self._key_refs.get(key, 0) == 0:
+                self._lru[key] = self._prefix_map[key]
+                self._lru.move_to_end(key)
+            else:
+                self._lru.pop(key, None)
+        while len(self._lru) > self.lru_capacity:
+            key, blk = self._lru.popitem(last=False)
+            self._cache_held.discard(key)
+            self._prefix_map.pop(key, None)
+            self.alloc = self._release_block(self.alloc,
+                                             jnp.asarray(blk, jnp.int32))
+
     def _retire(self, s: int, req: Request):
         req.done = True
         self.finished.append(req)
@@ -606,7 +668,9 @@ class ServingEngine:
                 self._key_refs[key] -= 1
                 if self._key_refs[key] == 0:
                     del self._key_refs[key]
-                    self._prefix_map.pop(key, None)
+                    if key not in self._cache_held:
+                        self._prefix_map.pop(key, None)
+            self._touch_lru(req.prefix_keys)
 
     def _admit(self):
         t0 = time.perf_counter()
@@ -667,8 +731,16 @@ class ServingEngine:
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,
             "blocks_in_use": self.num_blocks - 1 - n_free,
+            "retained_blocks": len(self._lru),
             "prefix_hit_rate": hits / total if total else 0.0,
         }
+
+    def quant_report(self) -> dict:
+        """Bytes/BOPs ledger of the served artifact (DESIGN.md §11):
+        per-site packed device bytes and model BOPs vs the fp32 and
+        uniform-int8 baselines. Requires an int export."""
+        assert self.export_ledger is not None, "no quantized export to report"
+        return quant_report(self.export_ledger, self.quant_state["gates"])
 
     def run_to_completion(self, max_ticks: int = 1000):
         ticks = 0

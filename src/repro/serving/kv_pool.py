@@ -122,6 +122,31 @@ def free_slot(alloc, slot):
     }
 
 
+def retain_block(alloc, blk):
+    """Take a cache-side reference on one physical block (prefix-cache LRU
+    retention, DESIGN.md §10): the block survives every live user retiring
+    until ``release_block`` drops the reference."""
+    return {**alloc, "ref": alloc["ref"].at[blk].add(1)}
+
+
+def release_block(alloc, blk):
+    """Drop a cache-side reference; push the block back on the free stack if
+    that was the last one. Same junk-lane trick as ``free_slot``: a block
+    being released holds a ref, so the stack has at most ``nb - 2`` entries
+    and index ``nb - 1`` is never live."""
+    nb = alloc["free"].shape[0]
+    ref = alloc["ref"].at[blk].add(-1)
+    freed = ref[blk] == 0
+    idx = jnp.where(freed, alloc["n_free"], nb - 1)
+    val = jnp.where(freed, blk, alloc["free"][nb - 1])
+    return {
+        "free": alloc["free"].at[idx].set(val),
+        "n_free": alloc["n_free"] + freed.astype(jnp.int32),
+        "ref": ref,
+        "table": alloc["table"],
+    }
+
+
 def tick_alloc(alloc, pos, mask, block_size: int):
     """In-tick allocation: every row in ``mask`` whose current position lies
     in an unallocated logical block pops one block off the free stack. Runs

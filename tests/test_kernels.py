@@ -123,6 +123,33 @@ def test_quant_matmul_mixed_bits_grid_matches_fake_quant():
     np.testing.assert_allclose(np.asarray(deq), np.asarray(fq), atol=1e-6)
 
 
+@pytest.mark.parametrize("mkn", [(16, 64, 32), (8, 37, 24), (64, 130, 72)])
+@pytest.mark.parametrize("bits", [2, 4])
+def test_packed_quant_matmul_vs_int8_oracle(mkn, bits):
+    """The packed fused unpack+dequant kernel (interpret) and its jnp ref
+    against the unpacked int8 oracle — including ragged K that is not a
+    multiple of the codes-per-byte packing factor."""
+    from repro.quant import QuantizedTensor
+    from repro.kernels.quant_matmul.ops import quant_matmul_qt
+
+    m, k, n = mkn
+    rng = np.random.default_rng(m + k + n + bits)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    beta = jnp.max(jnp.abs(w), axis=0)
+    qt = QuantizedTensor.from_float(w, bits, beta[None, :], True,
+                                    storage_bits=bits)
+    oracle = QuantizedTensor.from_float(w, bits, beta[None, :], True,
+                                        storage_bits=bits, pack=False)
+    assert qt.packed and qt.codes.shape[0] == -(-k // (8 // bits))
+    want = quant_matmul_qt(x, oracle, use_pallas=False)
+    got_ref = quant_matmul_qt(x, qt, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
+    got_pl = quant_matmul_qt(x, qt, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_quant_matmul_end_to_end_error_small():
     """x @ dequant(quant(w)) stays close to x @ w at 8 bits."""
     rng = np.random.default_rng(9)

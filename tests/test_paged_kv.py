@@ -365,6 +365,96 @@ def test_retirement_returns_all_blocks_and_evicts_prefix_cache():
     assert ps["prefix_hit_rate"] > 0
 
 
+def test_prefix_lru_retains_blocks_past_zero_refs():
+    """ROADMAP item: with ``prefix_lru_blocks`` the prefix cache holds a
+    device ref on registered blocks, so a popular prompt survives ALL its
+    requests retiring — the next same-prefix admission still skips the
+    prefill (the default capacity-0 engine re-prefills here)."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab_size, (16,))
+    want = _solo_output(cfg, params, prompt, 4)
+
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64,
+                        prefix_lru_blocks=2)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=3))
+    eng.run_to_completion()
+    ps = eng.pool_stats()
+    assert ps["retained_blocks"] == 2 and ps["blocks_in_use"] == 2
+    assert eng._prefix_map, "retirement evicted retained prefix keys"
+
+    eng.submit(Request(rid=1, prompt=prompt, max_new=4))
+    fin = eng.run_to_completion()
+    assert fin[-1].output == want, "retained blocks served stale KV"
+    assert eng.stats["prefill_forwards"] == 1, \
+        "re-admission after retirement should hit the retained prefix"
+    assert eng.stats["shared_admissions"] == 1
+
+    # capacity-0 baseline: same workload pays a second prefill
+    base = ServingEngine(cfg, params, slots=1, max_seq=64)
+    for rid in (0, 1):
+        base.submit(Request(rid=rid, prompt=prompt, max_new=3))
+        base.run_to_completion()
+    assert base.stats["prefill_forwards"] == 2
+    assert base.pool_stats()["retained_blocks"] == 0
+
+
+def test_prefix_lru_capacity_pressure_evicts_oldest():
+    """Capacity pressure: retained blocks are bounded by the LRU capacity —
+    the oldest key is evicted (and its block released back to the pool)
+    when a newer prefix needs the headroom; outputs stay correct through
+    recycling."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(22)
+    pa = rng.integers(0, cfg.vocab_size, (16,))
+    pb = rng.integers(0, cfg.vocab_size, (16,))
+    want_a = _solo_output(cfg, params, pa, 4)
+    want_b = _solo_output(cfg, params, pb, 4)
+
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64,
+                        prefix_lru_blocks=2)  # room for ONE 2-block prefix
+    eng.submit(Request(rid=0, prompt=pa, max_new=3))
+    eng.run_to_completion()
+    assert eng.pool_stats()["retained_blocks"] == 2
+    eng.submit(Request(rid=1, prompt=pb, max_new=3))
+    eng.run_to_completion()
+    # A's keys were evicted for B's; retained stays at capacity
+    ps = eng.pool_stats()
+    assert ps["retained_blocks"] == 2
+    assert len(eng._prefix_map) == 2, "evicted keys must leave the map"
+
+    eng.submit(Request(rid=2, prompt=pa, max_new=4))  # A: evicted -> prefill
+    fin = eng.run_to_completion()
+    assert fin[-1].output == want_a
+    assert eng.stats["prefill_forwards"] == 3
+    eng.submit(Request(rid=3, prompt=pb, max_new=4))  # B: evicted by A's readmit
+    fin = eng.run_to_completion()
+    assert fin[-1].output == want_b, "recycled block leaked into B's KV"
+    # every non-retained block is back on the free stack
+    ps = eng.pool_stats()
+    assert ps["blocks_in_use"] == ps["retained_blocks"] == 2
+
+
+def test_prefix_lru_never_starves_generation():
+    """The pool is sized up by exactly the LRU capacity, so a full slot
+    complement can still generate to max_seq with the cache at capacity."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(23)
+    filler = rng.integers(0, cfg.vocab_size, (16,))
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32,
+                        prefix_lru_blocks=2)
+    eng.submit(Request(rid=0, prompt=filler, max_new=2))
+    eng.run_to_completion()
+    assert eng.pool_stats()["retained_blocks"] == 2
+    # both slots now generate deep into their rows with the cache full
+    for i in range(2):
+        eng.submit(Request(rid=10 + i,
+                           prompt=rng.integers(0, cfg.vocab_size, (4,)),
+                           max_new=24))
+    fin = eng.run_to_completion()
+    assert all(len(r.output) == 24 for r in fin[-2:])
+
+
 def test_undersized_pool_rejected_at_construction():
     """The in-tick allocator has no error path, so a pool too small to back
     every slot at max_seq must be refused up front — an exhausted free

@@ -1,10 +1,12 @@
-"""Serving fast-path tests: batched prefill, scheduler, int8 decode.
+"""Serving fast-path tests: batched prefill, scheduler, quantized decode.
 
-Covers the three legs of the serving hot path (DESIGN.md §8):
+Covers the three legs of the serving hot path (DESIGN.md §8/§11):
   * batched prefill ≡ the seed's scan-of-decode-steps (logits equivalence),
   * continuous-batching scheduler invariants (slot isolation, FIFO
     admission, retirement/reuse),
-  * int8 fused-dequant decode vs the fake-quant train-mode reference.
+  * the mixed-precision integer decode path: fused-dequant GEMMs vs the
+    fake-quant train-mode reference, and the packed sub-byte storage path
+    vs the unpacked int8 oracle — bit-for-bit, on every transformer config.
 """
 
 import jax
@@ -12,10 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke_config
-from repro.core.sites import QuantContext, merge_ranges
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core.sites import QuantContext
 from repro.models import transformer as tfm
+from repro.quant import specs_from_state
 from repro.serving.engine import (Request, ServingEngine, export_int_model,
+                                  make_mixed_quant_state,
                                   make_uniform_quant_state)
 
 ARCH = "tinyllama-1.1b"
@@ -30,6 +34,13 @@ def _model(seed=0, arch=ARCH):
 def _quant_state(cfg, params, gate_init=2.2, granularity="per_channel"):
     return make_uniform_quant_state(cfg, params, gate_init=gate_init,
                                     granularity=granularity)
+
+
+def _serve_qc(qs, qw, matmul_impl="ref"):
+    return QuantContext(
+        mode="serve", cfg=qs["qcfg"],
+        specs=specs_from_state(qs["gates"], qs["betas"], qs["signed"]),
+        qweights=qw, matmul_impl=matmul_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -207,23 +218,22 @@ def test_device_resident_state_one_sync_shapes():
 
 @pytest.mark.parametrize("granularity", ["per_tensor", "per_channel"])
 def test_int8_decode_matches_fake_quant_reference(granularity):
-    """Serve-mode logits (fused-dequant GEMM off int8 codes) match the
+    """Serve-mode logits (fused-dequant GEMM off int codes) match the
     train-mode fake-quant fp32 reference within bf16 matmul tolerance."""
     cfg, params = _model()
     qs = _quant_state(cfg, params, granularity=granularity)
-    qw, report = export_int_model(params, cfg, qs)
+    qw, ledger = export_int_model(params, cfg, qs)
     assert qw, "no sites exported"
-    assert all(b <= 8 for b in report.values())
+    assert all(b <= 8 for b in ledger.max_bits().values())
 
     toks = jnp.asarray([3, 7], jnp.int32)
     cache = tfm.init_cache(cfg, 2, 16)
-    ranges = merge_ranges(qs["betas"], qs["signed"])
+    from repro.core.sites import merge_ranges
     qc_train = QuantContext(mode="train", cfg=qs["qcfg"], gates=qs["gates"],
-                            ranges=ranges, probes={})
+                            ranges=merge_ranges(qs["betas"], qs["signed"]),
+                            probes={})
     lt, _ = tfm.decode_step(qc_train, params, cache, toks, cfg)
-    qc_serve = QuantContext(mode="serve", cfg=qs["qcfg"], gates=qs["gates"],
-                            ranges=ranges, qweights=qw, matmul_impl="ref")
-    ls, _ = tfm.decode_step(qc_serve, params, cache, toks, cfg)
+    ls, _ = tfm.decode_step(_serve_qc(qs, qw), params, cache, toks, cfg)
     lt = np.asarray(lt[..., : cfg.vocab_size])
     ls = np.asarray(ls[..., : cfg.vocab_size])
     np.testing.assert_allclose(ls, lt, rtol=5e-2, atol=2e-2)
@@ -237,12 +247,10 @@ def test_int8_pallas_interpret_matches_ref_path():
     qw, _ = export_int_model(params, cfg, qs)
     toks = jnp.asarray([11], jnp.int32)
     cache = tfm.init_cache(cfg, 1, 16)
-    ranges = merge_ranges(qs["betas"], qs["signed"])
     outs = []
     for impl in ("ref", "pallas_interpret"):
-        qc = QuantContext(mode="serve", cfg=qs["qcfg"], gates=qs["gates"],
-                          ranges=ranges, qweights=qw, matmul_impl=impl)
-        l, _ = tfm.decode_step(qc, params, cache, toks, cfg)
+        l, _ = tfm.decode_step(_serve_qc(qs, qw, impl), params, cache, toks,
+                               cfg)
         outs.append(np.asarray(l[..., : cfg.vocab_size]))
     np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
 
@@ -265,16 +273,88 @@ def test_int8_engine_serves_end_to_end():
         assert all(0 <= t < cfg.vocab_size for t in r.output)
 
 
-def test_export_skips_high_bit_sites():
+def test_export_skips_high_bit_sites_and_ledgers_them():
     """Sites whose gate maps above 8 bits are not exported (they'd lose
-    their grid in int8) and serve via the fake-quant fallback instead."""
+    their grid in int8) and serve via the fake-quant fallback — and that
+    fallback is no longer silent: every rejected site lands in the export
+    ledger with its reason, and the export warns once."""
     cfg, params = _model()
     qs = _quant_state(cfg, params, gate_init=4.5)  # T(4.5) = 32 bits
-    qw, report = export_int_model(params, cfg, qs)
-    assert qw == {} and report == {}
+    with pytest.warns(UserWarning, match="NOT fully integer-quantized"):
+        qw, ledger = export_int_model(params, cfg, qs)
+    assert qw == {} and ledger.max_bits() == {}
+    fb = ledger.fallbacks()
+    assert fb and all(e["reason"] == "bits>8" for e in fb.values())
+    assert all(e["bits"] == 32 for e in fb.values())
     # engine still runs on the fallback path
-    eng = ServingEngine(cfg, params, slots=1, max_seq=32, quant_state=qs)
+    with pytest.warns(UserWarning, match="NOT fully integer-quantized"):
+        eng = ServingEngine(cfg, params, slots=1, max_seq=32, quant_state=qs)
     eng.submit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
                        max_new=2))
     fin = eng.run_to_completion()
     assert len(fin) == 1 and len(fin[0].output) == 2
+
+
+# ---------------------------------------------------------------------------
+# Packed sub-byte decode: bit-for-bit against the int8 oracle, every config
+# ---------------------------------------------------------------------------
+
+
+def _decode_inputs(cfg, rng):
+    if cfg.embed_input:
+        return jnp.asarray(rng.integers(0, cfg.vocab_size, (2,)), jnp.int32)
+    return jnp.asarray(rng.normal(size=(2, 1, cfg.d_model)), jnp.float32) * 0.3
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_packed_decode_matches_int8_oracle_every_config(arch):
+    """The §11 acceptance gate: a mixed 2/4/8-bit export served from PACKED
+    sub-byte storage produces decode logits bit-for-bit identical to the
+    same export in the unpacked int8 oracle layout, for every architecture.
+    Packing must be pure storage — zero numerics."""
+    cfg, params = _model(arch=arch)
+    qs = make_mixed_quant_state(cfg, params)
+    qw_packed, ledger = export_int_model(params, cfg, qs)
+    qw_oracle, _ = export_int_model(params, cfg, qs, pack=False)
+    assert qw_packed, f"{arch}: no sites exported"
+    assert any(qt.storage_bits < 8 for qt in qw_packed.values()), \
+        f"{arch}: mixed state exported no sub-byte site"
+    # packed device bytes follow the ceil(bits/8) accounting exactly
+    for key, qt in qw_packed.items():
+        per = 8 // qt.storage_bits
+        want_rows = -(-qt.k // per)
+        assert qt.codes.shape[-2] == want_rows, key
+        assert qt.codes_bytes() < qw_oracle[key].codes_bytes() \
+            or qt.storage_bits == 8, key
+
+    rng = np.random.default_rng(7)
+    toks = _decode_inputs(cfg, rng)
+    cache = tfm.init_cache(cfg, 2, 16)
+    lp, _ = tfm.decode_step(_serve_qc(qs, qw_packed), params, cache, toks,
+                            cfg)
+    lo, _ = tfm.decode_step(_serve_qc(qs, qw_oracle), params, cache, toks,
+                            cfg)
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(lo),
+                                  err_msg=f"{arch}: packed != int8 oracle")
+
+
+def test_engine_serves_packed_sub_byte_end_to_end():
+    """Engine pass on a mixed 2/4/8-bit export: tokens come off the packed
+    kernels, and the quant_report ledger shows sub-byte device bytes."""
+    cfg, params = _model()
+    qs = make_mixed_quant_state(cfg, params)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, quant_state=qs,
+                        matmul_impl="ref")
+    assert any(qt.storage_bits < 8 for qt in eng.qweights.values())
+    rng = np.random.default_rng(11)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, (5,)),
+                           max_new=4))
+    fin = eng.run_to_completion()
+    assert len(fin) == 3 and all(len(r.output) == 4 for r in fin)
+    rep = eng.quant_report()
+    t = rep["totals"]
+    assert t["bytes_per_weight"] < t["uniform_int8_bytes_per_weight"]
+    assert t["bytes_device"] < t["bytes_uniform_int8"] < t["bytes_fp32"]
+    assert t["fallback_sites"] == 0
+    assert rep["bops"]["model"] < rep["bops"]["uniform_int8"]

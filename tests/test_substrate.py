@@ -185,9 +185,16 @@ def test_export_int_codes_bits():
     w = jnp.asarray(np.random.default_rng(1).normal(size=(16, 8)), jnp.float32)
     q = export_int_codes(w, gate=jnp.asarray(2.5), beta=jnp.max(jnp.abs(w)),
                          signed=True)
-    assert q["bits"] == 8
-    deq = q["codes"].astype(jnp.float32) * q["scale"] + q["bias"]
+    assert q.storage_bits == 8
+    deq = q.dequantize()
     assert float(jnp.abs(deq - w).max()) < float(jnp.abs(w).max()) / 50
+    # sub-byte gate -> packed storage, still the same dequant contract
+    q2 = export_int_codes(w, gate=jnp.asarray(0.8), beta=jnp.max(jnp.abs(w)),
+                          signed=True)
+    assert q2.storage_bits == 2 and q2.packed
+    assert q2.codes_bytes() == q.codes_bytes() // 4
+    assert float(jnp.abs(q2.dequantize() - w).max()) <= float(
+        jnp.abs(w).max())
 
 
 def test_serving_engine_continuous_batching():
