@@ -138,20 +138,21 @@ def bench_flash_attention():
 
 def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
                  max_new=16, nreq=8, kv_layout="auto", same_prefix=False,
-                 max_seq=64):
+                 max_seq=64, sample=None):
     """One measured engine pass. Compiles on a throwaway request first so the
     numbers reflect steady-state serving, not jit tracing. With
     ``same_prefix`` every request reuses ONE prompt, exercising the paged
-    prefix cache (N admissions ~ 1 prefill, DESIGN.md §10)."""
-    from repro.serving.engine import Request, ServingEngine
+    prefix cache (N admissions ~ 1 prefill, DESIGN.md §10). ``sample``
+    (e.g. ``dict(temperature=0.8, top_p=0.9)``) runs the in-tick stochastic
+    sampling path instead of greedy argmax (DESIGN.md §12); per-request
+    seeds keep the run reproducible."""
+    from repro.serving import Request, SamplingParams, ServingEngine
 
     eng = ServingEngine(cfg, params, slots=slots, max_seq=max_seq,
                         quant_state=quant_state, kv_layout=kv_layout)
     rng = np.random.default_rng(7)
-    warm = Request(rid=-1, prompt=rng.integers(0, cfg.vocab_size, (plen,)),
-                   max_new=2)
-    eng.submit(warm)
-    eng.run_to_completion()
+    warm_sp = SamplingParams(max_new=2, **(sample or {}))
+    eng.generate([rng.integers(0, cfg.vocab_size, (plen,))], warm_sp)
     eng.finished.clear()
     eng.stats = {k: 0 if isinstance(v, int) else 0.0
                  for k, v in eng.stats.items()}
@@ -162,12 +163,15 @@ def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
         return (shared_prompt if same_prefix
                 else rng.integers(0, cfg.vocab_size, (plen,)))
 
+    def _params(i):
+        return SamplingParams(max_new=max_new, seed=i, **(sample or {}))
+
     t0 = time.perf_counter()
-    eng.submit(Request(rid=0, prompt=_prompt(), max_new=max_new))
+    eng.submit(Request(rid=0, prompt=_prompt(), params=_params(0)))
     eng._admit()
     ttft = time.perf_counter() - t0  # submit -> first token (prefill)
     for i in range(1, nreq):
-        eng.submit(Request(rid=i, prompt=_prompt(), max_new=max_new))
+        eng.submit(Request(rid=i, prompt=_prompt(), params=_params(i)))
     blocks_hwm = 0
     ticks = 0
     while (eng.waiting or any(r is not None for r in eng.slot_req)) \
@@ -193,6 +197,11 @@ def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
         "prompt_len": plen,
         "max_new": max_new,
         "kv_layout": eng.kv_layout,
+        "sampling": sample or "argmax",
+        # the §8/§12 ledger: the tick must cost exactly ONE host transfer,
+        # sampling enabled or not (CI-asserted from BENCH_serving.json)
+        "host_syncs_per_tick":
+            st["tick_syncs"] / max(st["decode_ticks"], 1),
         "ttft_s": ttft,
         "prefill_tok_s": st["prompt_tokens"] / max(st["prefill_time_s"], 1e-9),
         "decode_tok_s": decode_tokens / max(st["decode_time_s"], 1e-9),
@@ -266,6 +275,16 @@ def bench_serving(tier: str):
           f"vs_int8={t['bytes_per_weight']/t['uniform_int8_bytes_per_weight']:.2f}x;"
           f"rbop={mixed['quant_report']['bops']['rbop']*100:.2f}%")
 
+    # sampled decode (DESIGN.md §12): the in-tick temperature/top-p path vs
+    # the argmax baseline above, same workload. host_syncs_per_tick must
+    # stay at exactly 1.0 in both (CI-asserted) — sampling lives inside the
+    # jitted tick, it is not allowed to buy tokens with extra host traffic.
+    sampled = _serving_run(cfg, params, nreq=nreq,
+                           sample=dict(temperature=0.8, top_p=0.9))
+    print(f"serving_sampled_decode,{sampled['decode_tok_s']:.0f},"
+          f"vs_argmax={sampled['decode_tok_s']/max(fp32['decode_tok_s'],1e-9):.2f}x;"
+          f"host_syncs_per_tick={sampled['host_syncs_per_tick']:.2f}")
+
     # paged-KV additions (DESIGN.md §10): decode throughput at a high slot
     # count, and same-prefix admission cost through the prefix cache.
     hi_slots = {"smoke": 16, "quick": 24, "paper": 32}.get(tier, 16)
@@ -282,7 +301,7 @@ def bench_serving(tier: str):
     print(f"serving_total,{(time.time()-t0)*1e6:.0f},"
           f"requests={4*nreq + 2*hi_slots + nreq}")
     return {"fp32": fp32, "fp32_ring": ring, "int8": int8,
-            "mixed_sub_byte": mixed,
+            "mixed_sub_byte": mixed, "sampled_decode": sampled,
             "paged_high_slots": high, "prefix_sharing": prefix}
 
 

@@ -1,12 +1,17 @@
-"""Quickstart: CGMQ on a tiny MLP in under a minute on CPU.
+"""Quickstart: CGMQ end to end in under two minutes on CPU.
 
 Shows the full public API surface: define a model with QuantContext sites,
-collect sites, run the four-stage pipeline, verify the cost constraint, and
-export deployment bit-widths.
+collect sites, run the four-stage pipeline, verify the cost constraint,
+export deployment bit-widths — then serve a quantized smoke LM through the
+request-lifecycle API (``engine.generate`` + ``SamplingParams``,
+DESIGN.md §12).
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py \\
+        --temperature 0.8 --top-k 40 --top-p 0.9 --seed 7
 """
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -38,7 +43,42 @@ def forward(qc, params, x):
     return h @ w2 + params["b2"]
 
 
+def serve_demo(args):
+    """Part 2: serve a CGMQ-quantized smoke LM via ``generate()``."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving import (SamplingParams, ServingEngine,
+                               make_uniform_quant_state)
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64,
+                        quant_state=make_uniform_quant_state(cfg, params))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n in (5, 8)]
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed, max_new=6)
+    print(f"\n=== serving (int8 decode, {eng.kv_layout} KV, "
+          + ("greedy argmax" if sp.greedy
+             else f"temperature={sp.temperature}") + ") ===")
+    for r in eng.generate(prompts, sp):
+        print(f"  prompt[{len(r.prompt)} toks] -> {r.tokens} "
+              f"[{r.finish_reason}]")
+    st = eng.stats
+    print(f"  {st['decode_ticks']} decode ticks, {st['tick_syncs']} host "
+          f"syncs (one per tick, sampling included)")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="serving-demo sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0, help="top-k (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
     # 4-class toy problem with a planted linear rule + noise
     w_true = rng.normal(size=(D_IN, D_OUT))
@@ -75,6 +115,8 @@ def main():
     for k_, v in bits.items():
         print(f"  {k_:8s} -> {int(np.max(v))} bits")
     assert res.satisfied, "constraint violated!"
+
+    serve_demo(args)
 
 
 if __name__ == "__main__":

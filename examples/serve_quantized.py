@@ -1,11 +1,13 @@
-"""Serving example: batched requests against a (smoke) LM with the
-continuous-batching engine — batched prefill, device-resident generation
-loop, and the CGMQ mixed-precision packed-int decode path (DESIGN.md
-§8/§11).
+"""Serving example: batched requests against a (smoke) LM through the
+request-lifecycle API — ``engine.generate(prompts, SamplingParams(...))``
+over batched prefill, the device-resident sampled generation loop, and the
+CGMQ mixed-precision packed-int decode path (DESIGN.md §8/§11/§12).
 
     PYTHONPATH=src python examples/serve_quantized.py --arch tinyllama-1.1b
     PYTHONPATH=src python examples/serve_quantized.py --mixed  # 2/4/8-bit
     PYTHONPATH=src python examples/serve_quantized.py --fp32   # skip int
+    PYTHONPATH=src python examples/serve_quantized.py \\
+        --temperature 0.8 --top-p 0.9 --seed 7 --stream
 """
 
 import argparse
@@ -21,9 +23,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import transformer as tfm
-from repro.serving.engine import (Request, ServingEngine, export_int_codes,
-                                  make_mixed_quant_state,
-                                  make_uniform_quant_state)
+from repro.serving import (SamplingParams, ServingEngine, export_int_codes,
+                           make_mixed_quant_state, make_uniform_quant_state)
 
 
 def main():
@@ -48,6 +49,21 @@ def main():
     ap.add_argument("--prefix-lru-blocks", type=int, default=0,
                     help="retain up to this many fully-retired prefix "
                          "blocks in an LRU pool (0 = evict at zero refs)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax, the "
+                         "bit-exact oracle path)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest-probability tokens "
+                         "(0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed (requests get "
+                         "seed, seed+1, ... so streams are reproducible "
+                         "yet distinct)")
+    ap.add_argument("--stream", action="store_true",
+                    help="use generate_stream() and print tokens as the "
+                         "ticks emit them")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -80,18 +96,35 @@ def main():
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, (16,))
-    t0 = time.time()
+    prompts, plist = [], []
     for i in range(args.requests):
         plen = int(rng.integers(3, 10))
-        prompt = (shared if args.same_prefix
-                  else rng.integers(0, cfg.vocab_size, (plen,)))
-        eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
-    finished = eng.run_to_completion()
+        prompts.append(shared if args.same_prefix
+                       else rng.integers(0, cfg.vocab_size, (plen,)))
+        plist.append(SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, max_new=args.max_new,
+            seed=None if args.seed is None else args.seed + i))
+    t0 = time.time()
+    if args.stream:
+        # FIFO admission means first-seen event order == submission order,
+        # so number the requests as their first tokens arrive
+        ridx, streamed = {}, {}
+        for ev in eng.generate_stream(prompts, plist):
+            i = ridx.setdefault(ev.rid, len(ridx))
+            print(f"  tick -> req {i} token {ev.token}"
+                  + (f" [{ev.finish_reason}]" if ev.done else ""))
+            streamed.setdefault(i, []).append(ev.token)
+        results = None
+    else:
+        results = eng.generate(prompts, plist)
     dt = time.time() - t0
-    total_new = sum(len(r.output) for r in finished)
     st = eng.stats
-    print(f"served {len(finished)} requests / {total_new} tokens "
-          f"in {dt:.1f}s with {args.slots} slots")
+    total_new = st["generated_tokens"]
+    print(f"served {args.requests} requests / {total_new} tokens "
+          f"in {dt:.1f}s with {args.slots} slots "
+          f"({'sampled t=%.2f' % args.temperature if args.temperature > 0 else 'greedy'}; "
+          f"{st['tick_syncs']} host syncs over {st['decode_ticks']} ticks)")
     print(f"  batched prefill: {st['prefill_forwards']} forwards for "
           f"{st['prompt_tokens']} prompt tokens (seed scan-of-decode-steps "
           f"would have run {st['seed_equiv_forwards']} x {args.slots}-wide)")
@@ -102,8 +135,12 @@ def main():
               f"{st['cow_copies']} CoW copies, "
               f"{ps['blocks_in_use']} blocks still in use "
               f"({ps['retained_blocks']} LRU-retained)")
-    for r in sorted(finished, key=lambda r: r.rid):
-        print(f"  req {r.rid}: {list(r.output)}")
+    if results is not None:
+        for i, r in enumerate(results):
+            print(f"  req {i}: {r.tokens} [{r.finish_reason}]")
+    else:
+        for i in sorted(streamed):
+            print(f"  req {i}: {streamed[i]}")
 
     # single-tensor export path: packed codes for one weight
     b0 = params["blocks"][0]

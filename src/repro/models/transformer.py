@@ -656,7 +656,10 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
     layout, pool blocks are shared hardware, so a row that isn't advancing
     must not touch them (its write is routed to the garbage block).
 
-    Returns (logits (B, 1, V), cache)."""
+    Returns (logits (B, 1, V), cache). Token choice is the CALLER's seam:
+    the serving tick samples (or argmaxes) from the returned logits inside
+    the same jit (DESIGN.md §12), so this function stays sampling-agnostic
+    in both KV layouts."""
     pos = cache["pos"]
     write_mask = None
     if block_table is not None and advance is not None:

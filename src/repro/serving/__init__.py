@@ -1,0 +1,29 @@
+"""Serving: the request-lifecycle API over the CGMQ-quantized model.
+
+Public surface (DESIGN.md §8/§10/§11/§12):
+
+    from repro.serving import ServingEngine, SamplingParams
+
+    eng = ServingEngine(cfg, params, quant_state=qs)
+    results = eng.generate(prompts, SamplingParams(temperature=0.8,
+                                                   top_p=0.9, seed=7))
+    for ev in eng.generate_stream(prompts, params):
+        ...  # TokenEvent per emitted token
+
+``Request``/``submit``/``step`` remain public as the scheduler level the
+facade drives; ``kv_pool`` and ``sampling`` are the paged-KV and sampling
+substrates.
+"""
+
+from repro.serving.engine import (GenerationResult, Request, ServingEngine,
+                                  TokenEvent, export_int_codes,
+                                  export_int_model, make_mixed_quant_state,
+                                  make_uniform_quant_state)
+from repro.serving.sampling import SamplingParams, mask_logits, sample_tokens
+
+__all__ = [
+    "GenerationResult", "Request", "SamplingParams", "ServingEngine",
+    "TokenEvent", "export_int_codes", "export_int_model",
+    "make_mixed_quant_state", "make_uniform_quant_state", "mask_logits",
+    "sample_tokens",
+]

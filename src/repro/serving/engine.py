@@ -19,15 +19,25 @@ that artifact:
     fake-quant-then-fp32-matmul, so decode streams the weight bytes the
     controller certified — ``bits/8`` of a byte per weight, not a uniform
     int8 (let alone fp32) footprint.
-  * **device-resident generation loop** — greedy sampling, the per-slot
-    position bump and done-flag computation all live inside the jitted tick;
-    the Python loop does ONE small host sync per batch tick (next tokens +
-    emitted/done masks), not one per slot.
+  * **device-resident generation loop** — sampling (greedy argmax OR the
+    stochastic temperature / top-k / top-p pick, per slot), the per-slot
+    position bump, stop-token detection and done-flag computation all live
+    inside the jitted tick; the Python loop does ONE small host sync per
+    batch tick (next tokens + emitted/done masks), not one per slot. The
+    ``stats`` host-sync ledger (``tick_syncs`` / ``admit_syncs``) records
+    every transfer, and the tick stays at exactly one with sampling enabled.
 
+The request lifecycle (DESIGN.md §12): each ``Request`` carries a
+``SamplingParams`` (temperature, top-k, top-p, per-request seed, stop
+tokens, max_new) that admission lowers into per-slot rows of the device
+state; ``engine.generate(prompts, params)`` is the user-facing facade
+(submit → drive → collect ``GenerationResult``s) and
+``engine.generate_stream(...)`` yields per-tick ``TokenEvent`` deltas.
 Requests join a waiting queue; free slots prefill and join the running
-batch; finished slots free immediately. Per-slot KV state lives in the cache
-pytree indexed by slot, at per-slot positions (``cache["pos"]`` is a
-vector), so slots at unrelated sequence positions share one decode step.
+batch; finished slots — stop-token hits included — free immediately, in the
+same tick. Per-slot KV state lives in the cache pytree indexed by slot, at
+per-slot positions (``cache["pos"]`` is a vector), so slots at unrelated
+sequence positions share one decode step.
 """
 
 from __future__ import annotations
@@ -35,8 +45,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import itertools
 import time
-from typing import Any
+from typing import Any, Callable, Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +59,7 @@ from repro.models import transformer as tfm
 from repro.quant import (QuantizedTensor, QuantSpec, export_sites,
                          quant_report, specs_from_state)
 from repro.serving import kv_pool
+from repro.serving.sampling import SamplingParams, sample_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +186,14 @@ def make_mixed_quant_state(cfg: ModelConfig, params, *,
 
 @dataclasses.dataclass
 class Request:
+    """One unit of the serving lifecycle: waiting → slot → finished.
+
+    ``params`` carries the request's ``SamplingParams``; ``max_new`` is kept
+    as a construction convenience (the pre-§12 call signature) and is folded
+    into a default-greedy ``params`` when none is given — after
+    construction ``req.max_new`` always mirrors ``req.params.max_new``.
+    """
+
     rid: int
     prompt: np.ndarray          # (S,) int32
     max_new: int = 16
@@ -182,10 +202,48 @@ class Request:
     # paged layout: the chain-hash keys of this request's full prompt blocks
     # in the engine's prefix map (for eviction at retirement)
     prefix_keys: list = dataclasses.field(default_factory=list)
+    params: SamplingParams | None = None
+    finish_reason: str | None = None    # "stop" | "length" once done
+
+    def __post_init__(self):
+        if self.params is None:
+            self.params = SamplingParams(max_new=self.max_new)
+        self.max_new = self.params.max_new
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One emitted token, as yielded by ``generate_stream`` (one event per
+    request per tick; the admission tick yields the prefill-sampled first
+    token). ``done``/``finish_reason`` ride on the request's final event."""
+
+    rid: int
+    token: int
+    index: int                  # position in the request's output
+    done: bool = False
+    finish_reason: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationResult:
+    """Terminal state of one request, as returned by ``generate``."""
+
+    rid: int
+    prompt: np.ndarray
+    tokens: list
+    finish_reason: str
+    params: SamplingParams
 
 
 class ServingEngine:
     """Slot-based continuous batching around prefill_slot / decode_step.
+
+    The user-facing surface is the request lifecycle (DESIGN.md §12):
+    ``generate(prompts, params)`` / ``generate_stream(...)`` with a
+    ``SamplingParams`` per request — temperature / top-k / top-p sampling
+    runs inside the jitted tick off per-slot key chains, ``temperature=0``
+    (default) being bit-identical to greedy argmax. ``submit``/``step`` stay
+    public as the scheduler-level API the facade drives.
 
     ``quant_state=None`` serves fp32; with a quant_state the engine serves
     the packed mixed-precision export (``use_int8=True``, the default) or
@@ -229,7 +287,8 @@ class ServingEngine:
                  plan=None, use_int8: bool = True,
                  matmul_impl: str | None = None, kv_layout: str = "auto",
                  block_size: int = 8, num_blocks: int | None = None,
-                 prefix_sharing: bool = True, prefix_lru_blocks: int = 0):
+                 prefix_sharing: bool = True, prefix_lru_blocks: int = 0,
+                 max_stop: int = 4):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -295,15 +354,30 @@ class ServingEngine:
         self._lru: "collections.OrderedDict[Any, int]" = \
             collections.OrderedDict()
         self._cache_held: set = set()
-        # Device-resident generation state: one row per slot.
+        # Device-resident generation state: one row per slot. The sampling
+        # rows (key / temperature / top-k / top-p / stop) are the lowered
+        # form of each slot's SamplingParams (DESIGN.md §12), written once
+        # at admission so the tick samples without any host traffic.
+        self.max_stop = max_stop
         self.state = {
             "last_tok": jnp.zeros((slots,), jnp.int32),
             "active": jnp.zeros((slots,), bool),
             "remaining": jnp.zeros((slots,), jnp.int32),
+            "key": jnp.zeros((slots, 2), jnp.uint32),
+            "temp": jnp.zeros((slots,), jnp.float32),
+            "top_k": jnp.zeros((slots,), jnp.int32),
+            "top_p": jnp.ones((slots,), jnp.float32),
+            "stop": jnp.full((slots, max_stop), -1, jnp.int32),
         }
         self.slot_req: list[Request | None] = [None] * slots
         self.waiting: list[Request] = []
         self.finished: list[Request] = []
+        # seed stream for requests that don't pin one (deterministic per
+        # engine instance, not across processes) + facade request ids
+        self._seed_rng = np.random.default_rng(0x5EED)
+        # facade rids start high so they can't collide with hand-numbered
+        # Requests submitted alongside a generate() batch
+        self._auto_rid = itertools.count(1 << 20)
         # Perf accounting (consumed by benchmarks/run.py --json):
         #   prefill_forwards       batched prompt forwards actually run
         #   seed_equiv_forwards    decode_step forwards the seed's
@@ -313,12 +387,19 @@ class ServingEngine:
         #     prompt_blocks        prefix cache vs total full prompt blocks
         #   shared_admissions      admissions that skipped the prefill
         #                          forward entirely (fully cached prompt)
+        #   tick_syncs / admit_syncs   the host-sync ledger (DESIGN.md §12):
+        #                          every device_get on the serving path is
+        #                          counted at its call site, so the §8
+        #                          one-sync-per-tick contract is a tested
+        #                          number, not a comment (pool_stats() is
+        #                          benchmarking-only and ledgered separately)
         self.stats = {"prefill_forwards": 0, "tail_forwards": 0,
                       "teacher_steps": 0,
                       "prompt_tokens": 0, "seed_equiv_forwards": 0,
                       "decode_ticks": 0, "generated_tokens": 0,
                       "prefix_hit_blocks": 0, "prompt_blocks": 0,
                       "shared_admissions": 0, "cow_copies": 0,
+                      "tick_syncs": 0, "admit_syncs": 0, "stat_syncs": 0,
                       "prefill_time_s": 0.0, "decode_time_s": 0.0}
 
         # The small frozen specs (bits/ranges) ride as jit closure
@@ -342,7 +423,9 @@ class ServingEngine:
         def _tick(params, qweights, cache, state, alloc):
             """One device-resident generation step for the whole batch.
 
-            Greedy sampling, the per-slot position bump (via ``advance``),
+            Sampling (per-slot temperature / top-k / top-p off the slot's
+            key chain; zero-temperature rows take the bit-exact argmax), the
+            per-slot position bump (via ``advance``), stop-token detection,
             the done-flag updates — and, in the paged layout, the free-list
             pop for rows entering an unallocated block — all happen on
             device; the caller fetches (next_tokens, emitted, done) in a
@@ -356,41 +439,45 @@ class ServingEngine:
             logits, cache = tfm.decode_step(
                 _qc(qweights), params, cache, state["last_tok"], cfg,
                 plan=plan, advance=state["active"], block_table=table)
-            nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size],
-                             axis=-1).astype(jnp.int32)
+            pair = jax.vmap(jax.random.split)(state["key"])
+            # gate idle rows' (stale) temperature to 0 so a retired sampled
+            # request can't defeat the all-greedy lax.cond fast path
+            temp = jnp.where(state["active"], state["temp"], 0.0)
+            nxt = sample_tokens(logits[:, 0, : cfg.vocab_size],
+                                pair[:, 1], temp, state["top_k"],
+                                state["top_p"])
             emitted = state["active"]
             nxt = jnp.where(emitted, nxt, state["last_tok"])
+            # keys advance only on emission, so a request's position in its
+            # key chain equals its emitted-token count — slot placement,
+            # admission order and KV layout can't perturb the stream
+            key = jnp.where(emitted[:, None], pair[:, 0], state["key"])
+            hit_stop = (nxt[:, None] == state["stop"]).any(axis=-1)
             remaining = state["remaining"] - emitted.astype(jnp.int32)
-            done_now = emitted & (remaining <= 0)
-            state = {"last_tok": nxt, "active": emitted & ~done_now,
-                     "remaining": remaining}
+            done_now = emitted & ((remaining <= 0) | hit_stop)
+            state = {**state, "last_tok": nxt, "active": emitted & ~done_now,
+                     "remaining": remaining, "key": key}
             return cache, state, alloc, nxt, emitted, done_now
 
         self._tick = _tick
 
         @jax.jit
-        def _prefill(params, qweights, cache, state, table, toks, plen, slot,
-                     max_new, start_blk):
-            """Admit one request: batched prefill into the slot + state init.
+        def _prefill(params, qweights, cache, table, toks, plen, slot,
+                     start_blk):
+            """Admit one request: batched prefill into the slot.
 
             Specializes per padded prompt-bucket shape; ``plen``/``slot``/
-            ``max_new``/``start_blk`` are traced, so admissions don't
-            recompile. In the paged layout ``table`` is the block table and
-            ``start_blk`` skips writing a shared prompt prefix.
+            ``start_blk`` are traced, so admissions don't recompile. In the
+            paged layout ``table`` is the block table and ``start_blk``
+            skips writing a shared prompt prefix. Returns the final prompt
+            position's logits row — ``_arm`` samples the first token from
+            it, so every admission path shares ONE sampling seam.
             """
             logits, cache = tfm.prefill_slot(
                 _qc(qweights), params, toks, plen, cache, slot, cfg,
                 plan=plan, block_table=table if paged else None,
                 start_blk=start_blk)
-            first = jnp.argmax(
-                logits[0, plen - 1, : cfg.vocab_size]).astype(jnp.int32)
-            remaining = jnp.asarray(max_new, jnp.int32) - 1
-            state = {
-                "last_tok": state["last_tok"].at[slot].set(first),
-                "active": state["active"].at[slot].set(remaining > 0),
-                "remaining": state["remaining"].at[slot].set(remaining),
-            }
-            return cache, state, first
+            return cache, logits[0, plen - 1, : cfg.vocab_size]
 
         self._prefill = _prefill
 
@@ -401,9 +488,7 @@ class ServingEngine:
             into the chunked scan (DESIGN.md §8)."""
             logits, cache = tfm.prefill_slot_tail(
                 _qc(qweights), params, toks, cache, slot, cfg, plan=plan)
-            first = jnp.argmax(
-                logits[0, -1, : cfg.vocab_size]).astype(jnp.int32)
-            return cache, first
+            return cache, logits[0, -1, : cfg.vocab_size]
 
         self._prefill_tail = _prefill_tail
 
@@ -414,31 +499,55 @@ class ServingEngine:
             Used to replay the sub-block remainder of a prefix-shared
             admission. Only ``slot`` advances (and, paged, only it writes);
             every other row's cache state is untouched, so concurrent slots
-            are unaffected.
+            are unaffected. Returns the slot's logits row (consumed only by
+            the final replay step, via ``_arm``).
             """
             toks = state["last_tok"].at[slot].set(tok)
             adv = jnp.zeros((slots,), jnp.int32).at[slot].set(1)
             logits, cache = tfm.decode_step(
                 _qc(qweights), params, cache, toks, cfg, plan=plan,
                 advance=adv, block_table=table if paged else None)
-            nxt = jnp.argmax(
-                logits[slot, 0, : cfg.vocab_size]).astype(jnp.int32)
-            return cache, nxt
+            return cache, logits[slot, 0, : cfg.vocab_size]
 
         self._teacher_step = _teacher_step
 
         @jax.jit
-        def _arm_slot(state, slot, first, max_new):
-            """Arm a slot's generation row for admission paths that bypass
-            ``_prefill`` (fully-shared prompts, SSM tails)."""
+        def _arm(state, slot, logits_row, temp, top_k, top_p, key, stop_row,
+                 max_new):
+            """Arm a slot for generation: lower the request's SamplingParams
+            into the slot's state rows and sample its FIRST token from the
+            admission logits — the one sampling seam shared by every
+            admission path (batched prefill, SSM tail, teacher-forced
+            prefix replay). All operands are traced, so admissions with
+            different params never recompile."""
+            pair = jax.random.split(key)
+            first = sample_tokens(logits_row[None], pair[1][None],
+                                  temp[None], top_k[None], top_p[None])[0]
             remaining = jnp.asarray(max_new, jnp.int32) - 1
             return {
                 "last_tok": state["last_tok"].at[slot].set(first),
                 "active": state["active"].at[slot].set(remaining > 0),
                 "remaining": state["remaining"].at[slot].set(remaining),
-            }
+                "key": state["key"].at[slot].set(pair[0]),
+                "temp": state["temp"].at[slot].set(temp),
+                "top_k": state["top_k"].at[slot].set(top_k),
+                "top_p": state["top_p"].at[slot].set(top_p),
+                "stop": state["stop"].at[slot].set(stop_row),
+            }, first
 
-        self._arm_slot = _arm_slot
+        self._arm = _arm
+
+        @jax.jit
+        def _deactivate(state, slot):
+            """Host-side retirement of a slot the device still thinks is
+            live (first token hit a stop token): without this the row would
+            keep generating — and, paged, keep popping free blocks — after
+            its request retired."""
+            return {**state,
+                    "active": state["active"].at[slot].set(False),
+                    "remaining": state["remaining"].at[slot].set(0)}
+
+        self._deactivate = _deactivate
 
         if self.paged:
             self._alloc_range = jax.jit(kv_pool.alloc_range)
@@ -485,7 +594,33 @@ class ServingEngine:
         return min(b, self.max_seq), 0
 
     def submit(self, req: Request):
+        if len(req.params.stop) > self.max_stop:
+            raise ValueError(
+                f"request {req.rid} has {len(req.params.stop)} stop tokens; "
+                f"engine holds {self.max_stop} per slot (max_stop=...)")
         self.waiting.append(req)
+
+    def _sync(self, tree, kind: str):
+        """Host transfer + ledger entry: every ``device_get`` on the serving
+        path goes through here, so ``stats["tick_syncs"]`` /
+        ``stats["admit_syncs"]`` are an audited count, and the §8/§12
+        one-sync-per-tick contract is testable."""
+        self.stats[kind + "_syncs"] += 1
+        return jax.device_get(tree)
+
+    def _param_rows(self, p: SamplingParams):
+        """Lower a request's SamplingParams to the traced operands ``_arm``
+        writes into the slot's device state rows."""
+        seed = p.seed if p.seed is not None \
+            else int(self._seed_rng.integers(2**31 - 1))
+        stop = np.full((self.max_stop,), -1, np.int32)
+        stop[: len(p.stop)] = p.stop
+        return (jnp.asarray(p.temperature, jnp.float32),
+                jnp.asarray(p.top_k, jnp.int32),
+                jnp.asarray(p.top_p, jnp.float32),
+                jax.random.PRNGKey(seed),
+                jnp.asarray(stop),
+                p.max_new)
 
     # ------------------------------------------------------------------
     # Prefix cache (host side; DESIGN.md §10)
@@ -510,7 +645,8 @@ class ServingEngine:
     def _admit_paged(self, s: int, req: Request, prompt: np.ndarray):
         """Paged admission: map any cached prompt prefix onto its existing
         physical blocks, allocate the rest, and prefill only what the cache
-        can't supply. Returns the slot's first generated token."""
+        can't supply. Returns the final prompt position's logits row (the
+        caller samples the first token from it via ``_arm``)."""
         plen = len(prompt)
         bs = self.block_size
         nblk = -(-plen // bs)
@@ -549,13 +685,12 @@ class ServingEngine:
                 # (a later sharer would then map a freed/recycled block)
                 kept_keys = keys[:ns - 1]
             self.cache = self._set_pos(self.cache, s, t0)
-            first = None
+            row = None
             for t in prompt[t0:]:
-                self.cache, first = self._teacher_step(
+                self.cache, row = self._teacher_step(
                     self.params, self.qweights, self.cache, self.state,
                     self.alloc["table"], jnp.asarray(int(t), jnp.int32), s)
                 self.stats["teacher_steps"] += 1
-            self.state = self._arm_slot(self.state, s, first, req.max_new)
             self.stats["shared_admissions"] += 1
             req.prefix_keys = kept_keys
         else:
@@ -565,31 +700,28 @@ class ServingEngine:
             # state-threaded tail forward, so teacher-force the remainder.
             toks = np.zeros((1, max(l0, plen - tail)), np.int32)
             toks[0, : plen - tail] = prompt[: plen - tail]
-            self.cache, self.state, first = self._prefill(
-                self.params, self.qweights, self.cache, self.state,
-                self.alloc["table"], jnp.asarray(toks), plen - tail, s,
-                req.max_new, ns)
+            self.cache, row = self._prefill(
+                self.params, self.qweights, self.cache,
+                self.alloc["table"], jnp.asarray(toks), plen - tail, s, ns)
             self.stats["prefill_forwards"] += 1
             for t in prompt[plen - tail:]:
-                self.cache, first = self._teacher_step(
+                self.cache, row = self._teacher_step(
                     self.params, self.qweights, self.cache, self.state,
                     self.alloc["table"], jnp.asarray(int(t), jnp.int32), s)
                 self.stats["teacher_steps"] += 1
-            if tail:
-                self.state = self._arm_slot(self.state, s, first,
-                                            req.max_new)
             if keys:
                 # register this prompt's full blocks for later sharers; the
                 # table row read is an admission-time sync, not a tick sync
-                row = np.asarray(jax.device_get(self.alloc["table"][s]))
+                trow = np.asarray(self._sync(self.alloc["table"][s],
+                                             "admit"))
                 for j, key in enumerate(keys):
                     if key not in self._prefix_map:
-                        self._prefix_map[key] = int(row[j])
+                        self._prefix_map[key] = int(trow[j])
                         if self.lru_capacity > 0:
                             # LRU retention: the cache itself holds a device
                             # ref, so the block outlives its live users
                             self.alloc = self._retain_block(
-                                self.alloc, jnp.asarray(int(row[j]),
+                                self.alloc, jnp.asarray(int(trow[j]),
                                                         jnp.int32))
                             self._cache_held.add(key)
                 req.prefix_keys = keys
@@ -598,7 +730,7 @@ class ServingEngine:
         self._touch_lru(keys)
         self.stats["prefix_hit_blocks"] += ns
         self.stats["prompt_blocks"] += fb
-        return first
+        return row
 
     def _admit_ring(self, s: int, req: Request, prompt: np.ndarray):
         """Contiguous-layout admission. SSM prompts run the chunk-aligned
@@ -607,30 +739,29 @@ class ServingEngine:
         the chunked scan (``prefill_slot_tail``) — no teacher-forced single
         steps. A hybrid arch mixing recurrent-state and attention blocks
         can't take the tail forward (attention has no carried state to
-        resume from), so its tail falls back to teacher-forced steps."""
+        resume from), so its tail falls back to teacher-forced steps.
+        Returns the final prompt position's logits row."""
         plen = len(prompt)
         l0, tail = self._prefill_shape(plen)
         toks = np.zeros((1, max(l0, plen - tail)), np.int32)
         toks[0, : plen - tail] = prompt[: plen - tail]
-        self.cache, self.state, first = self._prefill(
-            self.params, self.qweights, self.cache, self.state, None,
-            jnp.asarray(toks), plen - tail, s, req.max_new, 0)
+        self.cache, row = self._prefill(
+            self.params, self.qweights, self.cache, None,
+            jnp.asarray(toks), plen - tail, s, 0)
         self.stats["prefill_forwards"] += 1
         if tail and self._state_only:
             tail_toks = np.asarray(prompt[plen - tail:], np.int32)[None, :]
-            self.cache, first = self._prefill_tail(
+            self.cache, row = self._prefill_tail(
                 self.params, self.qweights, self.cache,
                 jnp.asarray(tail_toks), s)
             self.stats["tail_forwards"] += 1
         elif tail:
             for t in prompt[plen - tail:]:
-                self.cache, first = self._teacher_step(
+                self.cache, row = self._teacher_step(
                     self.params, self.qweights, self.cache, self.state,
                     None, jnp.asarray(int(t), jnp.int32), s)
                 self.stats["teacher_steps"] += 1
-        if tail:
-            self.state = self._arm_slot(self.state, s, first, req.max_new)
-        return first
+        return row
 
     # ------------------------------------------------------------------
     # Prefix-cache LRU retention (DESIGN.md §10)
@@ -683,48 +814,167 @@ class ServingEngine:
                 self.slot_req[s] = req
                 prompt = np.asarray(req.prompt, np.int32)
                 if self.paged:
-                    first = self._admit_paged(s, req, prompt)
+                    row = self._admit_paged(s, req, prompt)
                 else:
-                    first = self._admit_ring(s, req, prompt)
+                    row = self._admit_ring(s, req, prompt)
+                self.state, first = self._arm(
+                    self.state, s, row, *self._param_rows(req.params))
                 self.stats["prompt_tokens"] += plen
                 self.stats["seed_equiv_forwards"] += plen
                 admitted.append((s, req, first))
-        for s, req, first in admitted:
-            req.output.append(int(first))
+        events = []
+        # ONE host transfer for the whole admission wave's first tokens
+        firsts = self._sync([f for _, _, f in admitted], "admit") \
+            if admitted else []
+        for (s, req, _), first in zip(admitted, firsts):
+            tok = int(first)
+            req.output.append(tok)
             self.stats["generated_tokens"] += 1
-            if req.max_new <= 1:
+            stopped = tok in req.params.stop
+            if stopped or req.max_new <= 1:
+                req.finish_reason = "stop" if stopped else "length"
+                if stopped and req.max_new > 1:
+                    # the device armed the row for more tokens — shut it
+                    # down before retirement frees its blocks
+                    self.state = self._deactivate(self.state, s)
                 self._retire(s, req)
+            events.append(TokenEvent(rid=req.rid, token=tok,
+                                     index=len(req.output) - 1,
+                                     done=req.done,
+                                     finish_reason=req.finish_reason))
         if admitted:
             self.stats["prefill_time_s"] += time.perf_counter() - t0
+        return events
 
-    def step(self):
-        """One engine tick: admit, decode the running batch, retire."""
-        self._admit()
+    def step(self) -> list:
+        """One engine tick: admit, decode the running batch, retire.
+
+        Returns the tick's ``TokenEvent`` list — admission first-tokens plus
+        one decode emission per active slot; empty when there was nothing to
+        run (so the pre-§12 boolean use keeps working). Stop-token hits
+        retire — and, paged, free their KV blocks — inside this same call.
+        """
+        events = self._admit()
         if all(r is None for r in self.slot_req):
-            return False
+            return events
         t0 = time.perf_counter()
         self.cache, self.state, self.alloc, nxt, emitted, done = self._tick(
             self.params, self.qweights, self.cache, self.state, self.alloc)
         # The one host sync of the tick: three (slots,)-sized vectors.
         nxt, emitted, done = map(np.asarray,
-                                 jax.device_get((nxt, emitted, done)))
+                                 self._sync((nxt, emitted, done), "tick"))
         self.stats["decode_time_s"] += time.perf_counter() - t0
         self.stats["decode_ticks"] += 1
         for s, req in enumerate(self.slot_req):
             if req is None or not emitted[s]:
                 continue
-            req.output.append(int(nxt[s]))
+            tok = int(nxt[s])
+            req.output.append(tok)
             self.stats["generated_tokens"] += 1
             if done[s]:
+                req.finish_reason = ("stop" if tok in req.params.stop
+                                     else "length")
                 self._retire(s, req)
-        return True
+            events.append(TokenEvent(rid=req.rid, token=tok,
+                                     index=len(req.output) - 1,
+                                     done=req.done,
+                                     finish_reason=req.finish_reason))
+        return events
+
+    # ------------------------------------------------------------------
+    # Request-lifecycle facade (DESIGN.md §12)
+    # ------------------------------------------------------------------
+
+    def _submit_batch(self, prompts: Sequence,
+                      params: SamplingParams | Sequence | None):
+        if params is None or isinstance(params, SamplingParams):
+            plist = [params or SamplingParams()] * len(prompts)
+        else:
+            plist = list(params)
+            if len(plist) != len(prompts):
+                raise ValueError(f"{len(prompts)} prompts but "
+                                 f"{len(plist)} SamplingParams")
+        # build and validate the WHOLE batch before the first submit: a bad
+        # member must not leave earlier ones orphaned in the waiting queue
+        # of a call that raised
+        reqs = []
+        for i, (prompt, p) in enumerate(zip(prompts, plist)):
+            if len(p.stop) > self.max_stop:
+                raise ValueError(
+                    f"prompt {i} has {len(p.stop)} stop tokens; engine "
+                    f"holds {self.max_stop} per slot")
+            reqs.append(Request(rid=next(self._auto_rid),
+                                prompt=np.asarray(prompt, np.int32),
+                                params=p))
+        for req in reqs:
+            self.submit(req)
+        return reqs
+
+    def _result(self, req: Request) -> GenerationResult:
+        return GenerationResult(rid=req.rid, prompt=req.prompt,
+                                tokens=list(req.output),
+                                finish_reason=req.finish_reason or "length",
+                                params=req.params)
+
+    def generate(self, prompts: Sequence,
+                 params: SamplingParams | Sequence | None = None, *,
+                 on_token: Callable | None = None,
+                 max_ticks: int = 100_000) -> list:
+        """Serve a batch of prompts to completion.
+
+        ``prompts``: token-id sequences; ``params``: one ``SamplingParams``
+        for all of them, a per-prompt sequence, or ``None`` for greedy
+        defaults. Drives the engine (other outstanding requests ride along)
+        until every prompt of THIS batch finishes and returns their
+        ``GenerationResult``s in prompt order. ``on_token`` — called with
+        each of this batch's ``TokenEvent``s as it is emitted — is the
+        callback form of ``generate_stream``.
+        """
+        reqs = self._submit_batch(prompts, params)
+        mine = {r.rid for r in reqs}
+        for _ in range(max_ticks):
+            if all(r.done for r in reqs):
+                break
+            for ev in self.step():
+                if on_token is not None and ev.rid in mine:
+                    on_token(ev)
+        if not all(r.done for r in reqs):
+            raise RuntimeError(f"generate() still running after "
+                               f"{max_ticks} ticks")
+        return [self._result(r) for r in reqs]
+
+    def generate_stream(self, prompts: Sequence,
+                        params: SamplingParams | Sequence | None = None, *,
+                        max_ticks: int = 100_000) -> Iterator[TokenEvent]:
+        """Streaming form of ``generate``: yields this batch's per-tick
+        ``TokenEvent`` deltas (one per request per tick, admission tokens
+        included) as they are emitted; each request's final event carries
+        ``done=True`` and its ``finish_reason``. The batch is submitted
+        EAGERLY — before the returned iterator is first advanced — so other
+        engine traffic can pick the requests up either way."""
+        reqs = self._submit_batch(prompts, params)
+        mine = {r.rid for r in reqs}
+
+        def _events():
+            for _ in range(max_ticks):
+                if all(r.done for r in reqs):
+                    return
+                for ev in self.step():
+                    if ev.rid in mine:
+                        yield ev
+            if not all(r.done for r in reqs):
+                raise RuntimeError(f"generate_stream() still running after "
+                                   f"{max_ticks} ticks")
+
+        return _events()
 
     def pool_stats(self) -> dict:
-        """Paged-pool occupancy snapshot (one small host sync; benchmarking
-        only — never called on the tick path)."""
+        """Paged-pool occupancy snapshot (one small host sync, ledgered as
+        ``stat_syncs``; benchmarking only — never called on the tick
+        path)."""
         if not self.paged:
             return {}
-        n_free = int(jax.device_get(self.alloc["n_free"]))
+        n_free = int(self._sync(self.alloc["n_free"], "stat"))
         hits, total = self.stats["prefix_hit_blocks"], self.stats[
             "prompt_blocks"]
         return {

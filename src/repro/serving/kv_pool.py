@@ -102,7 +102,13 @@ def share_prefix(alloc, slot, phys, n):
 
 def free_slot(alloc, slot):
     """Retire a slot: decref every valid table entry, push blocks whose
-    refcount hits 0 back on the stack (in row order), clear the row."""
+    refcount hits 0 back on the stack (in row order), clear the row.
+
+    This is also the stop-token early-exit path (DESIGN.md §12): a request
+    that stops before ``max_new`` retires in the tick that emitted the stop,
+    so its blocks rejoin the free stack immediately — the engine guarantees
+    the slot's device row is inactive by then (a still-active row would
+    keep popping blocks via ``tick_alloc``)."""
     nb = alloc["free"].shape[0]
     row = alloc["table"][slot]
     valid = row >= 0

@@ -1,0 +1,131 @@
+"""Request-lifecycle sampling: ``SamplingParams`` + device-resident sampling.
+
+The serving API's sampling surface (DESIGN.md §12). A ``SamplingParams``
+rides on every request and is lowered at admission into per-slot rows of the
+engine's device-resident generation state (temperature / top-k / top-p /
+stop tokens / a per-request ``jax.random`` key), so the stochastic pick of
+the next token runs INSIDE the jitted decode tick — the §8 contract of one
+small host sync per tick survives sampling unchanged.
+
+Two layers:
+
+  * ``SamplingParams`` — the user-facing request knobs, a frozen host-side
+    dataclass validated at construction. ``temperature=0`` (the default) is
+    the greedy path and is BIT-IDENTICAL to pre-sampling argmax decoding:
+    ``sample_tokens`` selects ``argmax`` for zero-temperature rows and
+    ``lax.cond``-skips the masking/categorical work entirely when no row in
+    the batch samples, so the argmax oracle gates (packed-vs-int8, ring-vs-
+    paged) keep holding and all-greedy batches pay zero sampling compute.
+  * ``mask_logits`` / ``sample_tokens`` — the device-side math. Every op is
+    row-independent (per-slot vmap / axis=-1 reductions), which is what
+    makes a request's token stream a pure function of its
+    ``(seed, prompt, params)`` and NOT of slot placement, admission order,
+    or KV layout: the seed-determinism contract tested in
+    ``tests/test_serving.py``.
+
+Key discipline: a request's key is created from its seed at admission and
+split once per emitted token (the first, prefill-sampled token included).
+Keys advance only for rows that actually emit, so the stream position in
+the key chain equals the number of tokens emitted — identical across every
+admission path (batched prefill, SSM tail, teacher-forced prefix replay).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Lowest fp32 the masking writes into rejected lanes; -inf would make
+# categorical's gumbel-add produce NaN for fully-masked rows (which cannot
+# happen — the top-ranked token is always kept — but finfo.min keeps the
+# math total anyway).
+_MASKED = float(jnp.finfo(jnp.float32).min)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation knobs (DESIGN.md §12).
+
+    ``temperature=0`` is greedy argmax — the bit-exact oracle path.
+    ``top_k=0`` / ``top_p=1.0`` disable the respective truncation.
+    ``seed=None`` lets the engine draw a per-request seed from its own
+    deterministic stream (reproducible per engine instance, not across
+    processes — pass an explicit seed for that).
+    ``stop``: token ids that end the request early; the stop token itself is
+    emitted (like an EOS) and the request retires in the SAME tick, blocks
+    and all. ``max_new`` counts every emitted token, stop included.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int | None = None
+    stop: tuple = ()
+    max_new: int = 16
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off): {self.top_k}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1]: {self.top_p}")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1: {self.max_new}")
+        object.__setattr__(self, "stop", tuple(int(t) for t in self.stop))
+        if any(t < 0 for t in self.stop):
+            raise ValueError(f"stop token ids must be >= 0: {self.stop}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def mask_logits(logits, top_k, top_p):
+    """Top-k / top-p (nucleus) truncation, per row.
+
+    ``logits``: (B, V) fp32 (already temperature-scaled); ``top_k``: (B,)
+    int32 (0 = off); ``top_p``: (B,) fp32 in (0, 1]. Returns (B, V) with
+    rejected lanes at ``finfo.min``. Nucleus keeps the smallest
+    probability-sorted set whose cumulative mass reaches ``top_p`` (the
+    first token is always kept), computed on the post-top-k renormalized
+    distribution; ranking ties resolve by stable sort, so the result is
+    deterministic and row-independent.
+    """
+    v = logits.shape[-1]
+    order = jnp.argsort(-logits, axis=-1, stable=True)
+    ranked = jnp.take_along_axis(logits, order, axis=-1)
+    rank = jnp.arange(v)[None, :]
+    k = jnp.where(top_k > 0, top_k, v)[:, None]
+    in_k = rank < k
+    probs = jax.nn.softmax(jnp.where(in_k, ranked, _MASKED), axis=-1)
+    mass_before = jnp.cumsum(probs, axis=-1) - probs
+    keep = in_k & (mass_before < top_p[:, None])
+    keep = keep | (rank == 0)
+    ranked = jnp.where(keep, ranked, _MASKED)
+    inverse = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(ranked, inverse, axis=-1)
+
+
+def sample_tokens(logits, keys, temperature, top_k, top_p):
+    """Next-token choice for a batch of slots, on device.
+
+    ``logits``: (B, V) fp32; ``keys``: (B, 2) uint32 per-slot subkeys;
+    ``temperature`` / ``top_k`` / ``top_p``: (B,) per-slot rows. Rows with
+    ``temperature <= 0`` take the argmax — bit-identical to the pre-sampling
+    greedy path — and when NO row samples, ``lax.cond`` skips the sort/
+    categorical work at runtime, so all-greedy ticks cost what they always
+    did. Returns (B,) int32.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _drawn(_):
+        scaled = logits / jnp.maximum(temperature, 1e-3)[:, None]
+        masked = mask_logits(scaled, top_k, top_p)
+        drawn = jax.vmap(jax.random.categorical)(keys, masked)
+        return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
+
+    return jax.lax.cond(jnp.any(temperature > 0.0), _drawn,
+                        lambda _: greedy, operand=None)

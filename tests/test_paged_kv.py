@@ -23,7 +23,7 @@ from repro.kernels.paged_attention.ops import paged_attention_op
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.models import transformer as tfm
 from repro.serving import kv_pool
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, SamplingParams, ServingEngine
 
 ATTN_ARCHS = [
     a for a in ALL_ARCHS
@@ -453,6 +453,51 @@ def test_prefix_lru_never_starves_generation():
                            max_new=24))
     fin = eng.run_to_completion()
     assert all(len(r.output) == 24 for r in fin[-2:])
+
+
+def test_stop_token_releases_paged_blocks_in_same_tick():
+    """Regression (DESIGN.md §12): a request that hits a stop token before
+    ``max_new`` must release its paged KV blocks at retirement, in the SAME
+    tick that emitted the stop — not hold them until ``max_new`` ticks
+    elapse. The pool free-count must recover immediately."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, cfg.vocab_size, (12,))
+    probe = ServingEngine(cfg, params, slots=1, max_seq=64)
+    stream = probe.generate([prompt], SamplingParams(max_new=8))[0].tokens
+
+    stop = stream[3]
+    k = stream.index(stop)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64)
+    free0 = int(jax.device_get(eng.alloc["n_free"]))
+    eng.submit(Request(rid=0, prompt=prompt,
+                       params=SamplingParams(max_new=64, stop=(stop,))))
+    ticks = 0
+    while eng.waiting or any(r is not None for r in eng.slot_req):
+        eng.step()
+        ticks += 1
+    req = eng.finished[0]
+    assert req.finish_reason == "stop"
+    assert req.output == stream[: k + 1], "stop token must end the stream"
+    # retirement freed the row the moment the stop tick retired it: the
+    # loop exited on the stop tick, nowhere near the 64-token budget
+    assert ticks == max(k, 1) and eng.stats["decode_ticks"] == k
+    assert int(jax.device_get(eng.alloc["n_free"])) == free0, \
+        "stop-token retirement leaked pool blocks past the stop tick"
+    assert eng.pool_stats()["blocks_in_use"] == 0
+
+    # first-token stop: the armed slot must be shut down before its blocks
+    # free, or the still-active row would pop fresh blocks every tick
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64)
+    res = eng.generate([prompt], SamplingParams(max_new=64,
+                                                stop=(stream[0],)))[0]
+    assert res.finish_reason == "stop" and res.tokens == [stream[0]]
+    assert eng.stats["decode_ticks"] == 0
+    assert int(jax.device_get(eng.alloc["n_free"])) == free0
+    # and the pool stays intact while another request runs to completion
+    out = eng.generate([prompt], SamplingParams(max_new=8))[0]
+    assert out.tokens == stream
+    assert eng.pool_stats()["blocks_in_use"] == 0
 
 
 def test_undersized_pool_rejected_at_construction():

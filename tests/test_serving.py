@@ -1,12 +1,18 @@
 """Serving fast-path tests: batched prefill, scheduler, quantized decode.
 
-Covers the three legs of the serving hot path (DESIGN.md §8/§11):
+Covers the serving hot path (DESIGN.md §8/§11) and the request-lifecycle
+API (§12):
   * batched prefill ≡ the seed's scan-of-decode-steps (logits equivalence),
   * continuous-batching scheduler invariants (slot isolation, FIFO
     admission, retirement/reuse),
   * the mixed-precision integer decode path: fused-dequant GEMMs vs the
     fake-quant train-mode reference, and the packed sub-byte storage path
-    vs the unpacked int8 oracle — bit-for-bit, on every transformer config.
+    vs the unpacked int8 oracle — bit-for-bit, on every transformer config,
+  * SamplingParams + in-tick sampling: the temperature=0 facade is
+    bit-identical to the argmax oracle on every servable arch and layout,
+    seeded streams are invariant to slot placement / admission order / KV
+    layout, stop tokens retire in-tick, and the host-sync ledger stays at
+    one sync per tick with sampling enabled.
 """
 
 import jax
@@ -18,9 +24,10 @@ from repro.configs import ALL_ARCHS, get_smoke_config
 from repro.core.sites import QuantContext
 from repro.models import transformer as tfm
 from repro.quant import specs_from_state
-from repro.serving.engine import (Request, ServingEngine, export_int_model,
-                                  make_mixed_quant_state,
-                                  make_uniform_quant_state)
+from repro.serving import (Request, SamplingParams, ServingEngine,
+                           TokenEvent, export_int_model,
+                           make_mixed_quant_state, make_uniform_quant_state)
+from repro.serving.sampling import mask_logits, sample_tokens
 
 ARCH = "tinyllama-1.1b"
 
@@ -358,3 +365,277 @@ def test_engine_serves_packed_sub_byte_end_to_end():
     assert t["bytes_device"] < t["bytes_uniform_int8"] < t["bytes_fp32"]
     assert t["fallback_sites"] == 0
     assert rep["bops"]["model"] < rep["bops"]["uniform_int8"]
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle: SamplingParams + in-tick sampling (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+# every arch the engine can serve from token prompts (the two modality
+# stubs take embeddings, not tokens, and have no request-level entry)
+TOKEN_ARCHS = [a for a in ALL_ARCHS if get_smoke_config(a).embed_input]
+
+
+def test_sampling_params_validation():
+    p = SamplingParams(temperature=0.7, top_k=5, top_p=0.9, seed=1,
+                      stop=(3, 7), max_new=4)
+    assert not p.greedy and p.stop == (3, 7)
+    assert SamplingParams().greedy
+    for bad in (dict(temperature=-1.0), dict(top_k=-1), dict(top_p=0.0),
+                dict(top_p=1.5), dict(max_new=0), dict(stop=(-2,))):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
+
+
+def test_mask_logits_top_k_top_p_support():
+    """top-k bounds the kept set by rank; top-p keeps the smallest head of
+    the sorted distribution whose mass reaches p (first token always kept);
+    disabled knobs (0 / 1.0) keep everything."""
+    rng = np.random.default_rng(0)
+    l = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    off = mask_logits(l, jnp.zeros((4,), jnp.int32), jnp.ones((4,)))
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(l))
+
+    k = jnp.asarray([1, 3, 8, 0], jnp.int32)
+    kept = (np.asarray(mask_logits(l, k, jnp.ones((4,)))) > -1e30).sum(-1)
+    assert kept.tolist() == [1, 3, 8, 64]
+    # the kept lanes are exactly the top-k by value
+    m = np.asarray(mask_logits(l, k, jnp.ones((4,))))
+    for r in range(3):
+        top = set(np.argsort(-np.asarray(l[r]))[: int(k[r])])
+        assert set(np.nonzero(m[r] > -1e30)[0]) == top
+
+    tiny = mask_logits(l, jnp.zeros((4,), jnp.int32),
+                       jnp.full((4,), 1e-6, jnp.float32))
+    kept = (np.asarray(tiny) > -1e30).sum(-1)
+    assert kept.tolist() == [1, 1, 1, 1]  # first sorted token always kept
+    p = jnp.asarray([0.5, 0.9, 1.0, 0.99], jnp.float32)
+    m = np.asarray(mask_logits(l, jnp.zeros((4,), jnp.int32), p))
+    for r in range(4):
+        probs = np.exp(np.asarray(l[r])) / np.exp(np.asarray(l[r])).sum()
+        order = np.argsort(-probs)
+        csum = np.cumsum(probs[order])
+        want = order[: int(np.searchsorted(csum, float(p[r])) + 1)]
+        assert set(np.nonzero(m[r] > -1e30)[0]) == set(want), r
+
+
+def test_sample_tokens_greedy_rows_bit_exact_and_support():
+    """temperature<=0 rows return exactly argmax; sampled rows only ever
+    draw from their top-k support."""
+    rng = np.random.default_rng(1)
+    l = jnp.asarray(rng.normal(size=(3, 32)) * 3, jnp.float32)
+    greedy = np.asarray(jnp.argmax(l, -1))
+    for trial in range(20):
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3) + 3 * trial)
+        toks = np.asarray(sample_tokens(
+            l, keys, jnp.asarray([0.0, 1.5, 0.0]),
+            jnp.asarray([0, 3, 0], jnp.int32), jnp.ones((3,))))
+        assert toks[0] == greedy[0] and toks[2] == greedy[2]
+        assert toks[1] in set(np.argsort(-np.asarray(l[1]))[:3])
+
+
+@pytest.mark.parametrize("arch", TOKEN_ARCHS)
+def test_generate_argmax_matches_manual_greedy_every_arch(arch):
+    """The §12 acceptance gate: temperature=0 generation through the
+    ``generate()`` facade is identical to the manual scan-of-decode-steps
+    argmax oracle — the pre-redesign greedy path — on every servable arch,
+    in the ring layout AND (where the arch has attention) the paged one."""
+    cfg, params = _model(arch=arch)
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+
+    qc = QuantContext(mode="off")
+    cache = tfm.init_cache(cfg, 1, 32)
+    for t in prompt:
+        logits, cache = tfm.decode_step(qc, params, cache,
+                                        jnp.asarray([int(t)], jnp.int32), cfg)
+    want = [int(jnp.argmax(logits[0, 0, : cfg.vocab_size]))]
+    for _ in range(2):
+        logits, cache = tfm.decode_step(
+            qc, params, cache, jnp.asarray([want[-1]], jnp.int32), cfg)
+        want.append(int(jnp.argmax(logits[0, 0, : cfg.vocab_size])))
+
+    kinds = list(cfg.block_pattern) + list(cfg.remainder_kinds)
+    layouts = ["ring"]
+    if any(k in ("global", "local") for k in kinds):
+        layouts.append("paged")
+    for layout in layouts:
+        eng = ServingEngine(cfg, params, slots=2, max_seq=32,
+                            kv_layout=layout)
+        res = eng.generate([prompt], SamplingParams(max_new=3))
+        assert res[0].tokens == want, (arch, layout)
+        assert res[0].finish_reason == "length"
+
+
+def test_seed_determinism_across_placement_order_and_layout():
+    """Identical ``SamplingParams(seed=...)`` produce identical token
+    streams no matter which slot hosts the request, what was admitted
+    before it, or which KV layout backs the cache — the token stream is a
+    pure function of (prompt, params)."""
+    cfg, params = _model()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, (9,))
+    sp = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, seed=123,
+                        max_new=6)
+    streams = []
+    for layout in ("ring", "paged"):
+        solo = ServingEngine(cfg, params, slots=3, max_seq=64,
+                             kv_layout=layout)
+        streams.append((layout, "solo", solo.generate([prompt], sp)[0].tokens))
+        # crowded: two sampled decoys admitted first push the probe into
+        # slot 2, and it admits mid-flight
+        eng = ServingEngine(cfg, params, slots=3, max_seq=64,
+                            kv_layout=layout)
+        for i in (50, 51):
+            eng.submit(Request(
+                rid=i, prompt=rng.integers(0, cfg.vocab_size, (5,)),
+                params=SamplingParams(temperature=0.5, seed=i, max_new=9)))
+        eng.step()
+        streams.append((layout, "crowded", eng.generate([prompt], sp)[0].tokens))
+    want = streams[0][2]
+    assert len(set(want)) > 1
+    for layout, mode, got in streams[1:]:
+        assert got == want, f"{layout}/{mode} diverged: {got} vs {want}"
+
+
+def test_seeded_stream_survives_prefix_shared_admission():
+    """A fully prefix-shared (teacher-forced, zero-prefill) admission of the
+    same prompt+params reproduces the registrant's sampled stream: the key
+    chain is positioned by tokens emitted, not by admission path."""
+    cfg, params = _model()
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (11,))
+    sp = SamplingParams(temperature=0.9, top_p=0.9, seed=7, max_new=5)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    a, b = eng.generate([prompt, prompt], [sp, sp])
+    assert eng.stats["shared_admissions"] == 1
+    assert a.tokens == b.tokens
+    assert len(set(a.tokens)) > 1
+
+
+def test_host_sync_ledger_one_sync_per_tick_with_sampling():
+    """§8's one-host-sync-per-tick contract survives in-tick sampling: the
+    ledger shows exactly one transfer per decode tick, and none from the
+    sampling math itself."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, (6,)) for _ in range(3)]
+    eng.generate(prompts, SamplingParams(temperature=1.0, top_p=0.9, seed=3,
+                                         max_new=5))
+    st = eng.stats
+    assert st["decode_ticks"] > 0
+    assert st["tick_syncs"] == st["decode_ticks"]
+    # admission first-tokens are fetched ONE batched transfer per wave:
+    # 3 requests through 2 slots = 2 waves (no prefix-registration reads,
+    # the 6-token prompts hold no full block)
+    assert st["admit_syncs"] == 2
+    assert st["stat_syncs"] == 0
+
+
+def test_generate_stream_yields_per_tick_deltas():
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (4,)),
+               rng.integers(0, cfg.vocab_size, (7,))]
+    events = list(eng.generate_stream(prompts, SamplingParams(max_new=4)))
+    assert all(isinstance(ev, TokenEvent) for ev in events)
+    by_rid = {}
+    for ev in events:
+        by_rid.setdefault(ev.rid, []).append(ev)
+    assert len(by_rid) == 2
+    for evs in by_rid.values():
+        assert [e.index for e in evs] == [0, 1, 2, 3]
+        assert [e.done for e in evs] == [False, False, False, True]
+        assert evs[-1].finish_reason == "length"
+        assert all(e.finish_reason is None for e in evs[:-1])
+
+
+def test_generate_on_token_callback_matches_results():
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, (5,)) for _ in range(2)]
+    seen = []
+    res = eng.generate(prompts, SamplingParams(max_new=3),
+                       on_token=lambda ev: seen.append(ev))
+    streamed = {}
+    for ev in seen:
+        streamed.setdefault(ev.rid, []).append(ev.token)
+    assert {r.rid: r.tokens for r in res} == streamed
+
+
+def test_stop_token_truncates_stream_and_sets_reason():
+    """Stop tokens end the request in the tick that emits them — including
+    a stop hit on the very first (prefill-sampled) token — and the slot
+    rehosts the next request cleanly."""
+    cfg, params = _model()
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, (7,))
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64)
+    base = eng.generate([prompt], SamplingParams(max_new=8))[0].tokens
+
+    mid = base[3]
+    k = base.index(mid)
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64)
+    res = eng.generate([prompt], SamplingParams(max_new=8, stop=(mid,)))[0]
+    assert res.tokens == base[: k + 1]
+    assert res.finish_reason == "stop"
+
+    # first-token stop: retires at admission, zero decode ticks for it,
+    # and the deactivated slot serves the next request unperturbed
+    eng = ServingEngine(cfg, params, slots=1, max_seq=64)
+    r0, r1 = eng.generate([prompt, prompt],
+                          [SamplingParams(max_new=8, stop=(base[0],)),
+                           SamplingParams(max_new=8)])
+    assert r0.tokens == [base[0]] and r0.finish_reason == "stop"
+    assert r1.tokens == base
+
+
+def test_request_legacy_max_new_folds_into_params():
+    req = Request(rid=0, prompt=np.asarray([1, 2], np.int32), max_new=9)
+    assert req.params.max_new == 9 and req.params.greedy
+    req = Request(rid=1, prompt=np.asarray([1], np.int32),
+                  params=SamplingParams(max_new=3))
+    assert req.max_new == 3
+
+
+def test_too_many_stop_tokens_rejected_at_submit():
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32, max_stop=2)
+    with pytest.raises(ValueError, match="stop tokens"):
+        eng.submit(Request(rid=0, prompt=np.asarray([1], np.int32),
+                           params=SamplingParams(stop=(1, 2, 3))))
+    # a bad batch member must not orphan earlier members in the queue
+    with pytest.raises(ValueError, match="stop tokens"):
+        eng.generate([np.asarray([1], np.int32), np.asarray([2], np.int32)],
+                     [SamplingParams(), SamplingParams(stop=(1, 2, 3))])
+    assert not eng.waiting
+
+
+def test_generate_finishing_on_final_permitted_tick_returns():
+    """max_ticks boundary: a batch that completes on the last allowed tick
+    must return its results, not raise."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32)
+    res = eng.generate([np.asarray([1, 2], np.int32)],
+                       SamplingParams(max_new=3), max_ticks=2)
+    assert res[0].tokens and res[0].finish_reason == "length"
+    evs = list(eng.generate_stream([np.asarray([3, 4], np.int32)],
+                                   SamplingParams(max_new=3), max_ticks=2))
+    assert len(evs) == 3 and evs[-1].done
+    with pytest.raises(RuntimeError, match="still running"):
+        eng.generate([np.asarray([5], np.int32)],
+                     SamplingParams(max_new=8), max_ticks=2)
+
+
+def test_generate_stream_submits_eagerly():
+    """The batch must be in the queue before the stream is first advanced,
+    so other engine traffic can pick it up either way."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32)
+    stream = eng.generate_stream([np.asarray([1, 2, 3], np.int32)],
+                                 SamplingParams(max_new=2))
+    assert len(eng.waiting) == 1
+    assert len(list(stream)) == 2
