@@ -232,6 +232,63 @@ def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
     return out
 
 
+def _chaos_run(cfg, params, *, slots=4, plen=12, max_new=24, nreq=4,
+               extra=2):
+    """Serving-under-pressure smoke (DESIGN.md §13): the same seeded
+    workload is run once solo-per-request on an ample pool (the reference
+    streams) and once on a pool too small for the offered load with a
+    bounded queue. The pressured run must preempt, resume every victim to
+    a BIT-IDENTICAL stream, bounce the over-capacity submissions with
+    ``FINISHED_REJECTED``, and keep the tick at one host sync."""
+    from repro.serving import (FINISHED_LENGTH, FINISHED_REJECTED,
+                               AdmissionConfig, Request, SamplingParams,
+                               ServingEngine)
+
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, (plen,))
+               for _ in range(nreq + extra)]
+    sps = [SamplingParams(temperature=0.8, top_p=0.9, seed=100 + i,
+                          max_new=max_new) for i in range(nreq + extra)]
+
+    solo = ServingEngine(cfg, params, slots=2, max_seq=64)
+    ref = []
+    for i in range(nreq):
+        r = solo.submit(Request(rid=i, prompt=prompts[i], params=sps[i]))
+        while not r.done:
+            solo.step()
+        ref.append(list(r.output))
+
+    # 14 blocks can't back 4 slots at max_seq=64 (needs 33): preemption
+    # auto-enables; queue capacity nreq bounces the extra submissions
+    eng = ServingEngine(cfg, params, slots=slots, max_seq=64, num_blocks=14,
+                        admission=AdmissionConfig(queue_capacity=nreq,
+                                                  on_full="reject"))
+    reqs = [eng.submit(Request(rid=i, prompt=prompts[i], params=sps[i]))
+            for i in range(nreq + extra)]
+    ticks = 0
+    while (eng.waiting or any(r is not None for r in eng.slot_req)) \
+            and ticks < 2000:
+        eng.step()
+        ticks += 1
+    st = eng.stats
+    served = [r for r in reqs if r.finish_reason == FINISHED_LENGTH]
+    assert len(served) == nreq and all(r.done for r in reqs)
+    return {
+        "requests": nreq + extra,
+        "num_blocks": 14,
+        "preemptions": st["preemptions"],
+        "resumed_admissions": st["resumed_admissions"],
+        "preempted_stream_equal": bool(all(
+            list(r.output) == ref[i] for i, r in enumerate(reqs[:nreq]))),
+        "rejected_requests": st["rejected_requests"],
+        "rejected_expected": sum(
+            r.finish_reason == FINISHED_REJECTED for r in reqs),
+        "host_syncs_per_tick":
+            st["tick_syncs"] / max(st["decode_ticks"], 1),
+        "blocks_leaked": eng.pool_stats()["blocks_in_use"],
+    }
+
+
 def bench_serving(tier: str):
     """Serving engine throughput on the smoke LM: fp32 and int8 paths."""
     from repro.configs import get_smoke_config
@@ -298,11 +355,21 @@ def bench_serving(tier: str):
           f"prefills_for_{nreq}_same_prefix_reqs="
           f"{prefix['prefill_forwards']};hit_rate="
           f"{prefix['prefix_hit_rate']:.2f}")
+    # serving under pressure (DESIGN.md §13): undersized pool + bounded
+    # queue; preemption must happen, every resumed stream must be
+    # bit-identical to its solo reference, overflow must bounce as typed
+    # rejections, and the tick stays at ONE host sync (CI-asserted).
+    chaos = _chaos_run(cfg, params)
+    print(f"serving_chaos,{chaos['preemptions']},"
+          f"stream_equal={chaos['preempted_stream_equal']};"
+          f"rejected={chaos['rejected_requests']};"
+          f"host_syncs_per_tick={chaos['host_syncs_per_tick']:.2f}")
     print(f"serving_total,{(time.time()-t0)*1e6:.0f},"
-          f"requests={4*nreq + 2*hi_slots + nreq}")
+          f"requests={4*nreq + 2*hi_slots + nreq + chaos['requests']}")
     return {"fp32": fp32, "fp32_ring": ring, "int8": int8,
             "mixed_sub_byte": mixed, "sampled_decode": sampled,
-            "paged_high_slots": high, "prefix_sharing": prefix}
+            "paged_high_slots": high, "prefix_sharing": prefix,
+            "chaos": chaos}
 
 
 # ---------------------------------------------------------------------------

@@ -41,7 +41,12 @@ class SupervisorConfig:
 
 
 class StragglerDetector:
-    """EWMA/MAD step-time anomaly detector."""
+    """EWMA/MAD step-time anomaly detector.
+
+    Shared across the training and serving failure models: the training
+    supervisor feeds it optimizer-step times, ``serving.faults.
+    ServingSupervisor`` feeds it engine-tick times (DESIGN.md §13) — one
+    detector, one definition of "anomalously slow"."""
 
     def __init__(self, window: int = 32, z: float = 4.0):
         self.times: list[float] = []

@@ -1,6 +1,6 @@
 """Serving: the request-lifecycle API over the CGMQ-quantized model.
 
-Public surface (DESIGN.md §8/§10/§11/§12):
+Public surface (DESIGN.md §8/§10/§11/§12/§13):
 
     from repro.serving import ServingEngine, SamplingParams
 
@@ -12,18 +12,32 @@ Public surface (DESIGN.md §8/§10/§11/§12):
 
 ``Request``/``submit``/``step`` remain public as the scheduler level the
 facade drives; ``kv_pool`` and ``sampling`` are the paged-KV and sampling
-substrates.
+substrates. The §13 failure model rides on top: ``AdmissionConfig`` bounds
+the queue / pool occupancy / deadlines, every ``GenerationResult`` ends in
+one of the ``FINISHED_*`` reasons, and ``ServingSupervisor`` +
+``FaultInjector`` give the serving loop the training supervisor's
+crash-restart-replay semantics.
 """
 
+from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
+                                     FINISHED_LENGTH, FINISHED_REJECTED,
+                                     FINISHED_STOP, TERMINAL_REASONS,
+                                     AdmissionConfig, WaitingQueue)
 from repro.serving.engine import (GenerationResult, Request, ServingEngine,
                                   TokenEvent, export_int_codes,
                                   export_int_model, make_mixed_quant_state,
                                   make_uniform_quant_state)
-from repro.serving.sampling import SamplingParams, mask_logits, sample_tokens
+from repro.serving.faults import (FaultInjector, InjectedFault,
+                                  ServingSupervisor)
+from repro.serving.sampling import (SamplingParams, finite_rows, mask_logits,
+                                    sample_tokens)
 
 __all__ = [
-    "GenerationResult", "Request", "SamplingParams", "ServingEngine",
-    "TokenEvent", "export_int_codes", "export_int_model",
+    "AdmissionConfig", "FINISHED_DEADLINE", "FINISHED_ERROR",
+    "FINISHED_LENGTH", "FINISHED_REJECTED", "FINISHED_STOP", "FaultInjector",
+    "GenerationResult", "InjectedFault", "Request", "SamplingParams",
+    "ServingEngine", "ServingSupervisor", "TERMINAL_REASONS", "TokenEvent",
+    "WaitingQueue", "export_int_codes", "export_int_model", "finite_rows",
     "make_mixed_quant_state", "make_uniform_quant_state", "mask_logits",
     "sample_tokens",
 ]

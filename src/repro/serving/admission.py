@@ -1,0 +1,189 @@
+"""Bounded admission: queue policy, watermarks, deadlines, finish reasons.
+
+The admission half of the serving failure model (DESIGN.md §13). PRs 1-5
+built an engine that assumes an infinitely patient client and a pool that
+never runs dry: ``submit`` always enqueues, the queue is unbounded, and a
+request runs until it stops or exhausts ``max_new``. Under real load every
+one of those assumptions breaks, and this module is where the breakage is
+turned into *policy* instead of undefined behavior:
+
+  * **Finish-reason taxonomy** — every ``GenerationResult`` ends in exactly
+    one of the ``FINISHED_*`` reasons below. Overload is never an exception
+    escaping a tick; it is a typed terminal state (``rejected`` /
+    ``deadline`` / ``error``) or backpressure at ``submit()``.
+  * **``AdmissionConfig``** — the knobs: queue capacity + on-full policy
+    (``reject`` / ``block`` / ``evict_lru_prefix``), a pool-occupancy
+    watermark that refuses to *start* a prefill when projected occupancy
+    crosses the reserve threshold, and default TTFT / wall deadlines.
+  * **``WaitingQueue``** — FIFO with deadline priority: the pop order is
+    (earliest deadline, submission order). Requests without deadlines are
+    served strictly FIFO among themselves, so a stream of long prompts can
+    never starve an earlier arrival (the pre-§13 engine relied on implicit
+    wave ordering); a preempted request keeps its original submission
+    sequence number, so re-admission naturally jumps ahead of newer work.
+
+The watermark math is host-side arithmetic over per-request worst cases
+(``ceil((plen + max_new - 1) / block_size)`` blocks), so admission control
+costs zero device syncs; the §8/§12 one-host-sync-per-tick ledger is
+untouched by any policy in this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# ---------------------------------------------------------------------------
+# Finish-reason taxonomy (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+#: Emitted a stop token (the stop token itself is the final token).
+FINISHED_STOP = "stop"
+#: Exhausted the request's ``max_new`` budget.
+FINISHED_LENGTH = "length"
+#: Refused at ``submit()`` by the queue-capacity policy; zero tokens ran.
+FINISHED_REJECTED = "rejected"
+#: TTFT budget expired while waiting, or the wall deadline expired while
+#: running; partial output (possibly empty) is kept.
+FINISHED_DEADLINE = "deadline"
+#: The request's logits went non-finite (NaN/Inf) — the request fails alone,
+#: the rest of the batch keeps serving.
+FINISHED_ERROR = "error"
+
+#: Every reason a ``GenerationResult`` can terminate with. Preemption is NOT
+#: here on purpose: a preempted request is re-queued and resumed, it never
+#: finishes with a "preempted" state.
+TERMINAL_REASONS = frozenset({FINISHED_STOP, FINISHED_LENGTH,
+                              FINISHED_REJECTED, FINISHED_DEADLINE,
+                              FINISHED_ERROR})
+
+ON_FULL_POLICIES = ("reject", "block", "evict_lru_prefix")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Backpressure policy for one ``ServingEngine`` (DESIGN.md §13).
+
+    ``queue_capacity``: max requests allowed to wait (``None`` = unbounded,
+    the pre-§13 behavior). ``on_full`` picks what ``submit()`` does at
+    capacity:
+
+      * ``"reject"`` — finish the request immediately with
+        ``FINISHED_REJECTED`` (zero device work);
+      * ``"block"`` — drive engine ticks inline until a queue slot frees
+        (bounded by ``block_max_ticks``, then reject): synchronous
+        backpressure for single-threaded callers;
+      * ``"evict_lru_prefix"`` — first release every retained prefix-cache
+        block (freeing pool headroom so the queue can drain faster), then
+        behave like ``"block"``.
+
+    ``watermark``: fraction of the usable pool (blocks minus the garbage
+    block, retained LRU blocks and ``reserve_blocks``) that projected
+    occupancy may reach before admission pauses; ``None`` disables the
+    check. Projection is the worst case — every running request grown to
+    ``plen + max_new - 1`` tokens — so ``watermark=1.0`` guarantees the
+    in-tick allocator can never run dry (prefix-shared blocks are counted
+    once per sharer, i.e. conservatively). Admission is head-of-line: a
+    refused request blocks later (possibly smaller) ones, which is exactly
+    what makes starvation impossible.
+
+    ``ttft_deadline_s`` / ``deadline_s``: default per-request budgets
+    (submit → first token, and submit → completion); a request's own
+    ``Request.ttft_deadline_s`` / ``Request.deadline_s`` override them.
+    ``None`` disables the respective check.
+    """
+
+    queue_capacity: int | None = None
+    on_full: str = "reject"
+    watermark: float | None = None
+    reserve_blocks: int = 0
+    ttft_deadline_s: float | None = None
+    deadline_s: float | None = None
+    block_max_ticks: int = 10_000
+
+    def __post_init__(self):
+        if self.queue_capacity is not None and self.queue_capacity < 1:
+            raise ValueError(
+                f"queue_capacity must be >= 1 or None: {self.queue_capacity}")
+        if self.on_full not in ON_FULL_POLICIES:
+            raise ValueError(f"on_full must be one of {ON_FULL_POLICIES}: "
+                             f"{self.on_full!r}")
+        if self.watermark is not None and not 0.0 < self.watermark <= 1.0:
+            raise ValueError(f"watermark must be in (0, 1]: {self.watermark}")
+        if self.reserve_blocks < 0:
+            raise ValueError(
+                f"reserve_blocks must be >= 0: {self.reserve_blocks}")
+        for name in ("ttft_deadline_s", "deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be > 0 or None: {v}")
+        if self.block_max_ticks < 1:
+            raise ValueError(
+                f"block_max_ticks must be >= 1: {self.block_max_ticks}")
+
+
+def projected_blocks(plen: int, max_new: int, block_size: int,
+                     max_blocks: int) -> int:
+    """Worst-case pool blocks one request can ever hold: KV is written for
+    the prompt plus every generated token except the last emitted one (the
+    final token is never decoded), capped at the table width."""
+    return min(math.ceil(max(plen + max_new - 1, 1) / block_size), max_blocks)
+
+
+class WaitingQueue:
+    """FIFO with deadline priority (DESIGN.md §13).
+
+    Pop order is ``(effective deadline, submission sequence)`` — requests
+    carrying a TTFT or wall deadline sort by whichever expires first, and
+    ties (including the no-deadline common case, where the key is ``inf``)
+    fall back to strict submission order. That makes the no-deadline queue
+    exactly FIFO, so admission order is a total order over arrivals and a
+    stream of long prompts cannot starve an earlier request.
+
+    Iteration yields requests in pop order (tests and callers see the queue
+    the way the scheduler will drain it); ``len``/truthiness match the old
+    plain-list surface the engine exposed.
+    """
+
+    def __init__(self):
+        self._items: list = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def __iter__(self):
+        return iter(sorted(self._items, key=self._key))
+
+    @staticmethod
+    def _key(req):
+        return (getattr(req, "deadline_key", math.inf),
+                getattr(req, "seq", 0))
+
+    def push(self, req) -> None:
+        self._items.append(req)
+
+    def peek(self):
+        """The request the scheduler would admit next (None when empty)."""
+        if not self._items:
+            return None
+        return min(self._items, key=self._key)
+
+    def pop(self):
+        """Remove and return the highest-priority request."""
+        req = self.peek()
+        if req is not None:
+            self._items.remove(req)
+        return req
+
+    def remove(self, req) -> None:
+        self._items.remove(req)
+
+    def expired(self, now: float):
+        """Waiting requests whose TTFT or wall budget has passed at ``now``
+        (they have produced no first token yet, so either budget expiring
+        ends them)."""
+        return [r for r in self._items
+                if getattr(r, "deadline_key", math.inf) <= now]

@@ -46,6 +46,7 @@ import collections
 import dataclasses
 import hashlib
 import itertools
+import math
 import time
 from typing import Any, Callable, Iterator, Sequence
 
@@ -59,7 +60,12 @@ from repro.models import transformer as tfm
 from repro.quant import (QuantizedTensor, QuantSpec, export_sites,
                          quant_report, specs_from_state)
 from repro.serving import kv_pool
-from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
+                                     FINISHED_LENGTH, FINISHED_REJECTED,
+                                     FINISHED_STOP, AdmissionConfig,
+                                     WaitingQueue, projected_blocks)
+from repro.serving.sampling import (SamplingParams, finite_rows,
+                                    sample_tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +198,15 @@ class Request:
     as a construction convenience (the pre-§12 call signature) and is folded
     into a default-greedy ``params`` when none is given — after
     construction ``req.max_new`` always mirrors ``req.params.max_new``.
+
+    The §13 failure-model fields: ``ttft_deadline_s`` / ``deadline_s`` are
+    per-request budgets (seconds from submit to first token / to
+    completion) overriding the engine ``AdmissionConfig`` defaults;
+    ``seed_used`` pins the sampling seed actually drawn at first admission,
+    so a preempted request resumes its exact key chain (a seedless request
+    must NOT redraw on re-admission); ``preemptions`` counts evictions;
+    ``seq`` is the submission sequence number (preemption keeps it, so
+    re-admission sorts ahead of newer arrivals).
     """
 
     rid: int
@@ -203,12 +218,30 @@ class Request:
     # in the engine's prefix map (for eviction at retirement)
     prefix_keys: list = dataclasses.field(default_factory=list)
     params: SamplingParams | None = None
-    finish_reason: str | None = None    # "stop" | "length" once done
+    finish_reason: str | None = None    # a FINISHED_* reason once done
+    ttft_deadline_s: float | None = None
+    deadline_s: float | None = None
+    seed_used: int | None = None
+    preemptions: int = 0
+    seq: int | None = None
+    submit_s: float = 0.0
+    ttft_by: float = math.inf       # absolute expiry times, resolved at
+    deadline_by: float = math.inf   # submit() against the engine clock
 
     def __post_init__(self):
         if self.params is None:
             self.params = SamplingParams(max_new=self.max_new)
         self.max_new = self.params.max_new
+
+    @property
+    def deadline_key(self):
+        """The expiry that matters while this request WAITS: a fresh request
+        dies when either budget passes (no first token yet); a preempted
+        one already met its TTFT, so only the wall deadline applies. Also
+        the queue's priority key (earliest-expiring first)."""
+        if self.output:
+            return self.deadline_by
+        return min(self.ttft_by, self.deadline_by)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,7 +321,10 @@ class ServingEngine:
                  matmul_impl: str | None = None, kv_layout: str = "auto",
                  block_size: int = 8, num_blocks: int | None = None,
                  prefix_sharing: bool = True, prefix_lru_blocks: int = 0,
-                 max_stop: int = 4):
+                 max_stop: int = 4,
+                 admission: AdmissionConfig | None = None,
+                 preemption: bool | str = "auto",
+                 clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -322,6 +358,7 @@ class ServingEngine:
             self.paged and prefix_sharing
             and all(k in ("global", "local") for k in kinds))
         self.lru_capacity = prefix_lru_blocks if self.prefix_sharing else 0
+        assert preemption in ("auto", True, False), preemption
         if self.paged:
             self.block_size = block_size
             self.max_blocks = -(-max_seq // block_size)
@@ -329,21 +366,42 @@ class ServingEngine:
             # worst-case slot reservation, so the in-tick allocator can
             # never be starved by the cache (DESIGN.md §10).
             min_blocks = slots * self.max_blocks + 1 + self.lru_capacity
-            if num_blocks is not None and num_blocks < min_blocks:
-                # the in-tick allocator has no error path: an exhausted free
+            # An undersized pool is legal WITH preemption (§13): the pool
+            # only has to back one slot at max_seq, so a preempted request
+            # can always be replayed once the others drain. Below that
+            # floor not even a lone request fits and no policy can help.
+            floor_blocks = self.max_blocks + 1 + self.lru_capacity
+            if num_blocks is not None and num_blocks < floor_blocks:
+                raise ValueError(
+                    f"num_blocks={num_blocks} can't back even one slot at "
+                    f"max_seq={max_seq} with {self.lru_capacity} retained "
+                    f"prefix blocks (need >= {floor_blocks})")
+            undersized = num_blocks is not None and num_blocks < min_blocks
+            self.preemption = undersized if preemption == "auto" \
+                else bool(preemption)
+            if undersized and not self.preemption:
+                # without the in-tick preemption branch an exhausted free
                 # stack would silently alias a live block into two slots
                 raise ValueError(
                     f"num_blocks={num_blocks} can't back {slots} slots at "
                     f"max_seq={max_seq} with {self.lru_capacity} retained "
-                    f"prefix blocks (need >= {min_blocks})")
+                    f"prefix blocks (need >= {min_blocks}); pass "
+                    f"preemption=True (or leave it 'auto') to oversubscribe "
+                    f"the pool with victim preemption")
             self.num_blocks = num_blocks or min_blocks
             self.cache = tfm.init_paged_cache(cfg, slots, self.num_blocks,
                                               block_size)
             self.alloc = kv_pool.init_alloc(self.num_blocks, slots,
                                             self.max_blocks)
         else:
+            # nothing to page: every slot owns its contiguous rows, so the
+            # in-tick exhaustion path can't exist; host-side ``preempt()``
+            # still works (deadlines / fault injection).
+            self.preemption = False
             self.cache = tfm.init_cache(cfg, slots, max_seq)
             self.alloc = None
+        self.admission = admission
+        self._clock = clock
         # host side of the prefix cache: chain-hash of full-block prompt
         # content -> physical block id, plus live-request counts per key
         self._prefix_map: dict[Any, int] = {}
@@ -359,6 +417,10 @@ class ServingEngine:
         # form of each slot's SamplingParams (DESIGN.md §12), written once
         # at admission so the tick samples without any host traffic.
         self.max_stop = max_stop
+        # gen / stamp feed the §13 preemption victim policy (fewest
+        # generated tokens, oldest admission stamp on ties); bomb is the
+        # fault-injection seam — a per-slot additive logit perturbation,
+        # cleared whenever the slot is (re-)armed.
         self.state = {
             "last_tok": jnp.zeros((slots,), jnp.int32),
             "active": jnp.zeros((slots,), bool),
@@ -368,9 +430,12 @@ class ServingEngine:
             "top_k": jnp.zeros((slots,), jnp.int32),
             "top_p": jnp.ones((slots,), jnp.float32),
             "stop": jnp.full((slots, max_stop), -1, jnp.int32),
+            "gen": jnp.zeros((slots,), jnp.int32),
+            "stamp": jnp.zeros((slots,), jnp.int32),
+            "bomb": jnp.zeros((slots,), jnp.float32),
         }
         self.slot_req: list[Request | None] = [None] * slots
-        self.waiting: list[Request] = []
+        self.waiting = WaitingQueue()
         self.finished: list[Request] = []
         # seed stream for requests that don't pin one (deterministic per
         # engine instance, not across processes) + facade request ids
@@ -378,6 +443,9 @@ class ServingEngine:
         # facade rids start high so they can't collide with hand-numbered
         # Requests submitted alongside a generate() batch
         self._auto_rid = itertools.count(1 << 20)
+        self._seq_counter = itertools.count()       # submission order
+        self._stamp_counter = itertools.count(1)    # admission order
+        self._stolen: list = []                     # fault-injected steals
         # Perf accounting (consumed by benchmarks/run.py --json):
         #   prefill_forwards       batched prompt forwards actually run
         #   seed_equiv_forwards    decode_step forwards the seed's
@@ -393,12 +461,20 @@ class ServingEngine:
         #                          one-sync-per-tick contract is a tested
         #                          number, not a comment (pool_stats() is
         #                          benchmarking-only and ledgered separately)
+        #   preemptions / resumed_admissions / rejected_requests /
+        #     deadline_expired / nan_failures   the §13 failure-model
+        #                          counters: victim evictions, replays after
+        #                          eviction, submit-time rejections, deadline
+        #                          expiries, non-finite-logit failures
         self.stats = {"prefill_forwards": 0, "tail_forwards": 0,
                       "teacher_steps": 0,
                       "prompt_tokens": 0, "seed_equiv_forwards": 0,
                       "decode_ticks": 0, "generated_tokens": 0,
                       "prefix_hit_blocks": 0, "prompt_blocks": 0,
                       "shared_admissions": 0, "cow_copies": 0,
+                      "preemptions": 0, "resumed_admissions": 0,
+                      "rejected_requests": 0, "deadline_expired": 0,
+                      "nan_failures": 0,
                       "tick_syncs": 0, "admit_syncs": 0, "stat_syncs": 0,
                       "prefill_time_s": 0.0, "decode_time_s": 0.0}
 
@@ -418,6 +494,7 @@ class ServingEngine:
             )
 
         paged = self.paged
+        preemption = self.preemption
 
         @jax.jit
         def _tick(params, qweights, cache, state, alloc):
@@ -427,37 +504,53 @@ class ServingEngine:
             key chain; zero-temperature rows take the bit-exact argmax), the
             per-slot position bump (via ``advance``), stop-token detection,
             the done-flag updates — and, in the paged layout, the free-list
-            pop for rows entering an unallocated block — all happen on
-            device; the caller fetches (next_tokens, emitted, done) in a
-            single host transfer, exactly as in the ring layout.
+            pop for rows entering an unallocated block, preceded on an
+            oversubscribed pool by §13 victim preemption — all happen on
+            device. The non-finite-logit guard runs here too: rows whose
+            logits went NaN/Inf (model blow-up or an injected ``bomb``) are
+            not emitted and deactivate in place. The caller fetches
+            (next_tokens, emitted, done, preempted, bad) in a single host
+            transfer — the failure masks ride the same sync the stats
+            ledger already pays for, so the §8 contract holds under faults.
             """
             table = None
+            live = state["active"]
+            pre = jnp.zeros_like(live)
             if paged:
-                alloc = kv_pool.tick_alloc(alloc, cache["pos"],
-                                           state["active"], block_size)
+                if preemption:
+                    alloc, pre = kv_pool.preempt_for_free(
+                        alloc, cache["pos"], live, state["gen"],
+                        state["stamp"], block_size)
+                    live = live & ~pre
+                alloc = kv_pool.tick_alloc(alloc, cache["pos"], live,
+                                           block_size)
                 table = alloc["table"]
             logits, cache = tfm.decode_step(
                 _qc(qweights), params, cache, state["last_tok"], cfg,
-                plan=plan, advance=state["active"], block_table=table)
+                plan=plan, advance=live, block_table=table)
             pair = jax.vmap(jax.random.split)(state["key"])
+            rows = logits[:, 0, : cfg.vocab_size] + state["bomb"][:, None]
+            ok = finite_rows(rows)
+            emitted = live & ok
+            bad = live & ~ok
             # gate idle rows' (stale) temperature to 0 so a retired sampled
             # request can't defeat the all-greedy lax.cond fast path
-            temp = jnp.where(state["active"], state["temp"], 0.0)
-            nxt = sample_tokens(logits[:, 0, : cfg.vocab_size],
-                                pair[:, 1], temp, state["top_k"],
+            temp = jnp.where(emitted, state["temp"], 0.0)
+            nxt = sample_tokens(rows, pair[:, 1], temp, state["top_k"],
                                 state["top_p"])
-            emitted = state["active"]
             nxt = jnp.where(emitted, nxt, state["last_tok"])
             # keys advance only on emission, so a request's position in its
             # key chain equals its emitted-token count — slot placement,
-            # admission order and KV layout can't perturb the stream
+            # admission order, KV layout and preemption can't perturb the
+            # stream
             key = jnp.where(emitted[:, None], pair[:, 0], state["key"])
             hit_stop = (nxt[:, None] == state["stop"]).any(axis=-1)
             remaining = state["remaining"] - emitted.astype(jnp.int32)
             done_now = emitted & ((remaining <= 0) | hit_stop)
             state = {**state, "last_tok": nxt, "active": emitted & ~done_now,
-                     "remaining": remaining, "key": key}
-            return cache, state, alloc, nxt, emitted, done_now
+                     "remaining": remaining, "key": key,
+                     "gen": state["gen"] + emitted.astype(jnp.int32)}
+            return cache, state, alloc, nxt, emitted, done_now, pre, bad
 
         self._tick = _tick
 
@@ -513,29 +606,77 @@ class ServingEngine:
 
         @jax.jit
         def _arm(state, slot, logits_row, temp, top_k, top_p, key, stop_row,
-                 max_new):
+                 max_new, stamp):
             """Arm a slot for generation: lower the request's SamplingParams
             into the slot's state rows and sample its FIRST token from the
             admission logits — the one sampling seam shared by every
             admission path (batched prefill, SSM tail, teacher-forced
             prefix replay). All operands are traced, so admissions with
-            different params never recompile."""
+            different params never recompile. ``ok`` (returned alongside the
+            first token, fetched in the same batched admission sync) is the
+            §13 non-finite guard on the admission logits: a False row arms
+            INACTIVE so retirement can free it without a device round-trip.
+            """
             pair = jax.random.split(key)
+            ok = jnp.isfinite(logits_row).all()
             first = sample_tokens(logits_row[None], pair[1][None],
                                   temp[None], top_k[None], top_p[None])[0]
             remaining = jnp.asarray(max_new, jnp.int32) - 1
             return {
                 "last_tok": state["last_tok"].at[slot].set(first),
-                "active": state["active"].at[slot].set(remaining > 0),
+                "active": state["active"].at[slot].set(ok & (remaining > 0)),
                 "remaining": state["remaining"].at[slot].set(remaining),
                 "key": state["key"].at[slot].set(pair[0]),
                 "temp": state["temp"].at[slot].set(temp),
                 "top_k": state["top_k"].at[slot].set(top_k),
                 "top_p": state["top_p"].at[slot].set(top_p),
                 "stop": state["stop"].at[slot].set(stop_row),
-            }, first
+                "gen": state["gen"].at[slot].set(1),
+                "stamp": state["stamp"].at[slot].set(stamp),
+                "bomb": state["bomb"].at[slot].set(0.0),
+            }, first, ok
 
         self._arm = _arm
+
+        @jax.jit
+        def _rearm(state, slot, last_tok, temp, top_k, top_p, key, stop_row,
+                   remaining, gen, stamp):
+            """Re-arm a preempted request's slot after its replay (§13): no
+            sampling — the resumed stream continues the original key chain
+            from ``key`` (recomputed by ``_replay_key``) with ``last_tok``
+            = the last token emitted before eviction, so the next tick
+            produces exactly the token the unpreempted run would have."""
+            return {
+                "last_tok": state["last_tok"].at[slot].set(last_tok),
+                "active": state["active"].at[slot].set(remaining > 0),
+                "remaining": state["remaining"].at[slot].set(remaining),
+                "key": state["key"].at[slot].set(key),
+                "temp": state["temp"].at[slot].set(temp),
+                "top_k": state["top_k"].at[slot].set(top_k),
+                "top_p": state["top_p"].at[slot].set(top_p),
+                "stop": state["stop"].at[slot].set(stop_row),
+                "gen": state["gen"].at[slot].set(gen),
+                "stamp": state["stamp"].at[slot].set(stamp),
+                "bomb": state["bomb"].at[slot].set(0.0),
+            }
+
+        self._rearm = _rearm
+
+        @jax.jit
+        def _replay_key(seed, k):
+            """The slot key after ``k`` emitted tokens of a request seeded
+            with ``seed``: arming splits once and each emission advances
+            ``key -> split(key)[0]`` — ``k`` is traced, so resumes at any
+            depth share one compilation."""
+            key = jax.random.PRNGKey(seed)
+            return jax.lax.fori_loop(
+                0, k, lambda _, kk: jax.random.split(kk)[0], key)
+
+        self._replay_key = _replay_key
+
+        self._set_bomb = jax.jit(
+            lambda state, slot, v:
+            {**state, "bomb": state["bomb"].at[slot].set(v)})
 
         @jax.jit
         def _deactivate(state, slot):
@@ -555,6 +696,8 @@ class ServingEngine:
             self._free_slot_op = jax.jit(kv_pool.free_slot)
             self._retain_block = jax.jit(kv_pool.retain_block)
             self._release_block = jax.jit(kv_pool.release_block)
+            self._steal = jax.jit(kv_pool.steal_blocks)
+            self._unsteal = jax.jit(kv_pool.unsteal_blocks)
             self._set_pos = jax.jit(
                 lambda cache, slot, p:
                 {**cache, "pos": cache["pos"].at[slot].set(p)})
@@ -593,12 +736,77 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_seq), 0
 
-    def submit(self, req: Request):
+    def _validate_request(self, req: Request):
+        """Uniform ValueError at the API boundary (§13): malformed requests
+        used to surface as shape errors or silent garbage deep in prefill.
+        ``max_new <= 0`` is already rejected by ``SamplingParams`` at
+        construction — the remaining holes are all prompt-shaped."""
         if len(req.params.stop) > self.max_stop:
             raise ValueError(
                 f"request {req.rid} has {len(req.params.stop)} stop tokens; "
                 f"engine holds {self.max_stop} per slot (max_stop=...)")
-        self.waiting.append(req)
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(
+                f"request {req.rid}: prompt must be a non-empty 1-D token "
+                f"sequence (got shape {prompt.shape})")
+        if prompt.size > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt length {prompt.size} exceeds "
+                f"max_seq={self.max_seq}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            ids = prompt.astype(np.int64, casting="unsafe")
+            if not np.array_equal(ids, prompt):
+                raise ValueError(
+                    f"request {req.rid}: prompt must hold integer token ids "
+                    f"(got dtype {prompt.dtype})")
+        vocab = self.cfg.vocab_size
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= vocab:
+            raise ValueError(
+                f"request {req.rid}: prompt token ids outside [0, {vocab}) "
+                f"(min {lo}, max {hi})")
+
+    def _reject(self, req: Request) -> Request:
+        req.finish_reason = FINISHED_REJECTED
+        req.done = True
+        self.finished.append(req)
+        self.stats["rejected_requests"] += 1
+        return req
+
+    def submit(self, req: Request) -> Request:
+        """Enqueue one validated request. Under an ``AdmissionConfig`` with
+        a full queue this is where backpressure lives (§13): ``reject``
+        finishes the request immediately with ``FINISHED_REJECTED``,
+        ``block`` drives engine ticks inline until a queue slot frees
+        (``evict_lru_prefix`` first drops retained prefix blocks to help
+        the pool drain). Returns the request (possibly already done)."""
+        self._validate_request(req)
+        req.prompt = np.asarray(req.prompt, np.int32)
+        ad = self.admission
+        if ad is not None and ad.queue_capacity is not None \
+                and len(self.waiting) >= ad.queue_capacity:
+            if ad.on_full == "evict_lru_prefix":
+                self._drop_retained()
+            if ad.on_full in ("block", "evict_lru_prefix"):
+                for _ in range(ad.block_max_ticks):
+                    if len(self.waiting) < ad.queue_capacity:
+                        break
+                    self.step()
+            if len(self.waiting) >= ad.queue_capacity:
+                return self._reject(req)
+        if req.seq is None:
+            req.seq = next(self._seq_counter)
+        now = self._clock()
+        req.submit_s = now
+        ttft = req.ttft_deadline_s if req.ttft_deadline_s is not None \
+            else (ad.ttft_deadline_s if ad else None)
+        wall = req.deadline_s if req.deadline_s is not None \
+            else (ad.deadline_s if ad else None)
+        req.ttft_by = now + ttft if ttft is not None else math.inf
+        req.deadline_by = now + wall if wall is not None else math.inf
+        self.waiting.push(req)
+        return req
 
     def _sync(self, tree, kind: str):
         """Host transfer + ledger entry: every ``device_get`` on the serving
@@ -608,17 +816,22 @@ class ServingEngine:
         self.stats[kind + "_syncs"] += 1
         return jax.device_get(tree)
 
-    def _param_rows(self, p: SamplingParams):
+    def _param_rows(self, req: Request):
         """Lower a request's SamplingParams to the traced operands ``_arm``
-        writes into the slot's device state rows."""
-        seed = p.seed if p.seed is not None \
-            else int(self._seed_rng.integers(2**31 - 1))
+        writes into the slot's device state rows. The effective seed is
+        PINNED on the request at first admission (``seed_used``): a
+        seedless request that gets preempted must resume the same key
+        chain, not redraw (§13)."""
+        p = req.params
+        if req.seed_used is None:
+            req.seed_used = p.seed if p.seed is not None \
+                else int(self._seed_rng.integers(2**31 - 1))
         stop = np.full((self.max_stop,), -1, np.int32)
         stop[: len(p.stop)] = p.stop
         return (jnp.asarray(p.temperature, jnp.float32),
                 jnp.asarray(p.top_k, jnp.int32),
                 jnp.asarray(p.top_p, jnp.float32),
-                jax.random.PRNGKey(seed),
+                jax.random.PRNGKey(req.seed_used),
                 jnp.asarray(stop),
                 p.max_new)
 
@@ -789,50 +1002,210 @@ class ServingEngine:
             self.alloc = self._release_block(self.alloc,
                                              jnp.asarray(blk, jnp.int32))
 
+    def _drop_prefix_refs(self, req: Request):
+        """Release the host side of a request's hold on its prefix keys
+        (shared by retirement and preemption)."""
+        for key in req.prefix_keys:
+            self._key_refs[key] -= 1
+            if self._key_refs[key] == 0:
+                del self._key_refs[key]
+                if key not in self._cache_held:
+                    self._prefix_map.pop(key, None)
+        self._touch_lru(req.prefix_keys)
+
+    def _drop_retained(self):
+        """Evict the entire retained-prefix LRU (the ``evict_lru_prefix``
+        on-full policy): every cache-only block goes back on the free
+        stack, trading prefix hits for pool headroom."""
+        while self._lru:
+            key, blk = self._lru.popitem(last=False)
+            self._cache_held.discard(key)
+            self._prefix_map.pop(key, None)
+            self.alloc = self._release_block(self.alloc,
+                                             jnp.asarray(blk, jnp.int32))
+
     def _retire(self, s: int, req: Request):
         req.done = True
         self.finished.append(req)
         self.slot_req[s] = None
         if self.paged:
             self.alloc = self._free_slot_op(self.alloc, s)
-            for key in req.prefix_keys:
-                self._key_refs[key] -= 1
-                if self._key_refs[key] == 0:
-                    del self._key_refs[key]
-                    if key not in self._cache_held:
-                        self._prefix_map.pop(key, None)
-            self._touch_lru(req.prefix_keys)
+            self._drop_prefix_refs(req)
+
+    def _requeue_slot(self, s: int, *, blocks_freed: bool):
+        """Host side of a preemption (§13): detach the victim request from
+        its slot and put it back on the waiting queue with its original
+        submission seq (so re-admission sorts ahead of newer arrivals).
+        ``blocks_freed`` says whether the device already freed the slot's
+        blocks (the in-tick path did; host-side ``preempt()`` hasn't).
+        Returns a terminal TokenEvent if resuming is impossible."""
+        req = self.slot_req[s]
+        self.slot_req[s] = None
+        if self.paged:
+            if not blocks_freed:
+                self.alloc = self._free_slot_op(self.alloc, s)
+            self._drop_prefix_refs(req)
+            req.prefix_keys = []
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        # resume replays prompt + output[:-1] into one slot, so it must fit
+        # a slot's cache; a request oversubscribed past max_seq can't be
+        # replayed (the unpreempted run would have overrun its row too)
+        if len(req.prompt) + len(req.output) - 1 > self.max_seq:
+            req.finish_reason = FINISHED_ERROR
+            req.done = True
+            self.finished.append(req)
+            return TokenEvent(rid=req.rid, token=-1, index=len(req.output),
+                              done=True, finish_reason=FINISHED_ERROR)
+        self.waiting.push(req)
+        return None
+
+    def preempt(self, slot: int):
+        """Forcibly preempt one running slot from the host (both KV
+        layouts): deadline policy and the fault injector use this; the
+        in-tick exhaustion path never does (it frees blocks on device
+        inside the tick). The request re-queues and resumes normally."""
+        if self.slot_req[slot] is None:
+            return None
+        self.state = self._deactivate(self.state, slot)
+        return self._requeue_slot(slot, blocks_freed=False)
+
+    def _expire_deadlines(self) -> list:
+        """Expire waiting requests past their TTFT/wall budget and running
+        requests past their wall deadline (§13). Host-side bookkeeping
+        only — no device sync; an expiry surfaces as a terminal
+        ``TokenEvent`` with the ``-1`` sentinel token."""
+        now = self._clock()
+        events = []
+        for req in self.waiting.expired(now):
+            self.waiting.remove(req)
+            req.finish_reason = FINISHED_DEADLINE
+            req.done = True
+            self.finished.append(req)
+            self.stats["deadline_expired"] += 1
+            events.append(TokenEvent(rid=req.rid, token=-1,
+                                     index=len(req.output), done=True,
+                                     finish_reason=FINISHED_DEADLINE))
+        for s, req in enumerate(self.slot_req):
+            if req is None or req.deadline_by > now:
+                continue
+            self.state = self._deactivate(self.state, s)
+            req.finish_reason = FINISHED_DEADLINE
+            self._retire(s, req)
+            self.stats["deadline_expired"] += 1
+            events.append(TokenEvent(rid=req.rid, token=-1,
+                                     index=len(req.output), done=True,
+                                     finish_reason=FINISHED_DEADLINE))
+        return events
+
+    def _can_start(self, req: Request) -> bool:
+        """Watermark + free-stack gate on starting a prefill (§13).
+
+        The watermark is pure host arithmetic over worst-case projections.
+        On an oversubscribed (preemption-enabled) pool there is a second,
+        exact check: the admission-time fills (``alloc_range`` / CoW) have
+        no in-tick preemption to save them, so the replay's immediate block
+        demand must fit the actual free stack — that read is a small
+        admission-time sync, ledgered under ``admit_syncs``, and only ever
+        paid by engines that chose to oversubscribe."""
+        if not self.paged:
+            return True
+        ad = self.admission
+        nblk = -(-(len(req.prompt) + max(len(req.output) - 1, 0))
+                 // self.block_size)
+        if ad is not None and ad.watermark is not None:
+            usable = (self.num_blocks - 1 - len(self._lru)
+                      - ad.reserve_blocks)
+            committed = sum(
+                projected_blocks(len(r.prompt), r.max_new, self.block_size,
+                                 self.max_blocks)
+                for r in self.slot_req if r is not None)
+            mine = projected_blocks(len(req.prompt), req.max_new,
+                                    self.block_size, self.max_blocks)
+            if committed + mine > ad.watermark * usable:
+                return False
+        if self.preemption:
+            n_free = int(self._sync(self.alloc["n_free"], "admit"))
+            if nblk > n_free:
+                return False
+        return True
 
     def _admit(self):
         t0 = time.perf_counter()
         admitted = []
+        resumed = 0
         for s in range(self.slots):
-            if self.slot_req[s] is None and self.waiting:
-                req = self.waiting.pop(0)
-                plen = len(req.prompt)
-                assert 1 <= plen <= self.max_seq, (plen, self.max_seq)
-                self.slot_req[s] = req
-                prompt = np.asarray(req.prompt, np.int32)
+            if self.slot_req[s] is not None:
+                continue
+            req = self.waiting.peek()
+            if req is None:
+                break
+            if not self._can_start(req):
+                # head-of-line hold: later (possibly smaller) requests do
+                # NOT jump the queue — that's the no-starvation guarantee
+                break
+            self.waiting.pop()
+            self.slot_req[s] = req
+            prompt = np.asarray(req.prompt, np.int32)
+            rows = self._param_rows(req)
+            if req.output:
+                # resume after preemption: replay prompt + generated tokens
+                # through the ordinary admission path (prefix sharing and
+                # all), then restore the sampling state — NO new sample
+                replay = np.concatenate(
+                    [prompt, np.asarray(req.output[:-1], np.int32)]) \
+                    if len(req.output) > 1 else prompt
+                if self.paged:
+                    self._admit_paged(s, req, replay)
+                else:
+                    self._admit_ring(s, req, replay)
+                k = len(req.output)
+                self.state = self._rearm(
+                    self.state, s, jnp.asarray(req.output[-1], jnp.int32),
+                    rows[0], rows[1], rows[2],
+                    self._replay_key(jnp.asarray(req.seed_used, jnp.uint32),
+                                     jnp.asarray(k, jnp.int32)),
+                    rows[4], jnp.asarray(req.max_new - k, jnp.int32),
+                    jnp.asarray(k, jnp.int32),
+                    jnp.asarray(next(self._stamp_counter), jnp.int32))
+                self.stats["resumed_admissions"] += 1
+                resumed += 1
+                self.stats["prompt_tokens"] += len(replay)
+                self.stats["seed_equiv_forwards"] += len(replay)
+            else:
                 if self.paged:
                     row = self._admit_paged(s, req, prompt)
                 else:
                     row = self._admit_ring(s, req, prompt)
-                self.state, first = self._arm(
-                    self.state, s, row, *self._param_rows(req.params))
-                self.stats["prompt_tokens"] += plen
-                self.stats["seed_equiv_forwards"] += plen
-                admitted.append((s, req, first))
+                self.state, first, ok = self._arm(
+                    self.state, s, row, *rows,
+                    jnp.asarray(next(self._stamp_counter), jnp.int32))
+                self.stats["prompt_tokens"] += len(prompt)
+                self.stats["seed_equiv_forwards"] += len(prompt)
+                admitted.append((s, req, first, ok))
         events = []
         # ONE host transfer for the whole admission wave's first tokens
-        firsts = self._sync([f for _, _, f in admitted], "admit") \
+        # (the §13 non-finite flags ride in the same transfer)
+        firsts = self._sync([(f, o) for _, _, f, o in admitted], "admit") \
             if admitted else []
-        for (s, req, _), first in zip(admitted, firsts):
+        for (s, req, _, _), (first, ok) in zip(admitted, firsts):
+            if not bool(ok):
+                # admission logits went non-finite: the row armed inactive,
+                # so retirement just frees it; nothing was emitted
+                req.finish_reason = FINISHED_ERROR
+                self.stats["nan_failures"] += 1
+                self._retire(s, req)
+                events.append(TokenEvent(rid=req.rid, token=-1, index=0,
+                                         done=True,
+                                         finish_reason=FINISHED_ERROR))
+                continue
             tok = int(first)
             req.output.append(tok)
             self.stats["generated_tokens"] += 1
             stopped = tok in req.params.stop
             if stopped or req.max_new <= 1:
-                req.finish_reason = "stop" if stopped else "length"
+                req.finish_reason = FINISHED_STOP if stopped \
+                    else FINISHED_LENGTH
                 if stopped and req.max_new > 1:
                     # the device armed the row for more tokens — shut it
                     # down before retirement frees its blocks
@@ -842,29 +1215,47 @@ class ServingEngine:
                                      index=len(req.output) - 1,
                                      done=req.done,
                                      finish_reason=req.finish_reason))
-        if admitted:
+        if admitted or resumed:
             self.stats["prefill_time_s"] += time.perf_counter() - t0
         return events
 
     def step(self) -> list:
-        """One engine tick: admit, decode the running batch, retire.
+        """One engine tick: expire deadlines, admit, decode the running
+        batch, retire.
 
         Returns the tick's ``TokenEvent`` list — admission first-tokens plus
         one decode emission per active slot; empty when there was nothing to
         run (so the pre-§12 boolean use keeps working). Stop-token hits
-        retire — and, paged, free their KV blocks — inside this same call.
+        retire — and, paged, free their KV blocks — inside this same call;
+        so do §13 preemptions (victim re-queued, blocks already freed
+        in-tick) and non-finite-logit failures (victim retired with
+        ``FINISHED_ERROR``, the rest of the batch unaffected).
         """
-        events = self._admit()
+        events = self._expire_deadlines()
+        events += self._admit()
         if all(r is None for r in self.slot_req):
             return events
         t0 = time.perf_counter()
-        self.cache, self.state, self.alloc, nxt, emitted, done = self._tick(
+        (self.cache, self.state, self.alloc, nxt, emitted, done, pre,
+         bad) = self._tick(
             self.params, self.qweights, self.cache, self.state, self.alloc)
-        # The one host sync of the tick: three (slots,)-sized vectors.
-        nxt, emitted, done = map(np.asarray,
-                                 self._sync((nxt, emitted, done), "tick"))
+        # The one host sync of the tick: five (slots,)-sized vectors.
+        nxt, emitted, done, pre, bad = map(
+            np.asarray, self._sync((nxt, emitted, done, pre, bad), "tick"))
         self.stats["decode_time_s"] += time.perf_counter() - t0
         self.stats["decode_ticks"] += 1
+        for s in np.flatnonzero(pre):
+            ev = self._requeue_slot(int(s), blocks_freed=True)
+            if ev is not None:
+                events.append(ev)
+        for s in np.flatnonzero(bad):
+            req = self.slot_req[int(s)]
+            req.finish_reason = FINISHED_ERROR
+            self.stats["nan_failures"] += 1
+            self._retire(int(s), req)
+            events.append(TokenEvent(rid=req.rid, token=-1,
+                                     index=len(req.output), done=True,
+                                     finish_reason=FINISHED_ERROR))
         for s, req in enumerate(self.slot_req):
             if req is None or not emitted[s]:
                 continue
@@ -872,14 +1263,46 @@ class ServingEngine:
             req.output.append(tok)
             self.stats["generated_tokens"] += 1
             if done[s]:
-                req.finish_reason = ("stop" if tok in req.params.stop
-                                     else "length")
+                req.finish_reason = (FINISHED_STOP if tok in req.params.stop
+                                     else FINISHED_LENGTH)
                 self._retire(s, req)
             events.append(TokenEvent(rid=req.rid, token=tok,
                                      index=len(req.output) - 1,
                                      done=req.done,
                                      finish_reason=req.finish_reason))
         return events
+
+    # ------------------------------------------------------------------
+    # Fault-injection seams (serving/faults.py drives these; DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def inject_logit_fault(self, slot: int, value: float = float("nan")):
+        """Add ``value`` to every logit of one slot from its next tick on
+        (cleared when the slot is re-armed). ``nan``/``inf`` exercise the
+        non-finite guard; finite values model a mild numeric skew."""
+        self.state = self._set_bomb(self.state, slot,
+                                    jnp.asarray(value, jnp.float32))
+
+    def drain_free_blocks(self, leave: int = 0) -> int:
+        """Steal the pool's free blocks (all but ``leave``) under an
+        external reference, forcing the next allocating tick into the
+        exhaustion path. Meant for preemption-enabled engines — a
+        fully-provisioned pool has no recovery branch to steal from.
+        Returns the number taken; ``restore_free_blocks`` gives them back.
+        """
+        assert self.paged, "no pool to drain in the ring layout"
+        n_free = int(self._sync(self.alloc["n_free"], "stat"))
+        n = max(n_free - leave, 0)
+        if n:
+            self.alloc, ids = self._steal(self.alloc,
+                                          jnp.asarray(n, jnp.int32))
+            self._stolen.append(ids)
+        return n
+
+    def restore_free_blocks(self):
+        """Return every block taken by ``drain_free_blocks``."""
+        while self._stolen:
+            self.alloc = self._unsteal(self.alloc, self._stolen.pop())
 
     # ------------------------------------------------------------------
     # Request-lifecycle facade (DESIGN.md §12)
@@ -898,14 +1321,11 @@ class ServingEngine:
         # member must not leave earlier ones orphaned in the waiting queue
         # of a call that raised
         reqs = []
-        for i, (prompt, p) in enumerate(zip(prompts, plist)):
-            if len(p.stop) > self.max_stop:
-                raise ValueError(
-                    f"prompt {i} has {len(p.stop)} stop tokens; engine "
-                    f"holds {self.max_stop} per slot")
-            reqs.append(Request(rid=next(self._auto_rid),
-                                prompt=np.asarray(prompt, np.int32),
-                                params=p))
+        for prompt, p in zip(prompts, plist):
+            req = Request(rid=next(self._auto_rid),
+                          prompt=np.asarray(prompt), params=p)
+            self._validate_request(req)
+            reqs.append(req)
         for req in reqs:
             self.submit(req)
         return reqs
@@ -956,6 +1376,13 @@ class ServingEngine:
         mine = {r.rid for r in reqs}
 
         def _events():
+            # requests finished AT submit (queue-capacity rejection) never
+            # reach a tick: surface their terminal event here
+            for r in reqs:
+                if r.done:
+                    yield TokenEvent(rid=r.rid, token=-1,
+                                     index=len(r.output), done=True,
+                                     finish_reason=r.finish_reason)
             for _ in range(max_ticks):
                 if all(r.done for r in reqs):
                     return

@@ -1,0 +1,186 @@
+"""Serving-side failure model: fault injector + supervised serving loop.
+
+``distributed/fault_tolerance.py`` gives TRAINING a supervisor (restore /
+replay on crash, EWMA+MAD straggler detection, preemption); this module is
+the same failure model on the SERVING side (DESIGN.md §13):
+
+  * ``FaultInjector`` — a tick-indexed schedule of injectable faults driving
+    the engine's chaos seams: pool exhaustion (``drain_free_blocks``),
+    NaN/Inf logits (``inject_logit_fault``), forced slot preemption, slow
+    ticks (straggler food), and hard crashes (``InjectedFault``).
+  * ``ServingSupervisor`` — wraps an engine *factory* with a request log and
+    a tick loop: every submitted request is recorded as (rid, prompt,
+    params-with-pinned-seed) BEFORE it reaches the engine, so when a tick
+    raises, the supervisor rebuilds the engine from the factory and
+    resubmits every unfinished request from the log. Because a stream is a
+    pure function of (prompt, params, seed) — the §12 placement-invariance
+    contract — the replayed results are identical to an uninterrupted run.
+    Slow ticks feed the SAME ``StragglerDetector`` the training supervisor
+    uses; serving does not grow a second anomaly detector.
+
+The supervisor never reaches into device state to recover: recovery is
+resubmission, and determinism does the rest. That is the serving analogue of
+``TrainSupervisor``'s restore-and-replay-the-batch-stream.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import StragglerDetector
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+class InjectedFault(RuntimeError):
+    """A scheduled hard failure (the chaos analogue of a node crash)."""
+
+
+class FaultInjector:
+    """Tick-indexed fault schedule: ``{tick: [fault, ...]}`` where each
+    fault is a tuple —
+
+      * ``("nan_logits", slot)`` — poison one slot's logits from its next
+        tick (cleared when the slot re-arms); exercises ``FINISHED_ERROR``.
+      * ``("exhaust_pool", leave)`` — steal all but ``leave`` free blocks,
+        forcing the next allocating tick into victim preemption.
+      * ``("restore_pool",)`` — give stolen blocks back.
+      * ``("preempt", slot)`` — host-side forced preemption of one slot.
+      * ``("slow_tick", seconds)`` — sleep inside the measured tick
+        (straggler-detector food).
+      * ``("crash", msg?)`` — raise ``InjectedFault`` (supervisor restart).
+
+    Each scheduled entry fires exactly once; ``fired`` records what ran.
+    """
+
+    def __init__(self, schedule: dict | None = None):
+        self.schedule = {int(t): list(fs)
+                         for t, fs in (schedule or {}).items()}
+        self.fired: list[tuple[int, tuple]] = []
+
+    def at(self, tick: int, *fault) -> "FaultInjector":
+        """Builder form: ``FaultInjector().at(3, "crash")``."""
+        self.schedule.setdefault(int(tick), []).append(tuple(fault))
+        return self
+
+    def fire(self, tick: int, engine: ServingEngine):
+        for fault in self.schedule.pop(tick, []):
+            kind = fault[0]
+            if kind == "nan_logits":
+                engine.inject_logit_fault(int(fault[1]))
+            elif kind == "exhaust_pool":
+                engine.drain_free_blocks(int(fault[1]) if len(fault) > 1
+                                         else 0)
+            elif kind == "restore_pool":
+                engine.restore_free_blocks()
+            elif kind == "preempt":
+                engine.preempt(int(fault[1]))
+            elif kind == "slow_tick":
+                time.sleep(float(fault[1]))
+            elif kind == "crash":
+                self.fired.append((tick, fault))
+                raise InjectedFault(fault[1] if len(fault) > 1
+                                    else f"injected crash at tick {tick}")
+            else:
+                raise ValueError(f"unknown fault kind {kind!r}")
+            self.fired.append((tick, fault))
+
+
+class ServingSupervisor:
+    """Crash-recovering serving loop: request log + engine factory (§13).
+
+    ``engine_factory`` must build an identically-configured engine each
+    call (the supervisor owns the instance and discards it on restart).
+    ``submit`` pins a seed on every seedless request BEFORE logging it —
+    the log entry must determine the stream, or a replay after restart
+    would diverge. ``run`` drives ticks until every logged request has a
+    terminal result, surviving up to ``max_restarts`` in-tick exceptions
+    by rebuilding the engine and resubmitting unfinished requests.
+    """
+
+    def __init__(self, engine_factory, *, injector: FaultInjector | None
+                 = None, max_restarts: int = 3, straggler_window: int = 32,
+                 straggler_z: float = 4.0, seed: int = 0xFA57,
+                 log=print):
+        self._factory = engine_factory
+        self.engine: ServingEngine = engine_factory()
+        self.injector = injector
+        self.detector = StragglerDetector(straggler_window, straggler_z)
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.log = log
+        self._rid = itertools.count(1)
+        self._rng = np.random.default_rng(seed)
+        # the request log: rid -> (prompt, params). Everything needed to
+        # replay the request bit-identically after an engine restart.
+        self.request_log: dict[int, tuple[np.ndarray, SamplingParams]] = {}
+
+    def submit(self, prompt, params: SamplingParams | None = None, *,
+               rid: int | None = None, **req_kwargs) -> int:
+        params = params or SamplingParams()
+        if params.seed is None:
+            params = replace(params,
+                             seed=int(self._rng.integers(2 ** 31 - 1)))
+        rid = next(self._rid) if rid is None else rid
+        prompt = np.asarray(prompt, np.int32)
+        self.request_log[rid] = (prompt, params)
+        self.engine.submit(Request(rid=rid, prompt=prompt, params=params,
+                                   **req_kwargs))
+        return rid
+
+    def _harvest(self, results: dict):
+        for req in self.engine.finished:
+            if req.rid in self.request_log and req.rid not in results:
+                results[req.rid] = self.engine._result(req)
+
+    def _restart(self, results: dict, err: Exception):
+        self.restarts += 1
+        self.log(f"[serving-supervisor] tick failed ({err}); restart "
+                 f"{self.restarts}/{self.max_restarts}")
+        if self.restarts > self.max_restarts:
+            raise err
+        # the old engine's host lists are still trustworthy (the device is
+        # what failed): keep anything that already finished
+        try:
+            self._harvest(results)
+        except Exception:  # noqa: BLE001 — chaos path, engine may be gone
+            pass
+        self.engine = self._factory()
+        for rid, (prompt, params) in self.request_log.items():
+            if rid not in results:
+                # fresh Request: replay restarts the stream from scratch;
+                # the pinned seed makes it land on the same tokens
+                self.engine.submit(Request(rid=rid, prompt=prompt,
+                                           params=params))
+
+    def run(self, max_ticks: int = 100_000) -> dict:
+        """Drive the engine until every logged request has a terminal
+        result (finish reason included). Returns {rid: GenerationResult}.
+        """
+        results: dict = {}
+        for tick in range(max_ticks):
+            self._harvest(results)
+            if len(results) == len(self.request_log):
+                break
+            t0 = time.perf_counter()
+            try:
+                if self.injector is not None:
+                    self.injector.fire(tick, self.engine)
+                self.engine.step()
+            except Exception as e:  # noqa: BLE001 — fleet failure model
+                self._restart(results, e)
+                continue
+            dt = time.perf_counter() - t0
+            if self.detector.observe(tick, dt):
+                self.log(f"[serving-supervisor] straggler tick {tick}: "
+                         f"{dt:.3f}s")
+        self._harvest(results)
+        if len(results) < len(self.request_log):
+            raise RuntimeError(
+                f"supervisor still running after {max_ticks} ticks "
+                f"({len(results)}/{len(self.request_log)} done)")
+        return results

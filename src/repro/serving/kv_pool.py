@@ -177,6 +177,90 @@ def tick_alloc(alloc, pos, mask, block_size: int):
     }
 
 
+def preempt_for_free(alloc, pos, active, gen, stamp, block_size: int):
+    """In-tick victim preemption (DESIGN.md §13): while the rows about to
+    enter an unallocated block demand more blocks than the free stack holds,
+    free whole victim slots until the demand fits.
+
+    Victim policy: fewest generated tokens first (``gen``, the cheapest
+    progress to throw away — its replay bill on re-admission is smallest),
+    oldest admission stamp (``stamp``) on ties, i.e. LRU among equals.
+    Runs INSIDE the jitted decode tick, before ``tick_alloc``, so exhaustion
+    never surfaces as a host-side error; the preempted mask rides back to the
+    host in the same single per-tick sync the stats ledger already pays for.
+
+    Returns ``(alloc, preempted)`` where ``preempted`` is a bool row mask.
+    Termination: each iteration removes one live row, and demand over zero
+    live rows is zero.
+    """
+    mb = alloc["table"].shape[1]
+    b = pos.shape[0]
+    rows = jnp.arange(b)
+    blk = jnp.clip(pos, 0, mb * block_size - 1) // block_size
+    big = jnp.iinfo(jnp.int32).max
+
+    def demand(a, live):
+        cur = a["table"][rows, blk]
+        return jnp.sum((live & (cur < 0)).astype(jnp.int32))
+
+    def cond(carry):
+        a, pre = carry
+        return demand(a, active & ~pre) > a["n_free"]
+
+    def body(carry):
+        a, pre = carry
+        live = active & ~pre
+        least = jnp.min(jnp.where(live, gen, big))
+        tied = live & (gen == least)
+        victim = jnp.argmin(jnp.where(tied, stamp, big))
+        return free_slot(a, victim), pre.at[victim].set(True)
+
+    alloc, pre = jax.lax.while_loop(
+        cond, body, (alloc, jnp.zeros_like(active)))
+    return alloc, pre
+
+
+def steal_blocks(alloc, n):
+    """Pop ``n`` blocks off the free stack under an external (non-table)
+    reference — the fault injector's pool-exhaustion lever, and the generic
+    "reserve blocks outside any slot" primitive. ``n`` may be traced; the
+    caller must guarantee ``n <= n_free``. Returns ``(alloc, ids)`` with
+    ``ids`` a ``(num_blocks,)`` vector of the stolen physical ids, padded
+    with ``-1`` — hand it back verbatim to ``unsteal_blocks``."""
+    nb = alloc["free"].shape[0]
+    j = jnp.arange(nb)
+    take = j < n
+    ids = alloc["free"][jnp.clip(alloc["n_free"] - 1 - j, 0, nb - 1)]
+    return {
+        "free": alloc["free"],
+        "n_free": alloc["n_free"] - jnp.asarray(n, jnp.int32),
+        "ref": alloc["ref"].at[jnp.where(take, ids, 0)].add(
+            take.astype(jnp.int32)),
+        "table": alloc["table"],
+    }, jnp.where(take, ids, -1)
+
+
+def unsteal_blocks(alloc, ids):
+    """Return blocks taken by ``steal_blocks``: drop the external reference
+    and push every block whose refcount hits 0 back on the stack. Same
+    junk-lane trick as ``free_slot`` (stolen blocks hold refs, so the stack
+    can't be full while any are outstanding)."""
+    nb = alloc["free"].shape[0]
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    ref = alloc["ref"].at[safe].add(-valid.astype(jnp.int32))
+    freed = valid & (ref[safe] == 0)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    idx = jnp.where(freed, alloc["n_free"] + rank, nb - 1)
+    vals = jnp.where(freed, safe, alloc["free"][nb - 1])
+    return {
+        "free": alloc["free"].at[idx].set(vals),
+        "n_free": alloc["n_free"] + jnp.sum(freed.astype(jnp.int32)),
+        "ref": ref,
+        "table": alloc["table"],
+    }
+
+
 def _is_pool(entry) -> bool:
     return isinstance(entry, dict) and "k" in entry and "v" in entry
 

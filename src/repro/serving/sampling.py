@@ -83,6 +83,15 @@ class SamplingParams:
         return self.temperature == 0.0
 
 
+def finite_rows(logits):
+    """Per-row non-finite guard (DESIGN.md §13): True where every logit in
+    the row is finite. ``jax.random.categorical`` (and argmax) on a NaN/Inf
+    row silently emits an arbitrary token, so the engine folds this mask
+    into the decode tick — a False row is not emitted and fails alone with
+    ``FINISHED_ERROR``, no extra host sync, rest of the batch unaffected."""
+    return jnp.isfinite(logits).all(axis=-1)
+
+
 def mask_logits(logits, top_k, top_p):
     """Top-k / top-p (nucleus) truncation, per row.
 

@@ -226,6 +226,121 @@ def test_cow_block_gives_private_copy():
 
 
 # ---------------------------------------------------------------------------
+# Allocator invariants under random op storms (property test, §13)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # hypothesis not installed: deterministic shim
+    from _hyp_fallback import given, settings
+    from _hyp_fallback import strategies as st
+
+_NB, _SLOTS, _MB = 17, 4, 4     # 16 usable blocks, 4 slots, 4 blocks/slot
+
+
+def _check_alloc_invariants(alloc):
+    """The §13 pool-safety contract, checked after EVERY operation:
+    refcounts never negative, the free stack never double-pops, and no
+    block is ever lost or aliased — in_use + free == num_blocks - 1
+    (block 0 is the pinned garbage lane)."""
+    a = _snap(alloc)
+    n_free = int(a["n_free"])
+    assert 0 <= n_free <= _NB - 1
+    assert (a["ref"] >= 0).all(), "negative refcount"
+    assert a["ref"][0] >= 1, "garbage block must stay pinned"
+    head = a["free"][:n_free].tolist()
+    assert len(set(head)) == n_free, "free stack double-pop"
+    assert 0 not in head, "garbage block on the free stack"
+    assert (a["ref"][a["free"][:n_free]] == 0).all(), \
+        "free block still referenced"
+    in_use = int((a["ref"][1:] > 0).sum())
+    assert in_use + n_free == _NB - 1, "blocks leaked or aliased"
+    live = a["table"][a["table"] >= 0]
+    assert (a["ref"][live] > 0).all(), "table points at a dead block"
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_allocator_invariants_under_random_op_storms(seed):
+    """Random alloc / share / tick-alloc / CoW-free / preempt / steal
+    sequences against the device-resident allocator: every §13 invariant
+    holds after every single op, and after draining, the pool is whole."""
+    rng = np.random.default_rng(seed)
+    alloc = kv_pool.init_alloc(_NB, _SLOTS, _MB)
+    stolen = None
+    for _ in range(25):
+        a = _snap(alloc)
+        n_free = int(a["n_free"])
+        occ = [s for s in range(_SLOTS) if (a["table"][s] >= 0).any()]
+        empty = [s for s in range(_SLOTS) if s not in occ]
+        op = rng.choice(["alloc", "share", "free", "tick", "preempt",
+                         "steal"])
+        if op == "alloc" and empty:
+            n = int(rng.integers(1, _MB + 1))
+            if n <= n_free:
+                alloc = kv_pool.alloc_range(alloc, int(rng.choice(empty)),
+                                            0, n)
+        elif op == "share" and occ and empty:
+            src = int(rng.choice(occ))
+            k = int((a["table"][src] >= 0).sum())
+            alloc = kv_pool.share_prefix(
+                alloc, int(rng.choice(empty)),
+                jnp.asarray(a["table"][src]), int(rng.integers(1, k + 1)))
+        elif op == "free" and occ:
+            alloc = kv_pool.free_slot(alloc, int(rng.choice(occ)))
+        elif op == "tick" and occ:
+            # rows crossing into their next (unallocated) block; honor the
+            # no-preemption precondition demand <= n_free
+            pos = np.zeros(_SLOTS, np.int32)
+            mask = np.zeros(_SLOTS, np.int32)
+            budget = n_free
+            for s in occ:
+                k = int((a["table"][s] >= 0).sum())
+                if k < _MB and budget > 0 and rng.random() < 0.7:
+                    pos[s], mask[s] = k * BS, 1
+                    budget -= 1
+            alloc = kv_pool.tick_alloc(alloc, jnp.asarray(pos),
+                                       jnp.asarray(mask), BS)
+        elif op == "preempt" and occ:
+            # every growable row demands a block; victims are freed
+            # in-devices until the demand fits the free stack
+            pos = np.zeros(_SLOTS, np.int32)
+            active = np.zeros(_SLOTS, bool)
+            for s in occ:
+                k = int((a["table"][s] >= 0).sum())
+                if k < _MB:
+                    pos[s], active[s] = k * BS, True
+            alloc, pre = kv_pool.preempt_for_free(
+                alloc, jnp.asarray(pos), jnp.asarray(active),
+                jnp.asarray(rng.integers(1, 20, _SLOTS), jnp.int32),
+                jnp.asarray(rng.permutation(_SLOTS) + 1, jnp.int32), BS)
+            pre = np.asarray(jax.device_get(pre))
+            a2 = _snap(alloc)
+            assert (a2["table"][pre] == -1).all(), \
+                "preempted row kept blocks"
+        elif op == "steal":
+            if stolen is None and n_free > 0:
+                alloc, stolen = kv_pool.steal_blocks(
+                    alloc, int(rng.integers(1, n_free + 1)))
+            elif stolen is not None:
+                alloc = kv_pool.unsteal_blocks(alloc, stolen)
+                stolen = None
+        _check_alloc_invariants(alloc)
+    # drain: give back steals, free every slot -> the pool is whole again
+    if stolen is not None:
+        alloc = kv_pool.unsteal_blocks(alloc, stolen)
+    a = _snap(alloc)
+    for s in range(_SLOTS):
+        if (a["table"][s] >= 0).any():
+            alloc = kv_pool.free_slot(alloc, s)
+    a = _snap(alloc)
+    assert int(a["n_free"]) == _NB - 1
+    assert set(a["free"][: _NB - 1].tolist()) == set(range(1, _NB))
+    assert (a["ref"][1:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
 # Scheduler: prefix sharing, CoW, retirement
 # ---------------------------------------------------------------------------
 
@@ -500,15 +615,25 @@ def test_stop_token_releases_paged_blocks_in_same_tick():
     assert eng.pool_stats()["blocks_in_use"] == 0
 
 
-def test_undersized_pool_rejected_at_construction():
-    """The in-tick allocator has no error path, so a pool too small to back
-    every slot at max_seq must be refused up front — an exhausted free
-    stack would silently alias one physical block into two slots."""
+def test_undersized_pool_policies_at_construction():
+    """An undersized pool (can't back every slot at max_seq) is legal WITH
+    victim preemption (§13) — "auto" turns it on — but is refused when
+    preemption is explicitly off (an exhausted free stack would silently
+    alias one physical block into two slots), and a pool too small to back
+    even ONE slot is always refused."""
     cfg, params = _model("tinyllama-1.1b")
-    with pytest.raises(ValueError, match="num_blocks"):
-        ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=16)
-    # exactly the minimum is fine
-    ServingEngine(cfg, params, slots=2, max_seq=16, num_blocks=2 * 2 + 1)
+    eng = ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=16)
+    assert eng.preemption, "undersized pool must auto-enable preemption"
+    with pytest.raises(ValueError, match="preemption"):
+        ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=16,
+                      preemption=False)
+    # floor: max_blocks + 1 garbage block = 9 for max_seq=64/bs=8
+    with pytest.raises(ValueError, match="one slot"):
+        ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=8)
+    # exactly the full provisioning minimum: preemption stays off
+    eng = ServingEngine(cfg, params, slots=2, max_seq=16,
+                        num_blocks=2 * 2 + 1)
+    assert not eng.preemption
 
 
 def test_hybrid_ssm_attention_arch_serves_in_both_layouts():

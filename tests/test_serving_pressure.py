@@ -1,0 +1,438 @@
+"""Serving under pressure: the §13 failure model.
+
+Chaos coverage for the overload/fault surface of the serving engine
+(DESIGN.md §13):
+  * submit-time request validation — malformed requests fail fast with a
+    uniform ValueError, never reaching a slot,
+  * KV-pool exhaustion → victim preemption: on an undersized pool every
+    request still completes, and each preempted stream is BIT-IDENTICAL to
+    the same request run solo on an ample pool — both KV layouts, greedy
+    and seeded sampling (the §12 purity contract survives eviction),
+  * bounded admission: queue capacity with reject / block policies,
+    watermark-based admission that avoids preemption entirely,
+  * per-request TTFT and wall deadlines against an injectable clock,
+  * non-finite logits fail ONLY the poisoned request (FINISHED_ERROR) with
+    the one-host-sync-per-tick ledger unchanged,
+  * deadline-priority waiting queue: head-of-line holds, no starvation,
+  * ServingSupervisor: mid-generation crash → engine rebuild + request-log
+    replay produces the same results as an uninterrupted run; slow ticks
+    feed the shared StragglerDetector.
+
+Overload NEVER surfaces as an exception from ``step()``: it becomes a
+typed ``FINISHED_*`` reason or backpressure at ``submit()``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tfm
+from repro.serving import (FINISHED_DEADLINE, FINISHED_ERROR,
+                           FINISHED_LENGTH, FINISHED_REJECTED,
+                           TERMINAL_REASONS, AdmissionConfig, FaultInjector,
+                           Request, SamplingParams, ServingEngine,
+                           ServingSupervisor, WaitingQueue)
+
+ARCH = "tinyllama-1.1b"
+
+
+def _model(seed=0, arch=ARCH):
+    cfg = get_smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _prompts(cfg, n, plen, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _drain(eng, max_ticks=500):
+    """Drive step() until no work remains; overload must never raise."""
+    for _ in range(max_ticks):
+        if not eng.waiting and all(r is None for r in eng.slot_req):
+            break
+        eng.step()
+    assert not eng.waiting and all(r is None for r in eng.slot_req), "engine did not drain"
+
+
+def _solo_tokens(cfg, params, prompt, sp, kv_layout, max_seq=64):
+    """Reference stream: the same request alone on an ample pool."""
+    eng = ServingEngine(cfg, params, slots=2, max_seq=max_seq,
+                        kv_layout=kv_layout)
+    req = eng.submit(Request(rid=1, prompt=prompt, params=sp))
+    _drain(eng)
+    assert req.finish_reason == FINISHED_LENGTH
+    return list(req.output)
+
+
+# ---------------------------------------------------------------------------
+# Submit-time request validation
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitValidation:
+    @pytest.fixture(scope="class")
+    def eng(self):
+        cfg, params = _model()
+        return ServingEngine(cfg, params, slots=2, max_seq=32)
+
+    def test_empty_prompt_rejected(self, eng):
+        with pytest.raises(ValueError, match="prompt"):
+            eng.submit(Request(rid=9, prompt=np.zeros(0, np.int32)))
+
+    def test_non_positive_max_new_rejected(self, eng):
+        # SamplingParams owns max_new validation; submit can never see <= 0
+        with pytest.raises(ValueError, match="max_new"):
+            SamplingParams(max_new=0)
+        with pytest.raises(ValueError, match="max_new"):
+            Request(rid=9, prompt=np.ones(3, np.int32), max_new=-1)
+
+    def test_out_of_vocab_token_ids_rejected(self, eng):
+        vocab = eng.cfg.vocab_size
+        for bad in ([0, 1, vocab], [-1, 0, 1]):
+            with pytest.raises(ValueError, match="token ids outside"):
+                eng.submit(Request(rid=9,
+                                   prompt=np.asarray(bad, np.int32)))
+
+    def test_non_integer_prompt_rejected(self, eng):
+        with pytest.raises(ValueError, match="integer"):
+            eng.submit(Request(rid=9,
+                               prompt=np.asarray([0.5, 1.0, 2.0])))
+
+    def test_too_long_prompt_rejected(self, eng):
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit(Request(
+                rid=9, prompt=np.ones(eng.max_seq + 1, np.int32)))
+
+    def test_rejected_request_never_reaches_queue(self, eng):
+        before = len(eng.waiting)
+        with pytest.raises(ValueError):
+            eng.submit(Request(rid=9, prompt=np.zeros(0, np.int32)))
+        assert len(eng.waiting) == before
+
+
+# ---------------------------------------------------------------------------
+# KV-pool exhaustion -> preemption -> identical resumed streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_preempted_streams_identical_to_solo_paged(temperature):
+    """THE §13 acceptance bar: on a pool too small for the offered load,
+    requests are preempted mid-decode, re-queued, resumed via prefix
+    replay — and every finished stream is bit-identical to running that
+    request alone on an ample pool. Greedy and seeded sampling."""
+    cfg, params = _model()
+    prompts = _prompts(cfg, 4, 12)
+    sps = [SamplingParams(temperature=temperature, top_p=0.9, seed=100 + i,
+                          max_new=24) for i in range(4)]
+    solo = [_solo_tokens(cfg, params, p, sp, "paged")
+            for p, sp in zip(prompts, sps)]
+
+    eng = ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=14)
+    assert eng.preemption     # undersized pool auto-enables eviction
+    reqs = [eng.submit(Request(rid=i + 1, prompt=p, params=sp))
+            for i, (p, sp) in enumerate(zip(prompts, sps))]
+    _drain(eng)
+
+    assert eng.stats["preemptions"] > 0
+    assert eng.stats["resumed_admissions"] > 0
+    for req, ref in zip(reqs, solo):
+        assert req.finish_reason == FINISHED_LENGTH
+        assert list(req.output) == ref, f"rid {req.rid} diverged"
+    # no leaked blocks after the storm
+    assert eng.pool_stats()["blocks_in_use"] == 0
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_preempted_streams_identical_to_solo_ring(temperature):
+    """Ring layout has no pool to exhaust, but host-forced preemption
+    (`engine.preempt`) must give the same resume-identical streams."""
+    cfg, params = _model()
+    prompts = _prompts(cfg, 2, 10, seed=3)
+    sps = [SamplingParams(temperature=temperature, seed=7 + i, max_new=12)
+           for i in range(2)]
+    solo = [_solo_tokens(cfg, params, p, sp, "ring")
+            for p, sp in zip(prompts, sps)]
+
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, kv_layout="ring")
+    reqs = [eng.submit(Request(rid=i + 1, prompt=p, params=sp))
+            for i, (p, sp) in enumerate(zip(prompts, sps))]
+    for _ in range(4):
+        eng.step()
+    eng.preempt(0)            # evict mid-generation
+    _drain(eng)
+
+    assert eng.stats["preemptions"] == 1
+    assert reqs[0].preemptions == 1
+    for req, ref in zip(reqs, solo):
+        assert req.finish_reason == FINISHED_LENGTH
+        assert list(req.output) == ref
+
+
+def test_in_tick_exhaustion_frees_blocks_same_tick():
+    """When the injector drains the free list mid-run, the NEXT allocating
+    tick picks victims inside the jitted tick, frees their blocks in the
+    same tick, and the run still completes after the pool is restored."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, num_blocks=17,
+                        preemption=True)
+    prompts = _prompts(cfg, 2, 9, seed=5)
+    reqs = [eng.submit(Request(rid=i + 1, prompt=p,
+                               params=SamplingParams(max_new=20)))
+            for i, p in enumerate(prompts)]
+    for _ in range(3):
+        eng.step()
+    stolen = eng.drain_free_blocks(leave=0)
+    assert stolen > 0
+    for _ in range(6):
+        eng.step()            # forces in-tick victim preemption
+    assert eng.stats["preemptions"] >= 1
+    eng.restore_free_blocks()
+    _drain(eng)
+    assert all(r.finish_reason == FINISHED_LENGTH for r in reqs)
+    assert eng.pool_stats()["blocks_in_use"] == 0
+
+
+def test_preemption_keeps_one_host_sync_per_tick():
+    """The preemption/NaN masks ride the existing tick sync: tick_syncs
+    stays exactly equal to decode_ticks through an eviction storm."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=14)
+    for i, p in enumerate(_prompts(cfg, 4, 12)):
+        eng.submit(Request(rid=i + 1, prompt=p,
+                           params=SamplingParams(max_new=24)))
+    _drain(eng)
+    assert eng.stats["preemptions"] > 0
+    assert eng.stats["tick_syncs"] == eng.stats["decode_ticks"]
+
+
+# ---------------------------------------------------------------------------
+# Non-finite logits guard
+# ---------------------------------------------------------------------------
+
+
+def test_nan_logits_fail_only_the_poisoned_request():
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32)
+    prompts = _prompts(cfg, 2, 6, seed=11)
+    sp = SamplingParams(max_new=10)
+    good = eng.submit(Request(rid=1, prompt=prompts[0], params=sp))
+    bad = eng.submit(Request(rid=2, prompt=prompts[1], params=sp))
+    eng.step()                 # both admitted, first tokens emitted
+    victim = next(s for s in range(eng.slots)
+                  if eng.slot_req[s] is bad)
+    eng.inject_logit_fault(victim)
+    _drain(eng)
+    assert bad.finish_reason == FINISHED_ERROR
+    assert eng.stats["nan_failures"] == 1
+    assert good.finish_reason == FINISHED_LENGTH
+    assert len(good.output) == 10
+    assert eng.stats["tick_syncs"] == eng.stats["decode_ticks"]
+
+
+# ---------------------------------------------------------------------------
+# Bounded admission + backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_queue_capacity_reject_policy():
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32,
+                        admission=AdmissionConfig(queue_capacity=2,
+                                                  on_full="reject"))
+    prompts = _prompts(cfg, 6, 6)
+    sp = SamplingParams(max_new=6)
+    reqs = [eng.submit(Request(rid=i + 1, prompt=p, params=sp))
+            for i, p in enumerate(prompts)]
+    rejected = [r for r in reqs if r.finish_reason == FINISHED_REJECTED]
+    assert len(rejected) == 4          # 2 queue seats, no ticks in between
+    assert all(r.done for r in rejected)
+    _drain(eng)
+    assert eng.stats["rejected_requests"] == 4
+    served = [r for r in reqs if r.finish_reason == FINISHED_LENGTH]
+    assert len(served) == 2
+    assert all(len(r.output) == 6 for r in served)
+
+
+def test_queue_capacity_block_policy_serves_everyone():
+    """``block`` turns submit() into backpressure: it drives ticks until a
+    queue seat frees, so every request is eventually served."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32,
+                        admission=AdmissionConfig(queue_capacity=2,
+                                                  on_full="block"))
+    sp = SamplingParams(max_new=6)
+    reqs = [eng.submit(Request(rid=i + 1, prompt=p, params=sp))
+            for i, p in enumerate(_prompts(cfg, 6, 6))]
+    _drain(eng)
+    assert [r.finish_reason for r in reqs] == [FINISHED_LENGTH] * 6
+    assert eng.stats["rejected_requests"] == 0
+
+
+def test_watermark_admission_avoids_preemption():
+    """With a pool-occupancy watermark, the engine holds requests in the
+    queue instead of admitting into guaranteed eviction: same undersized
+    pool as the chaos test, zero preemptions."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=4, max_seq=64, num_blocks=14,
+                        admission=AdmissionConfig(watermark=1.0))
+    reqs = [eng.submit(Request(rid=i + 1, prompt=p,
+                               params=SamplingParams(max_new=24)))
+            for i, p in enumerate(_prompts(cfg, 4, 12))]
+    _drain(eng)
+    assert eng.stats["preemptions"] == 0
+    assert all(r.finish_reason == FINISHED_LENGTH for r in reqs)
+
+
+def test_deadlines_expire_with_typed_reason():
+    """TTFT and wall deadlines resolve against an injectable clock; expiry
+    is a FINISHED_DEADLINE result, never an exception."""
+    cfg, params = _model()
+    now = [0.0]
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32,
+                        clock=lambda: now[0],
+                        admission=AdmissionConfig(deadline_s=10.0))
+    sp = SamplingParams(max_new=8)
+    prompts = _prompts(cfg, 3, 6)
+    r1 = eng.submit(Request(rid=1, prompt=prompts[0], params=sp))
+    r2 = eng.submit(Request(rid=2, prompt=prompts[1], params=sp,
+                            ttft_deadline_s=5.0))   # per-request override
+    r3 = eng.submit(Request(rid=3, prompt=prompts[2], params=sp))
+    for _ in range(3):
+        eng.step()
+    now[0] = 20.0              # everything is now past its budget
+    _drain(eng)
+    # r2 has the tightest budget (TTFT 5s), so the deadline-priority queue
+    # admitted IT first; it ran until the wall deadline caught it
+    assert r2.finish_reason == FINISHED_DEADLINE   # running past wall
+    assert 0 < len(r2.output) < 8  # kept what it generated before expiry
+    assert r1.finish_reason == FINISHED_DEADLINE   # expired while waiting
+    assert r3.finish_reason == FINISHED_DEADLINE
+    assert r1.output == [] and r3.output == []
+    assert eng.stats["deadline_expired"] == 3
+    assert all(r.finish_reason in TERMINAL_REASONS for r in (r1, r2, r3))
+
+
+# ---------------------------------------------------------------------------
+# Deadline-priority queue: ordering + no starvation
+# ---------------------------------------------------------------------------
+
+
+def test_waiting_queue_orders_by_deadline_then_seq():
+    q = WaitingQueue()
+    loose = Request(rid=1, prompt=np.ones(2, np.int32))
+    loose.seq, loose.deadline_by = 0, 100.0
+    tight = Request(rid=2, prompt=np.ones(2, np.int32))
+    tight.seq, tight.deadline_by = 1, 5.0
+    fifo_a = Request(rid=3, prompt=np.ones(2, np.int32))
+    fifo_a.seq = 2
+    for r in (loose, tight, fifo_a):
+        q.push(r)
+    # tightest deadline first; ties (both inf) fall back to FIFO seq
+    assert [q.pop().rid for _ in range(3)] == [2, 1, 3]
+
+
+def test_preempted_request_not_starved():
+    """A preempted request keeps its original seq, so it re-queues AHEAD
+    of younger traffic and completes even under sustained load."""
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, num_blocks=17,
+                        preemption=True)
+    old = eng.submit(Request(rid=1, prompt=_prompts(cfg, 1, 8)[0],
+                             params=SamplingParams(max_new=16)))
+    for _ in range(2):
+        eng.step()
+    eng.preempt(next(s for s in range(eng.slots)
+                     if eng.slot_req[s] is old))
+    # pile on younger requests while rid 1 waits
+    young = [eng.submit(Request(rid=10 + i, prompt=p,
+                                params=SamplingParams(max_new=4)))
+             for i, p in enumerate(_prompts(cfg, 4, 8, seed=9))]
+    assert next(iter(eng.waiting)).rid == 1    # head of line
+    _drain(eng)
+    assert old.finish_reason == FINISHED_LENGTH
+    assert len(old.output) == 16
+    assert all(r.finish_reason == FINISHED_LENGTH for r in young)
+
+
+# ---------------------------------------------------------------------------
+# Supervisor: crash-restart-replay + straggler detection
+# ---------------------------------------------------------------------------
+
+
+def _factory(cfg, params, **kw):
+    def make():
+        return ServingEngine(cfg, params, slots=2, max_seq=48, **kw)
+    return make
+
+
+def test_supervisor_restart_replays_to_identical_results():
+    cfg, params = _model()
+    prompts = _prompts(cfg, 3, 8, seed=21)
+    sp = SamplingParams(temperature=0.8, seed=None, max_new=10)
+
+    clean = ServingSupervisor(_factory(cfg, params), log=lambda *_: None)
+    for p in prompts:
+        clean.submit(p, sp)
+    want = clean.run()
+
+    chaotic = ServingSupervisor(
+        _factory(cfg, params),
+        injector=FaultInjector().at(4, "crash", "mid-decode device loss"),
+        log=lambda *_: None)
+    for p in prompts:
+        chaotic.submit(p, sp)   # same rng stream -> same pinned seeds
+    got = chaotic.run()
+
+    assert chaotic.restarts == 1
+    assert set(got) == set(want)
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens
+        assert got[rid].finish_reason == want[rid].finish_reason
+
+
+def test_supervisor_exhaust_and_restore_pool_mid_run():
+    """Injected pool exhaustion mid-run: victims are preempted, the pool
+    comes back, everything completes with typed reasons."""
+    cfg, params = _model()
+    sup = ServingSupervisor(
+        _factory(cfg, params, num_blocks=17, preemption=True),
+        injector=FaultInjector().at(3, "exhaust_pool").at(8,
+                                                          "restore_pool"),
+        log=lambda *_: None)
+    for p in _prompts(cfg, 2, 9, seed=5):
+        sup.submit(p, SamplingParams(max_new=20))
+    results = sup.run()
+    assert sup.engine.stats["preemptions"] >= 1
+    assert all(r.finish_reason == FINISHED_LENGTH
+               for r in results.values())
+
+
+def test_supervisor_flags_injected_straggler_tick():
+    cfg, params = _model()
+    inj = FaultInjector().at(14, "slow_tick", 0.25)
+    sup = ServingSupervisor(_factory(cfg, params), injector=inj,
+                            straggler_window=16, straggler_z=4.0,
+                            log=lambda *_: None)
+    for p in _prompts(cfg, 2, 6, seed=2):
+        sup.submit(p, SamplingParams(max_new=24))
+    sup.run()
+    assert any(tick == 14 for tick, _ in sup.detector.flagged)
+    assert (14, ("slow_tick", 0.25)) in inj.fired
+
+
+def test_supervisor_gives_up_after_max_restarts():
+    cfg, params = _model()
+    inj = FaultInjector()
+    for t in range(0, 40, 2):
+        inj.at(t, "crash")
+    sup = ServingSupervisor(_factory(cfg, params), injector=inj,
+                            max_restarts=2, log=lambda *_: None)
+    sup.submit(_prompts(cfg, 1, 6)[0], SamplingParams(max_new=8))
+    with pytest.raises(Exception, match="crash"):
+        sup.run()
+    assert sup.restarts == 3
