@@ -138,7 +138,7 @@ def bench_flash_attention():
 
 def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
                  max_new=16, nreq=8, kv_layout="auto", same_prefix=False,
-                 max_seq=64, sample=None):
+                 max_seq=64, sample=None, kv_dtype="bf16"):
     """One measured engine pass. Compiles on a throwaway request first so the
     numbers reflect steady-state serving, not jit tracing. With
     ``same_prefix`` every request reuses ONE prompt, exercising the paged
@@ -149,7 +149,8 @@ def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
     from repro.serving import Request, SamplingParams, ServingEngine
 
     eng = ServingEngine(cfg, params, slots=slots, max_seq=max_seq,
-                        quant_state=quant_state, kv_layout=kv_layout)
+                        quant_state=quant_state, kv_layout=kv_layout,
+                        kv_dtype=kv_dtype)
     rng = np.random.default_rng(7)
     warm_sp = SamplingParams(max_new=2, **(sample or {}))
     eng.generate([rng.integers(0, cfg.vocab_size, (plen,))], warm_sp)
@@ -219,6 +220,10 @@ def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
     if eng.export_ledger is not None:
         # bytes/BOPs ledger of the artifact this run actually served
         out["quant_report"] = eng.quant_report()
+    if eng.kv_spec is not None:
+        # §14 KV-cache footprint: ceil-packed bytes/cached-token vs the
+        # bf16 and fp32 float pools of the same geometry
+        out["kv_report"] = eng.kv_report()
     if eng.paged:
         ps = eng.pool_stats()
         out.update({
@@ -289,6 +294,50 @@ def _chaos_run(cfg, params, *, slots=4, plen=12, max_new=24, nreq=4,
     }
 
 
+def _kv_oracle_err(cfg, params, kv_dtype, plen=9, steps=4):
+    """Max |logit| gap of a teacher-forced paged decode under quantized KV
+    vs the fp32 float-pool oracle — same tokens, same block geometry, so
+    the gap isolates KV storage error (DESIGN.md §14)."""
+    import math
+
+    from repro.core.sites import QuantContext
+    from repro.models import transformer as tfm
+    from repro.quant import KVQuantSpec
+    from repro.serving import kv_pool
+
+    spec = KVQuantSpec(bits=8 if kv_dtype == "int8" else 4,
+                       group_size=math.gcd(cfg.head_dim, 32),
+                       head_dim=cfg.head_dim)
+    qc = QuantContext(mode="off")
+    bs, max_seq = 8, 32
+    x = jax.random.randint(jax.random.PRNGKey(1), (1, plen), 0,
+                           cfg.vocab_size)
+    rng = np.random.default_rng(2)
+    toks = [int(rng.integers(0, cfg.vocab_size)) for _ in range(steps)]
+    outs = []
+    for kv_spec in (None, spec):
+        mb = max_seq // bs
+        cache = tfm.init_paged_cache(
+            cfg, 1, mb + 1, bs,
+            kv_dtype=jnp.float32 if kv_spec is None else jnp.bfloat16,
+            kv_spec=kv_spec)
+        alloc = kv_pool.init_alloc(mb + 1, 1, mb)
+        alloc = kv_pool.alloc_range(alloc, 0, 0, -(-plen // bs))
+        lg, cache = tfm.prefill_slot(qc, params, x, plen, cache, 0, cfg,
+                                     block_table=alloc["table"])
+        rows = [np.asarray(lg[0, plen - 1, : cfg.vocab_size])]
+        adv = jnp.ones((1,), jnp.int32)
+        for t in toks:
+            alloc = kv_pool.tick_alloc(alloc, cache["pos"], adv, bs)
+            lg, cache = tfm.decode_step(qc, params, cache,
+                                        jnp.asarray([t], jnp.int32), cfg,
+                                        advance=adv,
+                                        block_table=alloc["table"])
+            rows.append(np.asarray(lg[0, 0, : cfg.vocab_size]))
+        outs.append(np.stack(rows))
+    return float(np.abs(outs[0] - outs[1]).max())
+
+
 def bench_serving(tier: str):
     """Serving engine throughput on the smoke LM: fp32 and int8 paths."""
     from repro.configs import get_smoke_config
@@ -355,6 +404,29 @@ def bench_serving(tier: str):
           f"prefills_for_{nreq}_same_prefix_reqs="
           f"{prefix['prefill_forwards']};hit_rate="
           f"{prefix['prefix_hit_rate']:.2f}")
+    # quantized KV blocks (DESIGN.md §14): int8 (and packed int4) group-wise
+    # codes with fused dequant in the paged-attention kernel. kv_report
+    # gives ceil-packed bytes/cached-token; slots_at_bf16_pool_bytes is how
+    # many concurrent slots the SAME pool byte budget backs vs bf16; the
+    # logits error is a teacher-forced paged decode vs the fp32 float-pool
+    # oracle. CI asserts the bytes ratio, the error bound, and one host
+    # sync per tick from BENCH_serving.json.
+    kv_rows = {}
+    for name, kvd in (("kv_int8", "int8"), ("kv_int4", "int4")):
+        row = _serving_run(cfg, params, nreq=nreq, kv_dtype=kvd)
+        rep = row["kv_report"]
+        row["bytes_per_cached_token"] = rep["bytes_per_cached_token"]
+        row["slots_at_bf16_pool_bytes"] = int(
+            row["slots"] / max(rep["vs_bf16"], 1e-9))
+        row["logits_max_abs_err"] = _kv_oracle_err(cfg, params, kvd)
+        print(f"serving_{name},{row['decode_tok_s']:.0f},"
+              f"bytes_per_cached_token={rep['bytes_per_cached_token']};"
+              f"vs_bf16={rep['vs_bf16']:.3f};vs_fp32={rep['vs_fp32']:.3f};"
+              f"slots_at_bf16_pool_bytes={row['slots_at_bf16_pool_bytes']};"
+              f"logits_max_abs_err={row['logits_max_abs_err']:.2e};"
+              f"host_syncs_per_tick={row['host_syncs_per_tick']:.2f}")
+        kv_rows[name] = row
+
     # serving under pressure (DESIGN.md §13): undersized pool + bounded
     # queue; preemption must happen, every resumed stream must be
     # bit-identical to its solo reference, overflow must bounce as typed
@@ -369,7 +441,7 @@ def bench_serving(tier: str):
     return {"fp32": fp32, "fp32_ring": ring, "int8": int8,
             "mixed_sub_byte": mixed, "sampled_decode": sampled,
             "paged_high_slots": high, "prefix_sharing": prefix,
-            "chaos": chaos}
+            **kv_rows, "chaos": chaos}
 
 
 # ---------------------------------------------------------------------------

@@ -17,14 +17,23 @@ def paged_attention_op(q, k_pool, v_pool, block_table, pos, *,
                        window: int | None = None,
                        softcap: float | None = None,
                        use_pallas: bool = False,
-                       interpret: bool = True):
-    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd);
+                       interpret: bool = True,
+                       k_scale=None, v_scale=None):
+    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd) float — or integer
+    codes with ``k_scale``/``v_scale`` (num_blocks, bs, KV, num_groups) fp16
+    group scales for the fused-dequant path (DESIGN.md §14);
     block_table: (B, max_blocks) int32; pos: (B,) int32 → (B, KV, G, hd) f32.
+
+    ``k_scale``/``v_scale`` are traced operands: their presence changes the
+    argument pytree, so float and quantized pools get separate jit
+    specializations without a static flag.
     """
     pos = jnp.asarray(pos, jnp.int32)
     if use_pallas:
         return paged_attention_pallas(
             q, k_pool, v_pool, block_table, pos,
-            window=window, softcap=softcap, interpret=interpret)
+            window=window, softcap=softcap, interpret=interpret,
+            k_scale=k_scale, v_scale=v_scale)
     return paged_attention_ref(
-        q, k_pool, v_pool, block_table, pos, window=window, softcap=softcap)
+        q, k_pool, v_pool, block_table, pos, window=window, softcap=softcap,
+        k_scale=k_scale, v_scale=v_scale)

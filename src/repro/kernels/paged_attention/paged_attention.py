@@ -24,6 +24,13 @@ Layout and TPU mapping:
     wholly fallen out of the window) are pruned with ``pl.when`` before any
     compute.
 
+Quantized pools (DESIGN.md §14) add a **fused dequant-on-block-load**: the
+per-group fp16 scales ride in as two extra block-mapped operands whose
+BlockSpec index_map reads the SAME ``table[b, j]`` entry as the code
+blocks, so scale DMA is paged exactly like the codes; the affine is applied
+in-register (int4 nibbles unpacked first) before the scores dot, and the
+online-softmax carry is untouched.
+
 On CPU containers the kernel runs in interpret mode (the repo-wide kernel
 contract, DESIGN.md §3); on TPU it lowers natively.
 """
@@ -37,13 +44,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.quant.kv import dequant_codes, unpack_int4
+
 NEG_INF = -1e30
 
 
-def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, block_size: int, blocks: int,
+def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+            block_size: int, blocks: int,
             kv_heads: int, groups: int, window: int | None,
-            softcap: float | None, scale: float):
+            softcap: float | None, scale: float,
+            head_dim: int, group_size: int = 0, bits: int = 8):
+    if group_size:  # quantized: two scale operands precede the output
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -62,8 +76,17 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(run)
     def _compute():
         q = q_ref[0].astype(jnp.float32)          # (KV*G, hd)
-        k = k_ref[0].astype(jnp.float32)          # (bs, KV, hd)
-        v = v_ref[0].astype(jnp.float32)          # (bs, KV, hd)
+        if group_size:
+            kc, vc = k_ref[0], v_ref[0]           # (bs, KV, packed)
+            if bits == 4:
+                kc = unpack_int4(kc, head_dim)
+                vc = unpack_int4(vc, head_dim)
+            # fused dequant in-register: (bs, KV, ng, G) * scale
+            k = dequant_codes(kc, ks_ref[0], head_dim, group_size)
+            v = dequant_codes(vc, vs_ref[0], head_dim, group_size)
+        else:
+            k = k_ref[0].astype(jnp.float32)      # (bs, KV, hd)
+            v = v_ref[0].astype(jnp.float32)      # (bs, KV, hd)
         qr = q.reshape(kv_heads, groups, q.shape[-1])
         # batched over the KV head axis: (KV, G, hd) x (bs, KV, hd)
         s = jax.lax.dot_general(
@@ -101,25 +124,43 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_attention_pallas(q, k_pool, v_pool, block_table, pos, *,
                            window: int | None = None,
                            softcap: float | None = None,
-                           interpret: bool = True):
-    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd);
+                           interpret: bool = True,
+                           k_scale=None, v_scale=None):
+    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd) float or
+    (num_blocks, bs, KV, packed_head) codes + ``k_scale``/``v_scale``
+    (num_blocks, bs, KV, num_groups) fp16 per-group scales;
     block_table: (B, max_blocks); pos: (B,). Returns (B, KV, G, hd)."""
     b, kvh, g, hd = q.shape
     bs = k_pool.shape[1]
     mb = block_table.shape[1]
+    hdp = k_pool.shape[-1]
+    quant = k_scale is not None
+    if quant:
+        ng = k_scale.shape[-1]
+        group_size = hd // ng
+        bits = 8 if k_pool.dtype == jnp.int8 else 4
+        assert ng * group_size == hd, (hd, ng)
+    else:
+        ng, group_size, bits = 0, 0, 8
     qf = q.reshape(b, kvh * g, hd)
+
+    def table_map(bi, j, tbl, ps):
+        return (jnp.maximum(tbl[bi, j], 0), 0, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, kvh * g, hd), lambda bi, j, tbl, ps: (bi, 0, 0)),
+        pl.BlockSpec((1, bs, kvh, hdp), table_map),
+        pl.BlockSpec((1, bs, kvh, hdp), table_map),
+    ]
+    operands = [qf, k_pool, v_pool]
+    if quant:
+        # scale blocks page through the SAME table entry as the codes
+        in_specs += [pl.BlockSpec((1, bs, kvh, ng), table_map)] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, mb),
-        in_specs=[
-            pl.BlockSpec((1, kvh * g, hd), lambda bi, j, tbl, ps: (bi, 0, 0)),
-            pl.BlockSpec(
-                (1, bs, kvh, hd),
-                lambda bi, j, tbl, ps: (jnp.maximum(tbl[bi, j], 0), 0, 0, 0)),
-            pl.BlockSpec(
-                (1, bs, kvh, hd),
-                lambda bi, j, tbl, ps: (jnp.maximum(tbl[bi, j], 0), 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, kvh * g, hd),
                                lambda bi, j, tbl, ps: (bi, 0, 0)),
         scratch_shapes=[
@@ -132,9 +173,10 @@ def paged_attention_pallas(q, k_pool, v_pool, block_table, pos, *,
         functools.partial(
             _kernel, block_size=bs, blocks=mb, kv_heads=kvh, groups=g,
             window=window, softcap=softcap, scale=hd ** -0.5,
+            head_dim=hd, group_size=group_size, bits=bits,
         ),
         out_shape=jax.ShapeDtypeStruct((b, kvh * g, hd), jnp.float32),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(block_table, pos, qf, k_pool, v_pool)
+    )(block_table, pos, *operands)
     return out.reshape(b, kvh, g, hd)

@@ -3,6 +3,13 @@
 Numerics deliberately mirror ``models.attention.attention_decode`` (bf16
 matmuls with fp32 accumulation, fp32 softmax) so the paged path's logits can
 be gated against the contiguous ring-cache path at bf16 tolerance.
+
+Quantized pools (DESIGN.md §14): when ``k_scale``/``v_scale`` are given the
+pools hold integer codes (int8, or uint8 nibble-packed int4) with fp16
+per-group scales along head_dim. The oracle gathers codes and scales with
+the SAME block-table index and dequantizes right after the gather — the
+reference semantics for the Pallas kernel's fused dequant-on-block-load —
+then runs the identical masked-softmax math.
 """
 
 from __future__ import annotations
@@ -10,15 +17,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.quant.kv import dequant_codes, unpack_int4
+
 NEG_INF = -1e30
+
+
+def _dequant_gathered(codes, scale, hd):
+    """(B, S, KV, packed) codes + (B, S, KV, ng) scales -> (B, S, KV, hd)."""
+    if codes.dtype == jnp.uint8:  # nibble-packed int4
+        codes = unpack_int4(codes, hd)
+    return dequant_codes(codes, scale, hd, hd // scale.shape[-1])
 
 
 def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
                         window: int | None = None,
-                        softcap: float | None = None):
-    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd);
-    block_table: (B, max_blocks) int32 (-1 = unallocated); pos: (B,) int32.
-    Returns (B, KV, G, hd).
+                        softcap: float | None = None,
+                        k_scale=None, v_scale=None):
+    """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd) float, or
+    (num_blocks, bs, KV, packed_head) codes with ``k_scale``/``v_scale``
+    (num_blocks, bs, KV, num_groups) fp16; block_table: (B, max_blocks)
+    int32 (-1 = unallocated); pos: (B,) int32. Returns (B, KV, G, hd).
 
     Unallocated table entries gather the garbage block 0; every logical
     position they cover is > ``pos`` for that row, so the mask discards them.
@@ -27,8 +45,14 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
     bs = k_pool.shape[1]
     mb = block_table.shape[1]
     safe = jnp.where(block_table >= 0, block_table, 0)
-    k = k_pool[safe].reshape(b, mb * bs, kvh, hd)
-    v = v_pool[safe].reshape(b, mb * bs, kvh, hd)
+    k = k_pool[safe].reshape(b, mb * bs, kvh, k_pool.shape[-1])
+    v = v_pool[safe].reshape(b, mb * bs, kvh, v_pool.shape[-1])
+    if k_scale is not None:
+        ng = k_scale.shape[-1]
+        ks = k_scale[safe].reshape(b, mb * bs, kvh, ng)
+        vs = v_scale[safe].reshape(b, mb * bs, kvh, ng)
+        k = _dequant_gathered(k, ks, hd)
+        v = _dequant_gathered(v, vs, hd)
     scale = hd ** -0.5
     logits = jnp.einsum(
         "bkgd,bskd->bkgs", q, k.astype(q.dtype),

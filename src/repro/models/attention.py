@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.sites import QuantContext
+from repro.quant import kv as kv_codec
 
 from .layers import COMPUTE_DTYPE, apply_mrope, apply_rope, qmatmul, rms_norm, softcap
 
@@ -133,8 +134,20 @@ def attention_train(
 
 
 def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
-                    dtype=jnp.bfloat16):
+                    dtype=jnp.bfloat16,
+                    spec: kv_codec.KVQuantSpec | None = None):
+    """Ring/contiguous decode cache; with ``spec`` set, quantized storage
+    (packed codes + fp16 group scales — same flat layout as the paged pool,
+    DESIGN.md §14)."""
     slots = min(cfg.window, max_seq) if kind == "local" else max_seq
+    if spec is not None:
+        assert spec.head_dim == cfg.head_dim, (spec, cfg.head_dim)
+        cshape = (batch, slots, cfg.n_kv_heads, spec.packed_head)
+        sshape = (batch, slots, cfg.n_kv_heads, spec.num_groups)
+        return {"k": jnp.zeros(cshape, spec.code_dtype),
+                "v": jnp.zeros(cshape, spec.code_dtype),
+                "k_scale": jnp.zeros(sshape, spec.scale_dtype),
+                "v_scale": jnp.zeros(sshape, spec.scale_dtype)}
     shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
     return {
         "k": jnp.zeros(shape, dtype),
@@ -179,11 +192,29 @@ def attention_decode(
     slots = cache["k"].shape[1]
     slot = pos % slots if kind == "local" else jnp.minimum(pos, slots - 1)
     rows = jnp.arange(b)
-    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
-    if plan is not None:
-        ck = plan.shard_cache(ck)
-        cv = plan.shard_cache(cv)
+    spec = kv_codec.spec_from_cache(cache, cfg.head_dim)
+    if spec is not None:
+        # write-site quantization (§14): floats never land in the cache
+        kc, ksc = kv_codec.quantize_kv(k[:, 0], spec)
+        vc, vsc = kv_codec.quantize_kv(v[:, 0], spec)
+        new_cache = {
+            "k": cache["k"].at[rows, slot].set(kc),
+            "v": cache["v"].at[rows, slot].set(vc),
+            "k_scale": cache["k_scale"].at[rows, slot].set(ksc),
+            "v_scale": cache["v_scale"].at[rows, slot].set(vsc),
+        }
+        ck = kv_codec.dequantize_kv(new_cache["k"], new_cache["k_scale"], spec)
+        cv = kv_codec.dequantize_kv(new_cache["v"], new_cache["v_scale"], spec)
+        if plan is not None:
+            ck = plan.shard_cache(ck)
+            cv = plan.shard_cache(cv)
+    else:
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        if plan is not None:
+            ck = plan.shard_cache(ck)
+            cv = plan.shard_cache(cv)
+        new_cache = {"k": ck, "v": cv}
 
     groups = cfg.n_heads // cfg.n_kv_heads
     qg = q.reshape(b, cfg.n_kv_heads, groups, cfg.head_dim)
@@ -209,7 +240,7 @@ def attention_decode(
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     y = qmatmul(qc, "attn_o", out, p["wo"])
     y = qc.act("attn_o", y)
-    return y, {"k": ck, "v": cv}
+    return y, new_cache
 
 
 def attention_decode_paged(
@@ -265,25 +296,46 @@ def attention_decode_paged(
     if write_mask is not None:
         ok &= write_mask.astype(bool)
     tgt = jnp.where(ok, phys, 0)
-    ck = pool["k"].at[tgt, lp % bs].set(k[:, 0].astype(pool["k"].dtype))
-    cv = pool["v"].at[tgt, lp % bs].set(v[:, 0].astype(pool["v"].dtype))
+    off = lp % bs
+    spec = kv_codec.spec_from_cache(pool, cfg.head_dim)
+    if spec is not None:
+        # write-site quantization (§14): codes + group scales land together
+        kc, ksc = kv_codec.quantize_kv(k[:, 0], spec)
+        vc, vsc = kv_codec.quantize_kv(v[:, 0], spec)
+        new_pool = {
+            "k": pool["k"].at[tgt, off].set(kc),
+            "v": pool["v"].at[tgt, off].set(vc),
+            "k_scale": pool["k_scale"].at[tgt, off].set(ksc),
+            "v_scale": pool["v_scale"].at[tgt, off].set(vsc),
+        }
+        scales = {"k_scale": new_pool["k_scale"],
+                  "v_scale": new_pool["v_scale"]}
+    else:
+        new_pool = {
+            "k": pool["k"].at[tgt, off].set(k[:, 0].astype(pool["k"].dtype)),
+            "v": pool["v"].at[tgt, off].set(v[:, 0].astype(pool["v"].dtype)),
+        }
+        scales = {"k_scale": None, "v_scale": None}
     if plan is not None:
-        ck = plan.shard_pool(ck)
-        cv = plan.shard_pool(cv)
+        new_pool = {name: plan.shard_pool(a) for name, a in new_pool.items()}
+        scales = {"k_scale": new_pool.get("k_scale"),
+                  "v_scale": new_pool.get("v_scale")}
 
     groups = cfg.n_heads // cfg.n_kv_heads
     qg = q[:, 0].reshape(b, cfg.n_kv_heads, groups, cfg.head_dim)
     impl = qc.matmul_impl
     out = paged_attention_op(
-        qg.astype(COMPUTE_DTYPE), ck, cv, block_table, pos,
+        qg.astype(COMPUTE_DTYPE), new_pool["k"], new_pool["v"],
+        block_table, pos,
         window=cfg.window if kind == "local" else None,
         softcap=cfg.attn_softcap,
         use_pallas=impl != "ref", interpret=impl != "pallas",
+        **scales,
     )
     out = out.astype(COMPUTE_DTYPE).reshape(b, 1, cfg.n_heads * cfg.head_dim)
     y = qmatmul(qc, "attn_o", out, p["wo"])
     y = qc.act("attn_o", y)
-    return y, {"k": ck, "v": cv}
+    return y, new_pool
 
 
 def write_prefill_slot(cfg: ModelConfig, kind: str, cache: dict, k, v, slot,
@@ -302,20 +354,32 @@ def write_prefill_slot(cfg: ModelConfig, kind: str, cache: dict, k, v, slot,
     short prompt never reached) is written but never attended: the decode
     mask only admits positions <= pos, and decode overwrites each position in
     the same step that first exposes it.
+
+    Quantized caches quantize here — after the ring gather, before the
+    slice write — so codes and scales land through the identical update.
     """
-    ck, cv = cache["k"], cache["v"]
     if kind == "local":
-        ring = ck.shape[-3]
+        ring = cache["k"].shape[-3]
         r = jnp.arange(ring)
         p = plen - 1 - ((plen - 1 - r) % ring)
         p = jnp.clip(p, 0, k.shape[-3] - 1)
         k = jnp.take(k, p, axis=-3)
         v = jnp.take(v, p, axis=-3)
-    start = [0] * ck.ndim
-    start[-4] = slot  # the batch (slot) axis, stacked or not
-    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), tuple(start))
-    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), tuple(start))
-    return {"k": ck, "v": cv}
+    spec = kv_codec.spec_from_cache(cache, cfg.head_dim)
+    if spec is not None:
+        kc, ksc = kv_codec.quantize_kv(k, spec)
+        vc, vsc = kv_codec.quantize_kv(v, spec)
+        entries = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+    else:
+        entries = {"k": k, "v": v}
+    out = {}
+    for name, x in entries.items():
+        tgt = cache[name]
+        start = [0] * tgt.ndim
+        start[-4] = slot  # the batch (slot) axis, stacked or not
+        out[name] = jax.lax.dynamic_update_slice(
+            tgt, x.astype(tgt.dtype), tuple(start))
+    return out
 
 
 def fill_cache_from_prefill(cfg: ModelConfig, kind: str, k, v, max_seq: int):

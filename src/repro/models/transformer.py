@@ -585,13 +585,19 @@ def prefill_slot_tail(qc: QuantContext, params, tokens, cache, slot,
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               kv_dtype=jnp.bfloat16, kv_spec=None):
+    """Ring/contiguous decode cache. ``kv_dtype`` sets the float KV storage
+    (bf16 default, fp32 oracle); ``kv_spec`` (a ``quant.KVQuantSpec``)
+    switches attention entries to quantized storage instead (DESIGN.md §14).
+    """
     pat = cfg.block_pattern
     reps = cfg.pattern_repeats
     layers = []
     for kind in pat:
         if kind in ("global", "local"):
-            one = attn.init_attn_cache(cfg, kind, batch, max_seq)
+            one = attn.init_attn_cache(cfg, kind, batch, max_seq,
+                                       dtype=kv_dtype, spec=kv_spec)
         elif kind == "ssm":
             one = ssd_lib.init_ssd_cache(cfg, batch)
         else:
@@ -599,7 +605,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
         layers.append(jax.tree.map(lambda x: jnp.stack([x] * reps), one))
     for kind in cfg.remainder_kinds:
         if kind in ("global", "local"):
-            layers.append(attn.init_attn_cache(cfg, kind, batch, max_seq))
+            layers.append(attn.init_attn_cache(cfg, kind, batch, max_seq,
+                                               dtype=kv_dtype, spec=kv_spec))
         elif kind == "ssm":
             layers.append(ssd_lib.init_ssd_cache(cfg, batch))
         else:
@@ -608,14 +615,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
-                     block_size: int):
+                     block_size: int, kv_dtype=jnp.bfloat16, kv_spec=None):
     """Decode cache with paged attention layers (DESIGN.md §10).
 
     Attention entries are physical block pools ``(R?, num_blocks, bs, KV,
     hd)`` addressed through the engine's shared block table; recurrent-state
     entries stay per-slot rows exactly as in ``init_cache``. Local
     (sliding-window) layers page full history like global ones and mask to
-    the window at attend time.
+    the window at attend time. ``kv_dtype``/``kv_spec`` select the pool
+    storage exactly as in ``init_cache`` (quantized pools carry packed codes
+    + fp16 group scales, DESIGN.md §14).
     """
     from repro.serving import kv_pool
 
@@ -624,7 +633,8 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
     layers = []
     for kind in pat:
         if kind in ("global", "local"):
-            one = kv_pool.init_pool(cfg, num_blocks, block_size)
+            one = kv_pool.init_pool(cfg, num_blocks, block_size,
+                                    dtype=kv_dtype, spec=kv_spec)
         elif kind == "ssm":
             one = ssd_lib.init_ssd_cache(cfg, batch)
         else:
@@ -632,7 +642,8 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
         layers.append(jax.tree.map(lambda x: jnp.stack([x] * reps), one))
     for kind in cfg.remainder_kinds:
         if kind in ("global", "local"):
-            layers.append(kv_pool.init_pool(cfg, num_blocks, block_size))
+            layers.append(kv_pool.init_pool(cfg, num_blocks, block_size,
+                                            dtype=kv_dtype, spec=kv_spec))
         elif kind == "ssm":
             layers.append(ssd_lib.init_ssd_cache(cfg, batch))
         else:

@@ -13,6 +13,9 @@ re-deriving bit-widths from gates. They are consolidated here:
                               the affine dequant terms, at a 2/4/8-bit
                               storage class. What the exporter produces and
                               the kernels consume.
+  * ``kv``                  — the KV-cache codec: ``KVQuantSpec`` plus pure
+                              group-wise quantize/dequantize for the paged
+                              serving cache (DESIGN.md §14).
   * ``pack``                — sub-byte bit packing (2/4-bit codes into int8
                               words) with round-trip guarantees.
   * ``export``              — the model-agnostic exporter: capture weights
@@ -24,6 +27,9 @@ re-deriving bit-widths from gates. They are consolidated here:
 """
 
 from .export import ExportLedger, export_sites  # noqa: F401
+from .kv import (KVQuantSpec, bytes_per_cached_token,  # noqa: F401
+                 dequantize_kv, kv_cache_report, quantize_kv,
+                 spec_from_cache)
 from .pack import (blockwise_int8_decode, blockwise_int8_encode,  # noqa: F401
                    pack_codes, unpack_codes)
 from .report import quant_report  # noqa: F401

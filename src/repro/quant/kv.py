@@ -1,0 +1,246 @@
+"""KV-cache quantization codec (DESIGN.md §14).
+
+Weights already serve through ``QuantSpec``/``QuantizedTensor`` (§11); this
+module extends the same cost-certificate philosophy to the serving cache.
+A ``KVQuantSpec`` describes how one attention layer's K/V vectors are
+stored: ``bits`` (8 or 4) integer codes with **symmetric per-group absmax
+scales along head_dim** (group-wise sub-channel granularity — one fp16
+scale per ``group_size`` contiguous head elements, so a single outlier
+channel cannot blow up the whole vector's grid).
+
+Codec contract (property-tested in ``tests/test_kv_quant.py``):
+
+  * ``scale = max(absmax / qmax, SCALE_FLOOR)`` rounded to fp16. The floor
+    is an fp16-normal value, and with fp16 storage the codec is **exactly
+    idempotent**: ``quantize(dequantize(x)) == (codes, scale)`` bit-for-bit.
+    That is what makes copy-on-write safe — codes+aux can be copied
+    verbatim with no dequant->requant round trip, and a resumed (preempted)
+    stream re-deriving a block from the same floats lands on the same bits.
+  * per-element round-trip error is bounded by ``scale/2`` per group (plus
+    fp rounding), the usual symmetric-grid guarantee.
+  * ragged tails: ``head_dim`` need not divide ``group_size``; the codec
+    pads internally and the tail group's scale covers only real elements.
+    (The serving engine additionally *requires* ``head_dim % group_size
+    == 0`` so the fused kernel path never sees a ragged group.)
+
+int4 codes are packed two-per-byte along head_dim by reusing ``pack.py``'s
+little-endian biased layout (byte ``i`` = codes ``2i`` low nibble, ``2i+1``
+high nibble, biased by +8), so the pool array for a 4-bit cache really is
+``ceil(head_dim/2)`` bytes per vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .pack import pack_codes
+
+# fp16 scales: half the aux bytes of fp32 at KV-cache-irrelevant precision
+# loss, and (with the floor below) still an exactly idempotent codec.
+SCALE_DTYPE = jnp.float16
+# fp16-normal scale floor: keeps all-zero / denormal groups on a fixed
+# grid so requantization recovers the identical scale bit-for-bit.
+SCALE_FLOOR = 1e-4
+
+_QMAX = {8: 127, 4: 7}
+_CODE_DTYPE = {8: jnp.int8, 4: jnp.uint8}  # 4-bit stores packed bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Storage spec for one attention layer's quantized KV cache.
+
+    A plain frozen dataclass (NOT a pytree): it only parameterizes cache
+    *construction*; at decode time the quantized path is recovered
+    structurally from the cache pytree itself (``spec_from_cache``), so no
+    spec object ever crosses a jit boundary.
+    """
+
+    bits: int = 8
+    group_size: int = 32
+    head_dim: int = 64
+
+    def __post_init__(self):
+        if self.bits not in _QMAX:
+            raise ValueError(f"KV bits must be one of {sorted(_QMAX)}, "
+                             f"got {self.bits}")
+        if self.group_size <= 0 or self.head_dim <= 0:
+            raise ValueError("group_size and head_dim must be positive")
+
+    @property
+    def qmax(self) -> int:
+        return _QMAX[self.bits]
+
+    @property
+    def num_groups(self) -> int:
+        return -(-self.head_dim // self.group_size)
+
+    @property
+    def padded_head(self) -> int:
+        return self.num_groups * self.group_size
+
+    @property
+    def packed_head(self) -> int:
+        """Trailing axis of the stored codes array (bytes per vector)."""
+        return self.head_dim if self.bits == 8 else -(-self.head_dim // 2)
+
+    @property
+    def code_dtype(self):
+        return _CODE_DTYPE[self.bits]
+
+    @property
+    def scale_dtype(self):
+        return SCALE_DTYPE
+
+    def bytes_per_vector(self) -> int:
+        """Device bytes for ONE K or V head vector: codes + fp16 scales."""
+        return self.packed_head + self.num_groups * jnp.dtype(SCALE_DTYPE).itemsize
+
+    def aux_bytes_per_vector(self) -> int:
+        return self.num_groups * jnp.dtype(SCALE_DTYPE).itemsize
+
+
+def quantize_kv(x: jnp.ndarray, spec: KVQuantSpec):
+    """Quantize float K/V vectors ``(..., head_dim)``.
+
+    Returns ``(codes, scale)``: codes ``(..., packed_head)`` in
+    ``spec.code_dtype`` (int4 packed two-per-byte), scale ``(..., ng)``
+    fp16. Pure and shape-polymorphic over leading dims; safe under jit.
+    """
+    assert x.shape[-1] == spec.head_dim, (x.shape, spec)
+    lead = x.shape[:-1]
+    xf = x.astype(jnp.float32)
+    pad = spec.padded_head - spec.head_dim
+    if pad:
+        width = [(0, 0)] * (xf.ndim - 1) + [(0, pad)]
+        xf = jnp.pad(xf, width)
+    g = xf.reshape(lead + (spec.num_groups, spec.group_size))
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scale = jnp.maximum(absmax / spec.qmax, SCALE_FLOOR).astype(SCALE_DTYPE)
+    s32 = scale.astype(jnp.float32)
+    codes = jnp.clip(jnp.round(g / s32[..., None]), -spec.qmax, spec.qmax)
+    codes = codes.reshape(lead + (spec.padded_head,))[..., :spec.head_dim]
+    codes = codes.astype(jnp.int8)
+    if spec.bits == 4:
+        codes = pack_codes(codes[..., None], 4)[..., 0]
+    return codes, scale
+
+
+def unpack_int4(packed: jnp.ndarray, head_dim: int) -> jnp.ndarray:
+    """uint8 ``(..., ceil(hd/2))`` -> centered int32 codes ``(..., hd)``.
+
+    Pure jnp bit ops (no gather/pad), so it lowers inside the Pallas
+    kernel as well as in the jnp oracle. Inverse of ``pack.pack_codes``'s
+    byte layout: low nibble first, bias +8.
+    """
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    c = jnp.stack([lo, hi], axis=-1)
+    c = c.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
+    return c[..., :head_dim] - 8
+
+
+def dequant_codes(codes: jnp.ndarray, scale: jnp.ndarray,
+                  head_dim: int, group_size: int) -> jnp.ndarray:
+    """Centered int codes ``(..., hd)`` + scales ``(..., ng)`` -> fp32.
+
+    The fused-kernel building block: a reshape, a broadcast multiply, a
+    reshape back — applied in-register after the block gather. Handles a
+    ragged tail via internal zero-padding (never hit on the engine path,
+    which asserts divisibility).
+    """
+    ng = scale.shape[-1]
+    padded = ng * group_size
+    c = codes.astype(jnp.float32)
+    if padded != head_dim:
+        width = [(0, 0)] * (c.ndim - 1) + [(0, padded - head_dim)]
+        c = jnp.pad(c, width)
+    g = c.reshape(c.shape[:-1] + (ng, group_size))
+    out = g * scale.astype(jnp.float32)[..., None]
+    return out.reshape(c.shape[:-1] + (padded,))[..., :head_dim]
+
+
+def dequantize_kv(codes: jnp.ndarray, scale: jnp.ndarray,
+                  spec: KVQuantSpec) -> jnp.ndarray:
+    """Inverse of ``quantize_kv``: fp32 ``(..., head_dim)``."""
+    if spec.bits == 4:
+        codes = unpack_int4(codes, spec.head_dim)
+    return dequant_codes(codes, scale, spec.head_dim, spec.group_size)
+
+
+def spec_from_cache(entry: dict, head_dim: int) -> KVQuantSpec | None:
+    """Recover the spec structurally from a cache/pool entry, or None.
+
+    Quantized entries carry a ``"k_scale"`` leaf next to ``"k"``; bits
+    come from the codes dtype (int8 -> 8, packed uint8 -> 4) and the group
+    size from the scale trailing axis. Only valid for engine-built caches
+    (``head_dim % group_size == 0``); ragged codec uses carry their spec
+    explicitly.
+    """
+    if not isinstance(entry, dict) or "k_scale" not in entry:
+        return None
+    bits = 8 if entry["k"].dtype == jnp.int8 else 4
+    ng = entry["k_scale"].shape[-1]
+    assert head_dim % ng == 0, (head_dim, ng)
+    return KVQuantSpec(bits=bits, group_size=head_dim // ng,
+                       head_dim=head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Footprint accounting (the quant_report KV section, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def bytes_per_cached_token(kv_heads: int, head_dim: int, *,
+                           spec: KVQuantSpec | None = None,
+                           dtype=jnp.bfloat16) -> int:
+    """Device bytes ONE attention layer holds per cached token (K + V).
+
+    Quantized: ceil-packed codes plus fp16 per-group scales — the real
+    resident bytes, aux included, mirroring the weight ledger's
+    convention. Float: ``2 * kv_heads * head_dim * itemsize``.
+    """
+    if spec is not None:
+        assert spec.head_dim == head_dim, (spec, head_dim)
+        return 2 * kv_heads * spec.bytes_per_vector()
+    return 2 * kv_heads * head_dim * jnp.dtype(dtype).itemsize
+
+
+def kv_cache_report(kinds: list[str], kv_heads: int, head_dim: int, *,
+                    spec: KVQuantSpec | None = None,
+                    dtype=jnp.bfloat16, kv_dtype: str = "bf16") -> dict:
+    """The ``quant_report`` KV section: bytes/cached-token, per layer.
+
+    ``kinds`` is the model's per-layer mixer list; only attention layers
+    ("global"/"local") hold KV blocks. Returns plain JSON with per-layer
+    rows and totals against bf16 and fp32 pools of the same geometry.
+    """
+    attn = [(i, k) for i, k in enumerate(kinds) if k in ("global", "local")]
+    per = {f"{i}:{k}": bytes_per_cached_token(kv_heads, head_dim,
+                                              spec=spec, dtype=dtype)
+           for i, k in attn}
+    total = sum(per.values())
+    bf16 = len(attn) * bytes_per_cached_token(kv_heads, head_dim,
+                                              dtype=jnp.bfloat16)
+    fp32 = len(attn) * bytes_per_cached_token(kv_heads, head_dim,
+                                              dtype=jnp.float32)
+    aux = (2 * kv_heads * spec.aux_bytes_per_vector() * len(attn)
+           if spec is not None else 0)
+    return {
+        "kv_dtype": kv_dtype,
+        "bits": spec.bits if spec is not None else None,
+        "group_size": spec.group_size if spec is not None else None,
+        "kv_heads": kv_heads,
+        "head_dim": head_dim,
+        "attention_layers": len(attn),
+        "per_layer": per,
+        "bytes_per_cached_token": total,
+        "bytes_aux_per_token": aux,
+        "bf16_bytes_per_cached_token": bf16,
+        "fp32_bytes_per_cached_token": fp32,
+        "vs_bf16": total / max(bf16, 1),
+        "vs_fp32": total / max(fp32, 1),
+    }

@@ -15,11 +15,14 @@ from __future__ import annotations
 from repro.core import bop as bop_lib
 
 
-def quant_report(ledger, gates: dict) -> dict:
+def quant_report(ledger, gates: dict, kv: dict | None = None) -> dict:
     """Bytes + BOPs of an export vs fp32 and uniform-int8 baselines.
 
     ``ledger``: the ``ExportLedger`` from ``quant.export.export_sites``;
-    ``gates``: the trained gate pytree (for the certified BOP count).
+    ``gates``: the trained gate pytree (for the certified BOP count);
+    ``kv``: optional KV-cache section (``quant.kv.kv_cache_report``, see
+    DESIGN.md §14) — bytes per cached token per attention layer, so one
+    report covers the whole serving footprint: weights AND cache.
 
     Returns a plain-JSON dict:
       per_site:  key -> {served, bits, storage_bits?, bytes, weight_count}
@@ -81,7 +84,7 @@ def quant_report(ledger, gates: dict) -> dict:
         "fallback_sites": len(ledger.fallbacks()),
         "exported_sites": len(ledger.exported()),
     }
-    return {
+    out = {
         "per_site": per_site,
         "totals": totals,
         "bops": {
@@ -91,3 +94,6 @@ def quant_report(ledger, gates: dict) -> dict:
             "rbop": bops_model / bops_fp32 if bops_fp32 else 0.0,
         },
     }
+    if kv is not None:
+        out["kv_cache"] = kv
+    return out

@@ -57,8 +57,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.sites import QuantContext
 from repro.models import transformer as tfm
-from repro.quant import (QuantizedTensor, QuantSpec, export_sites,
-                         quant_report, specs_from_state)
+from repro.quant import (KVQuantSpec, QuantizedTensor, QuantSpec,
+                         export_sites, quant_report, specs_from_state)
+from repro.quant.kv import kv_cache_report
 from repro.serving import kv_pool
 from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
                                      FINISHED_LENGTH, FINISHED_REJECTED,
@@ -319,6 +320,7 @@ class ServingEngine:
                  max_seq: int = 256, quant_state: dict | None = None,
                  plan=None, use_int8: bool = True,
                  matmul_impl: str | None = None, kv_layout: str = "auto",
+                 kv_dtype: str = "bf16",
                  block_size: int = 8, num_blocks: int | None = None,
                  prefix_sharing: bool = True, prefix_lru_blocks: int = 0,
                  max_stop: int = 4,
@@ -331,6 +333,20 @@ class ServingEngine:
         self.max_seq = max_seq
         self.plan = plan
         self.quant_state = quant_state
+        # KV storage class (DESIGN.md §14): bf16 (default) / fp32 float
+        # pools, or int8/int4 group-wise quantized codes + fp16 scales.
+        assert kv_dtype in ("bf16", "fp32", "int8", "int4"), kv_dtype
+        self.kv_dtype = kv_dtype
+        self._kv_store = jnp.float32 if kv_dtype == "fp32" else jnp.bfloat16
+        if kv_dtype in ("int8", "int4"):
+            # largest power-of-two group <= 32 that divides head_dim, so the
+            # fused kernel path never sees a ragged group (§14 alignment rule)
+            gs = math.gcd(cfg.head_dim, 32)
+            assert cfg.head_dim % gs == 0, (cfg.head_dim, gs)
+            self.kv_spec = KVQuantSpec(bits=8 if kv_dtype == "int8" else 4,
+                                       group_size=gs, head_dim=cfg.head_dim)
+        else:
+            self.kv_spec = None
         if matmul_impl is None:
             matmul_impl = "pallas" if jax.default_backend() == "tpu" else "ref"
         self.qweights: dict[str, QuantizedTensor] = {}
@@ -390,7 +406,9 @@ class ServingEngine:
                     f"the pool with victim preemption")
             self.num_blocks = num_blocks or min_blocks
             self.cache = tfm.init_paged_cache(cfg, slots, self.num_blocks,
-                                              block_size)
+                                              block_size,
+                                              kv_dtype=self._kv_store,
+                                              kv_spec=self.kv_spec)
             self.alloc = kv_pool.init_alloc(self.num_blocks, slots,
                                             self.max_blocks)
         else:
@@ -398,8 +416,11 @@ class ServingEngine:
             # in-tick exhaustion path can't exist; host-side ``preempt()``
             # still works (deadlines / fault injection).
             self.preemption = False
-            self.cache = tfm.init_cache(cfg, slots, max_seq)
+            self.cache = tfm.init_cache(cfg, slots, max_seq,
+                                        kv_dtype=self._kv_store,
+                                        kv_spec=self.kv_spec)
             self.alloc = None
+        self._assert_kv_contract()
         self.admission = admission
         self._clock = clock
         # host side of the prefix cache: chain-hash of full-block prompt
@@ -1412,12 +1433,47 @@ class ServingEngine:
             "prefix_hit_rate": hits / total if total else 0.0,
         }
 
+    def _assert_kv_contract(self):
+        """The §10/§14 storage contract, asserted at construction: every
+        attention cache entry holds exactly the declared dtype — the float
+        store for bf16/fp32, or codes + fp16 scales for int8/int4."""
+        for entry in jax.tree.leaves(
+                self.cache["layers"], is_leaf=lambda e: isinstance(e, dict)):
+            if not (isinstance(entry, dict) and "k" in entry
+                    and "v" in entry):
+                continue  # recurrent state rows
+            if self.kv_spec is not None:
+                assert "k_scale" in entry, "quantized cache missing scales"
+                assert entry["k"].dtype == self.kv_spec.code_dtype, (
+                    entry["k"].dtype, self.kv_spec)
+                assert entry["k_scale"].dtype == jnp.dtype(
+                    self.kv_spec.scale_dtype), entry["k_scale"].dtype
+            else:
+                assert entry["k"].dtype == jnp.dtype(self._kv_store), (
+                    entry["k"].dtype, self._kv_store)
+
+    def _expanded_kinds(self) -> list[str]:
+        pat = list(self.cfg.block_pattern)
+        return (pat * self.cfg.pattern_repeats
+                + list(self.cfg.remainder_kinds))
+
+    def kv_report(self) -> dict:
+        """KV-cache footprint section (DESIGN.md §14): bytes per cached
+        token per attention layer — codes + affine aux under ceil-packed
+        accounting — against bf16 and fp32 pools of the same geometry.
+        Works for float-weight engines too (no export required)."""
+        return kv_cache_report(self._expanded_kinds(), self.cfg.n_kv_heads,
+                               self.cfg.head_dim, spec=self.kv_spec,
+                               dtype=self._kv_store, kv_dtype=self.kv_dtype)
+
     def quant_report(self) -> dict:
         """Bytes/BOPs ledger of the served artifact (DESIGN.md §11):
         per-site packed device bytes and model BOPs vs the fp32 and
-        uniform-int8 baselines. Requires an int export."""
+        uniform-int8 baselines, plus the §14 KV-cache section. Requires an
+        int export (use ``kv_report`` alone for float-weight engines)."""
         assert self.export_ledger is not None, "no quantized export to report"
-        return quant_report(self.export_ledger, self.quant_state["gates"])
+        return quant_report(self.export_ledger, self.quant_state["gates"],
+                            kv=self.kv_report())
 
     def run_to_completion(self, max_ticks: int = 1000):
         ticks = 0

@@ -30,6 +30,19 @@ Physical block 0 is reserved as the **garbage block**: writes by rows that
 must not touch the pool (inactive slots, masked prefill padding) are routed
 to it, and it is never referenced by a valid table entry, so it is never
 attended.
+
+**Pool dtype contract (DESIGN.md §10/§14).** A float pool stores K/V in
+exactly ``bfloat16`` or ``float32`` — asserted at construction, no silent
+widening. A *quantized* pool (built with a ``KVQuantSpec``) is the flat dict
+
+    {"k": codes, "v": codes, "k_scale": scales, "v_scale": scales}
+
+with codes ``(num_blocks, bs, KV, packed_head)`` in the spec's storage dtype
+(int8, or uint8 nibble-packed for int4) and fp16 per-group scales
+``(num_blocks, bs, KV, num_groups)``. All four arrays share the leading
+block/slot axes, so every allocator primitive above — and crucially
+``cow_block``'s verbatim per-entry copy — treats codes and affine aux
+identically: CoW never pays a dequant->requant round trip.
 """
 
 from __future__ import annotations
@@ -38,11 +51,31 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.quant import kv as kv_codec
+
+# The §10 float-pool contract: KV blocks are bf16 by default, fp32 for the
+# equivalence oracle. Anything else must go through a KVQuantSpec.
+FLOAT_POOL_DTYPES = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32))
 
 
 def init_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
-              dtype=jnp.bfloat16):
-    """One attention layer's K/V block pool (unstacked)."""
+              dtype=jnp.bfloat16, spec: kv_codec.KVQuantSpec | None = None):
+    """One attention layer's K/V block pool (unstacked).
+
+    With ``spec`` set, the pool is quantized: packed codes + fp16 group
+    scales (zero-filled — the garbage block dequantizes to exact zeros).
+    """
+    if spec is not None:
+        assert spec.head_dim == cfg.head_dim, (spec, cfg.head_dim)
+        cshape = (num_blocks, block_size, cfg.n_kv_heads, spec.packed_head)
+        sshape = (num_blocks, block_size, cfg.n_kv_heads, spec.num_groups)
+        return {"k": jnp.zeros(cshape, spec.code_dtype),
+                "v": jnp.zeros(cshape, spec.code_dtype),
+                "k_scale": jnp.zeros(sshape, spec.scale_dtype),
+                "v_scale": jnp.zeros(sshape, spec.scale_dtype)}
+    assert jnp.dtype(dtype) in FLOAT_POOL_DTYPES, (
+        f"float KV pools are bf16 or fp32 (got {jnp.dtype(dtype)}); "
+        "sub-float storage goes through a KVQuantSpec")
     shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
@@ -299,37 +332,42 @@ def cow_block(alloc, layers, slot, blk):
 def write_prompt_blocks(pool, k, v, row, start_blk, nblk, block_size: int):
     """Scatter a prompt's K/V into the pool as whole blocks.
 
-    ``pool``: {"k","v"} of (R?, num_blocks, bs, KV, hd); ``k``/``v``: the
-    prefill K/V for one slot, (R?, S, KV, hd) — S is padded here to a block
-    multiple. Blocks ``start_blk <= j < nblk`` land at ``row[j]``; the rest
+    ``pool``: {"k","v"} (+ ``"*_scale"`` when quantized) of
+    (R?, num_blocks, bs, KV, last); ``k``/``v``: the *float* prefill K/V for
+    one slot, (R?, S, KV, hd) — S is padded here to a block multiple. A
+    quantized pool quantizes at this write site (the §14 write-site rule:
+    floats never land in a quantized pool), then codes and scales ride the
+    identical pad/reshape/scatter — the token axis is -3 for all four
+    entries. Blocks ``start_blk <= j < nblk`` land at ``row[j]``; the rest
     (shared prefix the slot must not overwrite, and the pad tail) are routed
     to the garbage block 0. ``start_blk`` / ``nblk`` may be traced.
     """
     bs = block_size
     stacked = k.ndim == 4
     s = k.shape[-3]
-    pad = (-s) % bs
-    if pad:
-        width = [(0, 0)] * k.ndim
-        width[-3] = (0, pad)
-        k = jnp.pad(k, width)
-        v = jnp.pad(v, width)
-    nblocks = (s + pad) // bs
-    if stacked:
-        r = k.shape[0]
-        kb = k.reshape(r, nblocks, bs, *k.shape[-2:])
-        vb = v.reshape(r, nblocks, bs, *v.shape[-2:])
+    spec = kv_codec.spec_from_cache(pool, k.shape[-1])
+    if spec is not None:
+        kk, ks = kv_codec.quantize_kv(k, spec)
+        vv, vs = kv_codec.quantize_kv(v, spec)
+        entries = {"k": kk, "v": vv, "k_scale": ks, "v_scale": vs}
     else:
-        kb = k.reshape(nblocks, bs, *k.shape[-2:])
-        vb = v.reshape(nblocks, bs, *v.shape[-2:])
+        entries = {"k": k, "v": v}
+    pad = (-s) % bs
+    nblocks = (s + pad) // bs
     j = jnp.arange(nblocks)
     write = (j >= start_blk) & (j < nblk)
     phys = jnp.where(write, jnp.clip(row[:nblocks], 0, None), 0)
-    ck, cv = pool["k"], pool["v"]
-    if stacked:
-        ck = ck.at[:, phys].set(kb.astype(ck.dtype))
-        cv = cv.at[:, phys].set(vb.astype(cv.dtype))
-    else:
-        ck = ck.at[phys].set(kb.astype(ck.dtype))
-        cv = cv.at[phys].set(vb.astype(cv.dtype))
-    return {"k": ck, "v": cv}
+    out = {}
+    for name, x in entries.items():
+        if pad:
+            width = [(0, 0)] * x.ndim
+            width[-3] = (0, pad)
+            x = jnp.pad(x, width)
+        if stacked:
+            xb = x.reshape(x.shape[0], nblocks, bs, *x.shape[-2:])
+        else:
+            xb = x.reshape(nblocks, bs, *x.shape[-2:])
+        tgt = pool[name]
+        out[name] = (tgt.at[:, phys].set(xb.astype(tgt.dtype)) if stacked
+                     else tgt.at[phys].set(xb.astype(tgt.dtype)))
+    return out

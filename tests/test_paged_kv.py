@@ -688,3 +688,103 @@ def test_paged_int8_serve_mode():
         eng.submit(Request(rid=0, prompt=prompt, max_new=4))
         outs[layout] = eng.run_to_completion()[0].output
     assert outs["ring"] == outs["paged"]
+
+
+# ---------------------------------------------------------------------------
+# Quantized pools: fused dequant kernel + CoW bit-identity (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+from repro.quant import KVQuantSpec, quantize_kv  # noqa: E402
+
+
+def _quant_kernel_fixture(bits, seed=0):
+    rng = np.random.default_rng(seed)
+    b, kvh, g, hd, bs, mb, nb = 3, 2, 4, 16, 8, 4, 16
+    spec = KVQuantSpec(bits=bits, group_size=8, head_dim=hd)
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    table = np.full((b, mb), -1, np.int32)
+    phys = rng.permutation(np.arange(1, nb))
+    pos = np.asarray([5, 12, 25], np.int32)
+    k = 0
+    for r in range(b):
+        for j in range(int(pos[r]) // bs + 1):
+            table[r, j] = phys[k]
+            k += 1
+    return spec, q, kf, vf, jnp.asarray(table), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("bits,window,softcap",
+                         [(8, None, None), (8, 8, None), (8, None, 30.0),
+                          (4, None, None), (4, 8, 50.0)])
+def test_paged_attention_pallas_matches_ref_quantized(bits, window, softcap):
+    """Fused dequant-on-block-load: the Pallas kernel (scales paged through
+    the same block-table index_map as the codes, affine applied in-register)
+    must reproduce the jnp oracle's gather-then-dequant semantics — and the
+    quantized oracle itself must stay within codec tolerance of the float
+    pool."""
+    spec, q, kf, vf, table, pos = _quant_kernel_fixture(bits)
+    kp, ks = quantize_kv(kf, spec)
+    vp, vs = quantize_kv(vf, spec)
+    want = paged_attention_ref(q, kp, vp, table, pos, window=window,
+                               softcap=softcap, k_scale=ks, v_scale=vs)
+    got = paged_attention_op(q, kp, vp, table, pos, window=window,
+                             softcap=softcap, use_pallas=True, interpret=True,
+                             k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    want_f = paged_attention_ref(q, kf, vf, table, pos, window=window,
+                                 softcap=softcap)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(want_f),
+                               atol=0.05 if bits == 8 else 0.35)
+
+
+def test_cow_block_quantized_copies_codes_and_aux_bit_identical():
+    """§14 CoW contract: the private copy of a shared quantized block is
+    bit-identical in BOTH codes and per-group scales — the generic
+    per-entry copy never round-trips through floats."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    hd = cfg.head_dim
+    spec = KVQuantSpec(bits=8, group_size=hd, head_dim=hd)
+    alloc = kv_pool.init_alloc(9, 2, 2)
+    pool = kv_pool.init_pool(cfg, 9, BS, spec=spec)
+    assert pool["k"].dtype == jnp.int8
+    assert pool["k_scale"].dtype == jnp.float16
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 1)
+    old = int(jax.device_get(alloc["table"][0, 0]))
+    rng = np.random.default_rng(3)
+    for name in ("k", "v"):
+        block = jnp.asarray(
+            rng.normal(size=(BS, cfg.n_kv_heads, hd)), jnp.float32)
+        codes, scale = quantize_kv(block, spec)
+        pool[name] = pool[name].at[old].set(codes)
+        pool[name + "_scale"] = pool[name + "_scale"].at[old].set(scale)
+    row0 = np.asarray(jax.device_get(alloc["table"][0]))
+    alloc = kv_pool.share_prefix(alloc, 1, jnp.asarray(row0), 1)
+    alloc, layers = kv_pool.cow_block(alloc, [pool], 1, 0)
+    a = {k: np.asarray(jax.device_get(v)) for k, v in alloc.items()}
+    new = int(a["table"][1, 0])
+    assert new != old and a["ref"][old] == 1 and a["ref"][new] == 1
+    for name in ("k", "v", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(layers[0][name][new]), np.asarray(layers[0][name][old]))
+
+
+def test_quantized_prefix_sharing_cow_streams_unaffected():
+    """§14 regression, extending the stale-key test to int8 pools: a
+    same-prefix admission shares blocks, the sharer CoWs on its first
+    divergent write, and BOTH the registrant's and the sharer's streams
+    equal their solo int8 runs."""
+    cfg, params = _model("tinyllama-1.1b")
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, (16,))   # block-aligned -> CoW
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64, kv_dtype="int8")
+    eng.submit(Request(rid=0, prompt=shared, max_new=6))
+    eng.submit(Request(rid=1, prompt=shared, max_new=12))
+    fin = {r.rid: r.output for r in eng.run_to_completion()}
+    assert eng.stats["shared_admissions"] == 1
+    assert eng.stats["cow_copies"] >= 1
+    assert fin[0] == _solo_output(cfg, params, shared, 6, kv_dtype="int8"), \
+        "registrant stream perturbed by a sharer's CoW"
+    assert fin[1] == _solo_output(cfg, params, shared, 12, kv_dtype="int8")
