@@ -1,0 +1,186 @@
+"""Seeded trace generation + replay for serving load tests and benchmarks.
+
+The load harness behind the ``continuous_batching`` bench row and the
+trace-replay determinism tests (DESIGN.md §15). Three pieces:
+
+  * ``make_trace`` — a fully seeded open-loop workload: ragged Poisson
+    arrivals (exponential inter-arrival times), mixed prompt-length
+    buckets, optional prefix-shared bursts (a few common prompt prefixes
+    reused by a fraction of requests, exercising the §10 prefix cache
+    under load), and a mix of greedy and seeded stochastic sampling.
+    Every request carries an EXPLICIT sampling seed, so its token stream
+    is a function of the trace alone — slot placement, admission order,
+    chunk size and preemption cannot perturb it.
+  * ``TickClock`` — an injectable virtual clock for the engine's
+    ``clock=`` seam: time only moves when the driver calls ``advance``,
+    so a replay is a deterministic function of (trace, engine config) and
+    two runs produce identical SLO stamps, not just identical streams.
+  * ``replay`` — the open-loop driver: submit each request when the clock
+    reaches its arrival, tick the engine between arrivals, fast-forward
+    across idle gaps (virtual mode) or sleep them off (wall mode).
+
+The same trace replayed against engines with different ``slots``,
+``prefill_chunk_tokens`` or pool sizes must yield identical per-request
+streams and finish reasons — that is the stream-equivalence property the
+tests pin, and what makes the bench row's throughput numbers comparable
+across scheduler configurations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One arrival in a load trace. ``arrival_s`` is seconds from trace
+    start; ``temperature=0`` rows decode greedily, stochastic rows carry
+    their own ``seed`` so replays are reproducible by construction."""
+
+    rid: int
+    arrival_s: float
+    prompt: np.ndarray
+    max_new: int
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int | None = None
+
+
+class TickClock:
+    """Deterministic virtual clock for the engine's injectable ``clock=``
+    seam: reading it never advances time — the replay driver moves it by
+    ``tick_s`` per engine tick (and across idle gaps). All SLO stamps
+    taken against it are exact functions of the trace."""
+
+    def __init__(self, tick_s: float = 1e-3, start: float = 0.0):
+        self.tick_s = tick_s
+        self.now = start
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float | None = None) -> None:
+        self.now += self.tick_s if dt is None else dt
+
+
+def make_trace(seed: int, n_requests: int, vocab_size: int, *,
+               mean_iat_s: float = 0.002,
+               plen_buckets=(4, 12, 24, 48),
+               bucket_weights=None,
+               prefix_groups: int = 3,
+               prefix_len: int = 12,
+               prefix_fraction: float = 0.25,
+               max_new=(2, 12),
+               sampled_fraction: float = 0.5,
+               temperature: float = 0.8,
+               top_p: float = 0.9) -> list[TraceRequest]:
+    """Build a seeded open-loop trace of ``n_requests`` arrivals.
+
+    Inter-arrival times are exponential with mean ``mean_iat_s`` (Poisson
+    arrivals — the ragged pattern continuous batching exists for). Prompt
+    lengths draw from ``plen_buckets`` (uniform unless ``bucket_weights``);
+    a ``prefix_fraction`` of requests share one of ``prefix_groups`` common
+    prefixes of ``prefix_len`` tokens followed by a random tail.
+    ``max_new`` is an inclusive (lo, hi) range; ``sampled_fraction`` of
+    requests use seeded stochastic sampling, the rest greedy argmax.
+    """
+    rng = np.random.default_rng(seed)
+    iat = rng.exponential(mean_iat_s, size=n_requests)
+    arrivals = np.cumsum(iat)
+    weights = None
+    if bucket_weights is not None:
+        w = np.asarray(bucket_weights, np.float64)
+        weights = w / w.sum()
+    prefixes = [rng.integers(0, vocab_size, size=prefix_len).astype(np.int32)
+                for _ in range(prefix_groups)]
+    trace = []
+    for rid in range(n_requests):
+        plen = int(rng.choice(np.asarray(plen_buckets), p=weights))
+        if prefix_groups and rng.random() < prefix_fraction:
+            tail = rng.integers(0, vocab_size,
+                                size=max(plen - prefix_len, 1))
+            prompt = np.concatenate(
+                [prefixes[int(rng.integers(prefix_groups))],
+                 tail.astype(np.int32)])
+        else:
+            prompt = rng.integers(0, vocab_size, size=plen).astype(np.int32)
+        sampled = rng.random() < sampled_fraction
+        trace.append(TraceRequest(
+            rid=rid,
+            arrival_s=float(arrivals[rid]),
+            prompt=prompt,
+            max_new=int(rng.integers(max_new[0], max_new[1] + 1)),
+            temperature=temperature if sampled else 0.0,
+            top_p=top_p if sampled else 1.0,
+            seed=int(rng.integers(2 ** 31 - 1))))
+    return trace
+
+
+def _to_request(t: TraceRequest):
+    from repro.serving import Request, SamplingParams
+
+    return Request(rid=t.rid, prompt=np.asarray(t.prompt, np.int32),
+                   params=SamplingParams(max_new=t.max_new,
+                                         temperature=t.temperature,
+                                         top_p=t.top_p, seed=t.seed))
+
+
+def replay(eng, trace, *, clock: TickClock | None = None,
+           max_ticks: int = 100_000) -> dict:
+    """Open-loop replay of ``trace`` against a ``ServingEngine``.
+
+    With ``clock`` (the SAME ``TickClock`` the engine was constructed
+    with) the replay is fully deterministic: each tick advances the clock
+    by ``tick_s`` and idle gaps fast-forward to the next arrival. Without
+    it, arrivals are paced against the engine's own (wall) clock —
+    sleeping through idle gaps — and the SLO stamps measure real latency.
+
+    Returns ``{"requests": {rid: Request}, "ticks", "submitted"}``; drive
+    results (tokens / finish reasons) live on the returned requests.
+    """
+    order = sorted(trace, key=lambda t: (t.arrival_s, t.rid))
+    base = clock.now if clock is not None else eng._clock()
+    reqs: dict = {}
+    i = 0
+    ticks = 0
+    while True:
+        now = (clock.now if clock is not None else eng._clock()) - base
+        while i < len(order) and order[i].arrival_s <= now:
+            t = order[i]
+            reqs[t.rid] = eng.submit(_to_request(t))
+            i += 1
+        busy = eng.waiting or any(r is not None for r in eng.slot_req)
+        if not busy:
+            if i >= len(order):
+                break
+            # engine drained ahead of the trace: jump the idle gap
+            gap = order[i].arrival_s - now
+            if clock is not None:
+                clock.advance(gap)
+            else:
+                time.sleep(max(gap, 0.0))
+            continue
+        eng.step()
+        if clock is not None:
+            clock.advance()
+        ticks += 1
+        if ticks >= max_ticks:
+            raise RuntimeError(
+                f"trace replay still running after {max_ticks} ticks "
+                f"({i}/{len(order)} submitted)")
+    return {"requests": reqs, "ticks": ticks, "submitted": i}
+
+
+def stream_summary(result: dict) -> dict:
+    """Collapse a replay result to comparable per-request terminal state:
+    ``{rid: (tokens tuple, finish_reason)}`` — the object two runs of the
+    same trace must agree on bit-for-bit."""
+    return {rid: (tuple(r.output), r.finish_reason)
+            for rid, r in result["requests"].items()}

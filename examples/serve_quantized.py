@@ -64,6 +64,11 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="use generate_stream() and print tokens as the "
                          "ticks emit them")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous-batching chunked prefill: split each "
+                         "prompt into chunks of this many tokens and "
+                         "interleave them with decode ticks (DESIGN.md "
+                         "§15; default = legacy whole-prompt waves)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -76,7 +81,8 @@ def main():
         qs = make_uniform_quant_state(cfg, params)
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
                         quant_state=qs, kv_layout=args.kv_layout,
-                        prefix_lru_blocks=args.prefix_lru_blocks)
+                        prefix_lru_blocks=args.prefix_lru_blocks,
+                        prefill_chunk_tokens=args.prefill_chunk)
     if eng.qweights:
         storages = sorted({qt.storage_bits for qt in eng.qweights.values()})
         print(f"serving quantized export: {len(eng.qweights)} sites at "
@@ -128,6 +134,9 @@ def main():
     print(f"  batched prefill: {st['prefill_forwards']} forwards for "
           f"{st['prompt_tokens']} prompt tokens (seed scan-of-decode-steps "
           f"would have run {st['seed_equiv_forwards']} x {args.slots}-wide)")
+    if args.prefill_chunk:
+        print(f"  chunked prefill: {st['prefill_chunks']} chunks of "
+              f"<= {args.prefill_chunk} tokens interleaved with decode ticks")
     if eng.paged:
         ps = eng.pool_stats()
         print(f"  paged KV: prefix-hit rate {ps['prefix_hit_rate']:.2f}, "

@@ -338,6 +338,202 @@ def attention_decode_paged(
     return y, new_pool
 
 
+def attention_prefill_chunk(
+    qc: QuantContext,
+    p,
+    x,
+    cache: dict,
+    pos0,
+    clen,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    slot=0,
+    block_table=None,
+    positions=None,
+    mrope_pos=None,
+    plan=None,
+):
+    """Chunk-resumable prefill attention for ONE serving slot (DESIGN.md §15).
+
+    ``x``: (1, C, d) hidden states for the prompt positions
+    ``pos0 .. pos0+clen-1`` (lanes past ``clen`` are padding). The chunk's
+    K/V is written into the slot's cache AT ITS OFFSET first, then the
+    queries attend THROUGH the cache — the multi-token generalization of
+    ``attention_decode``'s write-then-attend. Every query position therefore
+    reads identical cache content over a static key axis no matter where the
+    chunk boundaries fall, which is what makes chunked streams bit-identical
+    across any split (quantized KV included: each position's codes are a
+    pure function of that position's K/V).
+
+    Ring caches: ``cache`` is one layer's (slots, S, KV, ·) entry. Local
+    layers require ``clen <= ring`` (the engine clamps chunk sizes to the
+    window) or earlier in-chunk queries would lose their ring slots to later
+    writes. Paged: ``block_table`` is the slot's (max_blocks,) physical row;
+    unallocated/padding lanes route to the reserved garbage block 0.
+
+    ``pos0``/``clen``/``slot`` may be traced scalars. Returns
+    (y (1, C, d), new_cache_entry).
+    """
+    b, c, _ = x.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    clen = jnp.asarray(clen, jnp.int32)
+    lanes = jnp.arange(c)
+    if positions is None:
+        positions = (pos0 + lanes)[None, :]
+    mp = None
+    if cfg.mrope_sections is not None:
+        mp = (
+            mrope_pos
+            if mrope_pos is not None
+            else jnp.broadcast_to(positions[None], (3, b, c))
+        )
+    q, k, v = _project_qkv(qc, p, x, cfg, positions, mp)
+    kc, vc = k[0], v[0]  # (C, KV, hd)
+    qpos = positions[0]  # (C,) absolute query positions (garbage past clen)
+    spec = kv_codec.spec_from_cache(cache, cfg.head_dim)
+    if spec is not None:
+        # write-site quantization (§14): the whole chunk quantizes before it
+        # lands, so cache content matches the decode write path per position
+        kq, ksc = kv_codec.quantize_kv(kc, spec)
+        vq, vsc = kv_codec.quantize_kv(vc, spec)
+        entries = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+    else:
+        entries = {"k": kc, "v": vc}
+
+    if block_table is None:
+        ring = cache["k"].shape[1]
+        if kind == "local":
+            # Ring buffers hold only the last `ring` positions, so writing
+            # the chunk first would evict positions the chunk's EARLIER
+            # queries still need. Instead: per-query gather over a canonical
+            # key axis of exactly `window` lanes ordered by absolute
+            # position, sourcing each position from the chunk (storage
+            # dtype round-tripped, so its value matches what a later chunk
+            # would read back) or from the pre-chunk ring. The reduction
+            # layout is position-indexed and static, hence bit-identical
+            # under any chunk split.
+            old = {name: cache[name][slot] for name in entries}
+            if spec is not None:
+                ck = kv_codec.dequantize_kv(entries["k"], entries["k_scale"],
+                                            spec)
+                cv = kv_codec.dequantize_kv(entries["v"], entries["v_scale"],
+                                            spec)
+                rk = kv_codec.dequantize_kv(old["k"], old["k_scale"], spec)
+                rv = kv_codec.dequantize_kv(old["v"], old["v_scale"], spec)
+            else:
+                ck = entries["k"].astype(cache["k"].dtype)
+                cv = entries["v"].astype(cache["v"].dtype)
+                rk, rv = old["k"], old["v"]
+            allk = jnp.concatenate([ck.astype(COMPUTE_DTYPE),
+                                    rk.astype(COMPUTE_DTYPE)], axis=0)
+            allv = jnp.concatenate([cv.astype(COMPUTE_DTYPE),
+                                    rv.astype(COMPUTE_DTYPE)], axis=0)
+            w = cfg.window
+            kp = qpos[:, None] - w + 1 + jnp.arange(w)[None, :]  # (C, W)
+            src = jnp.where(kp >= pos0, jnp.clip(kp - pos0, 0, c - 1),
+                            c + (kp % ring))
+            valid = kp >= 0
+            keys_k = allk[src]  # (C, W, KV, hd)
+            keys_v = allv[src]
+            # now land the chunk: ring slot r ends holding absolute position
+            # hold(r) = f - ((f - r) mod ring), f the chunk's final position;
+            # only slots the chunk reached are replaced.
+            f = pos0 + clen - 1
+            r = jnp.arange(ring)
+            hold = f - ((f - r) % ring)
+            write = hold >= pos0
+            ci = jnp.clip(hold - pos0, 0, c - 1)
+            new_cache = {}
+            for name, xv in entries.items():
+                upd = jnp.where(
+                    write.reshape((ring,) + (1,) * (old[name].ndim - 1)),
+                    jnp.take(xv, ci, axis=0).astype(cache[name].dtype),
+                    old[name])
+                new_cache[name] = cache[name].at[slot].set(upd)
+            groups = cfg.n_heads // cfg.n_kv_heads
+            qg = q[0].reshape(c, cfg.n_kv_heads, groups, cfg.head_dim)
+            scale = cfg.head_dim ** -0.5
+            logits = jnp.einsum(
+                "ckgd,cwkd->ckgw", qg.astype(COMPUTE_DTYPE), keys_k,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            logits = softcap(logits, cfg.attn_softcap)
+            logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+            probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
+            out = jnp.einsum("ckgw,cwkd->ckgd", probs, keys_v,
+                             preferred_element_type=jnp.float32)
+            out = out.astype(COMPUTE_DTYPE).reshape(
+                1, c, cfg.n_heads * cfg.head_dim)
+            y = qmatmul(qc, "attn_o", out, p["wo"])
+            y = qc.act("attn_o", y)
+            return y, new_cache
+        else:
+            # scatter with padding lanes pushed out of bounds — JAX drops
+            # out-of-bounds scatter updates, so pad lanes never land
+            idx = jnp.where(lanes < clen, pos0 + lanes, ring)
+            new_cache = {}
+            for name, xv in entries.items():
+                new_cache[name] = cache[name].at[slot, idx].set(
+                    xv.astype(cache[name].dtype))
+            valid = jnp.arange(ring)[None, :] <= qpos[:, None]
+        if spec is not None:
+            keys_k = kv_codec.dequantize_kv(
+                new_cache["k"][slot], new_cache["k_scale"][slot], spec)
+            keys_v = kv_codec.dequantize_kv(
+                new_cache["v"][slot], new_cache["v_scale"][slot], spec)
+        else:
+            keys_k = new_cache["k"][slot]
+            keys_v = new_cache["v"][slot]
+    else:
+        bs = cache["k"].shape[1]
+        mb = block_table.shape[0]
+        nb = cache["k"].shape[0]
+        p_abs = pos0 + lanes
+        phys = block_table[jnp.clip(p_abs // bs, 0, mb - 1)]
+        ok = (lanes < clen) & (phys >= 0)
+        tgt = jnp.where(ok, phys, 0)  # garbage block for invalid lanes
+        off = p_abs % bs
+        new_cache = {}
+        for name, xv in entries.items():
+            new_cache[name] = cache[name].at[tgt, off].set(
+                xv.astype(cache[name].dtype))
+        rowb = jnp.clip(block_table, 0, nb - 1)
+        if spec is not None:
+            gk = kv_codec.dequantize_kv(
+                new_cache["k"][rowb], new_cache["k_scale"][rowb], spec)
+            gv = kv_codec.dequantize_kv(
+                new_cache["v"][rowb], new_cache["v_scale"][rowb], spec)
+        else:
+            gk = new_cache["k"][rowb]
+            gv = new_cache["v"][rowb]
+        keys_k = gk.reshape(mb * bs, cfg.n_kv_heads, cfg.head_dim)
+        keys_v = gv.reshape(mb * bs, cfg.n_kv_heads, cfg.head_dim)
+        kpos = jnp.arange(mb * bs)
+        alloc_ok = (block_table >= 0)[kpos // bs]
+        valid = alloc_ok[None, :] & (kpos[None, :] <= qpos[:, None])
+        if kind == "local":
+            valid &= (qpos[:, None] - kpos[None, :]) < cfg.window
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q[0].reshape(c, cfg.n_kv_heads, groups, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum(
+        "ckgd,skd->ckgs", qg.astype(COMPUTE_DTYPE),
+        keys_k.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("ckgs,skd->ckgd", probs, keys_v.astype(COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    out = out.reshape(1, c, cfg.n_heads * cfg.head_dim)
+    y = qmatmul(qc, "attn_o", out, p["wo"])
+    y = qc.act("attn_o", y)
+    return y, new_cache
+
+
 def write_prefill_slot(cfg: ModelConfig, kind: str, cache: dict, k, v, slot,
                        plen):
     """Write one serving slot's prefill K/V range in one shot.

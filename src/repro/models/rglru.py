@@ -116,6 +116,48 @@ def rglru_forward(
     return out, (new_conv, h_last)
 
 
+def rglru_forward_seq(
+    qc: QuantContext, p, xin, cfg: ModelConfig, *, conv_state=None, h0=None,
+    plan=None,
+):
+    """Left-fold variant of ``rglru_forward`` for chunk-resumable prefill.
+
+    ``associative_scan``'s combine tree depends on the sequence length, so a
+    prompt split into chunks at different boundaries gets bitwise-different
+    states out of it. This variant runs the recurrence as a sequential
+    ``lax.scan`` (h_t = a_t h_{t-1} + b_t, exactly the decode step's math),
+    which makes the carried state a pure left fold over the input — splitting
+    the sequence anywhere and threading ``(conv_state, h0)`` across the calls
+    reproduces the unsplit result bit-for-bit (DESIGN.md §15). Same quant
+    sites and projections as ``rglru_forward``; only the scan differs.
+    """
+    x = qmatmul(qc, "lru_x", xin, p["wx"])
+    x = qc.act("lru_x", x)
+    y_br = qmatmul(qc, "lru_y", xin, p["wy"])
+    y_br = jax.nn.gelu(y_br.astype(jnp.float32), approximate=True)
+    y_br = qc.act("lru_y", y_br.astype(COMPUTE_DTYPE))
+
+    x, new_conv = _conv1d(x, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _gates(qc, p, x)
+
+    init = (jnp.zeros_like(b[:, 0, :]) if h0 is None
+            else h0.astype(jnp.float32))
+
+    def step(h, ab):
+        at, bt = ab
+        hn = at * h + bt
+        return hn, hn
+
+    h_last, hs = jax.lax.scan(
+        step, init, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    h = jnp.moveaxis(hs, 0, 1)
+
+    merged = (h.astype(COMPUTE_DTYPE)) * y_br
+    out = qmatmul(qc, "lru_o", merged, p["wo"])
+    out = qc.act("lru_o", out)
+    return out, (new_conv, h_last)
+
+
 def rglru_decode_step(
     qc: QuantContext, p, xin, conv_state, h, cfg: ModelConfig, *, plan=None
 ):

@@ -580,6 +580,176 @@ def prefill_slot_tail(qc: QuantContext, params, tokens, cache, slot,
     return logits, {"pos": pos, "layers": new_layers}
 
 
+def _apply_block_chunk(qc, bp, h, lc, cfg: ModelConfig, kind: str, *, slot,
+                       pos0, clen, fresh, positions, mrope_pos, plan,
+                       block_row):
+    """One block of a chunk-resumable prefill (DESIGN.md §15).
+
+    Attention blocks write the chunk's K/V into the slot's cache at its
+    offset and attend through the cache (``attn.attention_prefill_chunk``);
+    recurrent blocks run the chunk-invariant full-sequence paths
+    (``ssd_chunked`` inter-chunk left fold / ``rglru_forward_seq``) threading
+    the slot's carried state — zeroed when ``fresh`` so the first chunk can
+    never see a previous occupant's state. Returns (h, new_cache_entry).
+    """
+    resid = h
+    hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+    if kind in ("global", "local"):
+        with qc.scope("attn"):
+            y, nc = attn.attention_prefill_chunk(
+                qc, bp["attn"], hn, lc, pos0, clen, cfg, kind, slot=slot,
+                block_table=block_row, positions=positions,
+                mrope_pos=mrope_pos, plan=plan,
+            )
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        resid = h
+        hn = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        with qc.scope("ffn"):
+            if cfg.n_experts:
+                y = moe_lib.moe_ffn(qc, bp["moe"], hn, cfg, impl="dense_all",
+                                    plan=plan)
+                if cfg.dense_residual:
+                    with qc.scope("dense"):
+                        y = y + glu_mlp(qc, bp["mlp"], hn, cfg.mlp).astype(y.dtype)
+            else:
+                y = glu_mlp(qc, bp["mlp"], hn, cfg.mlp)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln2_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+    elif kind == "ssm":
+        entry = jax.tree.map(
+            lambda s: jnp.where(fresh, jnp.zeros_like(s), s),
+            _slice_state_slot(lc, slot, stacked=False))
+        with qc.scope("ssd"):
+            y, (conv_st, ssm_st) = ssd_lib.ssd_chunked(
+                qc, bp["ssd"], hn, cfg, plan=plan,
+                conv_state=entry["conv"], ssm_state=entry["ssm"])
+        h = resid + y.astype(resid.dtype)
+        nc = _write_state_slot(
+            lc, {"conv": conv_st.astype(jnp.float32), "ssm": ssm_st},
+            slot, stacked=False)
+    elif kind == "recurrent":
+        entry = jax.tree.map(
+            lambda s: jnp.where(fresh, jnp.zeros_like(s), s),
+            _slice_state_slot(lc, slot, stacked=False))
+        with qc.scope("rglru"):
+            y, (conv_st, h_last) = rglru_lib.rglru_forward_seq(
+                qc, bp["rglru"], hn, cfg, plan=plan,
+                conv_state=entry["conv"], h0=entry["h"])
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        resid = h
+        hn = rms_norm(h, bp["ln2"], cfg.norm_eps)
+        with qc.scope("ffn"):
+            y = glu_mlp(qc, bp["mlp"], hn, cfg.mlp)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["ln2_post"], cfg.norm_eps)
+        h = resid + y.astype(resid.dtype)
+        nc = _write_state_slot(
+            lc, {"conv": conv_st.astype(jnp.float32), "h": h_last},
+            slot, stacked=False)
+    else:
+        raise ValueError(kind)
+    if plan is not None:
+        h = plan.shard_hidden(h)
+    return h, nc
+
+
+def prefill_chunk(qc: QuantContext, params, tokens, clen, cache, slot,
+                  cfg: ModelConfig, *, pos0=0, plan=None, mrope_pos=None,
+                  scan_unroll=False, block_table=None):
+    """Chunk-resumable prefill (DESIGN.md §15): run ``clen`` prompt tokens at
+    absolute positions ``pos0 .. pos0+clen-1`` through the full stack for ONE
+    serving slot, writing attention K/V into the slot's cache at its offset
+    (ring or paged) and threading recurrent state across chunks (fresh at
+    ``pos0 == 0``).
+
+    The chunk paths are chunk-split-invariant by construction — attention
+    attends through the cache over a static key axis, ssm chunks align to
+    ``ssm_chunk`` (the engine's chunk planner guarantees this), rglru uses
+    the sequential left fold — so any sequence of chunk sizes produces
+    bit-identical caches and logits to one whole-prompt call of this same
+    function. ``tokens``: (1, C) int32 (or (1, C, d) embeddings), lanes past
+    ``clen`` padding; ``pos0``/``clen``/``slot`` may be traced. The slot's
+    pos is set to ``pos0 + clen``. Returns (logits (1, C, V), cache) — after
+    the FINAL chunk the first generated token comes from row ``clen - 1``.
+    """
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    clen = jnp.asarray(clen, jnp.int32)
+    h = _embed(qc, params, tokens, cfg)
+    c = h.shape[1]
+    positions = (pos0 + jnp.arange(c))[None, :]
+    mp = None
+    if cfg.mrope_sections is not None:
+        mp = (mrope_pos if mrope_pos is not None
+              else jnp.broadcast_to(positions[None], (3, 1, c)))
+    if plan is not None:
+        h = plan.shard_hidden(h)
+    fresh = pos0 == 0
+    block_row = None if block_table is None else block_table[slot]
+
+    pat = cfg.block_pattern
+    new_layers = []
+    for pi, kind in enumerate(pat):
+        prefix = f"p{pi}_{kind}/"
+        gates_xs, betas_xs, probes_xs, qw_xs, sp_xs = _scan_quant_xs(
+            qc, prefix)
+
+        def body(carry, xs, _kind=kind, _prefix=prefix):
+            hh = carry
+            bp, lc, g_s, b_s, p_s, qw_s, sp_s = xs
+            sub = _child_for_slice(qc, g_s, b_s, p_s, qw_s, sp_s)
+            with sub.scope(_prefix[:-1]):
+                hh, nc = _apply_block_chunk(
+                    sub, bp, hh, lc, cfg, _kind, slot=slot, pos0=pos0,
+                    clen=clen, fresh=fresh, positions=positions,
+                    mrope_pos=mp, plan=plan, block_row=block_row,
+                )
+            return hh, nc
+
+        if cfg.pattern_repeats == 1:
+            bp = jax.tree.map(lambda x: x[0], params["blocks"][pi])
+            lc = jax.tree.map(lambda x: x[0], cache["layers"][pi])
+            h, nc = body(h, (bp, lc, gates_xs, betas_xs, probes_xs, qw_xs,
+                             sp_xs))
+            new_layers.append(jax.tree.map(lambda x: x[None], nc))
+            continue
+
+        unroll = cfg.pattern_repeats if scan_unroll else 1
+        if qc.mode in ("collect", "export"):
+            with qc.layer_stack(cfg.pattern_repeats):
+                h, nc = jax.lax.scan(
+                    body, h,
+                    (params["blocks"][pi], cache["layers"][pi], gates_xs,
+                     betas_xs, probes_xs, qw_xs, sp_xs), unroll=unroll,
+                )
+        else:
+            h, nc = jax.lax.scan(
+                body, h,
+                (params["blocks"][pi], cache["layers"][pi], gates_xs,
+                 betas_xs, probes_xs, qw_xs, sp_xs), unroll=unroll,
+            )
+        new_layers.append(nc)
+
+    for i, kind in enumerate(cfg.remainder_kinds):
+        prefix = f"rem{i}_{kind}"
+        with qc.scope(prefix):
+            h, nc = _apply_block_chunk(
+                qc, params["rem"][i], h, cache["layers"][len(pat) + i], cfg,
+                kind, slot=slot, pos0=pos0, clen=clen, fresh=fresh,
+                positions=positions, mrope_pos=mp, plan=plan,
+                block_row=block_row,
+            )
+        new_layers.append(nc)
+
+    pos = cache["pos"].at[slot].set(pos0 + clen)
+    logits = _head(qc, params, h, cfg)
+    return logits, {"pos": pos, "layers": new_layers}
+
+
 # ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------

@@ -16,13 +16,19 @@ substrates. The §13 failure model rides on top: ``AdmissionConfig`` bounds
 the queue / pool occupancy / deadlines, every ``GenerationResult`` ends in
 one of the ``FINISHED_*`` reasons, and ``ServingSupervisor`` +
 ``FaultInjector`` give the serving loop the training supervisor's
-crash-restart-replay semantics.
+crash-restart-replay semantics. §15's continuous batching is a
+construction knob, not a new surface: ``ServingEngine(...,
+prefill_chunk_tokens=N)`` interleaves chunked prefill with decode ticks,
+``slo_stats()`` reports arrival-anchored TTFT/TPOT percentiles
+(``latency_percentiles`` is the shared summary helper), and
+``benchmarks/loadgen.py`` replays seeded traces against the same API.
 """
 
 from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
                                      FINISHED_LENGTH, FINISHED_REJECTED,
                                      FINISHED_STOP, TERMINAL_REASONS,
-                                     AdmissionConfig, WaitingQueue)
+                                     AdmissionConfig, WaitingQueue,
+                                     latency_percentiles)
 from repro.serving.engine import (GenerationResult, Request, ServingEngine,
                                   TokenEvent, export_int_codes,
                                   export_int_model, make_mixed_quant_state,
@@ -38,6 +44,6 @@ __all__ = [
     "GenerationResult", "InjectedFault", "Request", "SamplingParams",
     "ServingEngine", "ServingSupervisor", "TERMINAL_REASONS", "TokenEvent",
     "WaitingQueue", "export_int_codes", "export_int_model", "finite_rows",
-    "make_mixed_quant_state", "make_uniform_quant_state", "mask_logits",
-    "sample_tokens",
+    "latency_percentiles", "make_mixed_quant_state",
+    "make_uniform_quant_state", "mask_logits", "sample_tokens",
 ]

@@ -91,6 +91,13 @@ class AdmissionConfig:
     (submit → first token, and submit → completion); a request's own
     ``Request.ttft_deadline_s`` / ``Request.deadline_s`` override them.
     ``None`` disables the respective check.
+
+    ``tick_token_budget``: prompt tokens the continuous-batching scheduler
+    may START prefilling per tick (DESIGN.md §15). Only consulted when the
+    engine runs with ``prefill_chunk_tokens`` set; ``None`` defers to the
+    engine's own default (one chunk's worth per tick). The budget bounds
+    prefill work interleaved between decode ticks, so a long prompt can
+    never stall running decoders for more than one chunk forward.
     """
 
     queue_capacity: int | None = None
@@ -100,6 +107,7 @@ class AdmissionConfig:
     ttft_deadline_s: float | None = None
     deadline_s: float | None = None
     block_max_ticks: int = 10_000
+    tick_token_budget: int | None = None
 
     def __post_init__(self):
         if self.queue_capacity is not None and self.queue_capacity < 1:
@@ -120,6 +128,29 @@ class AdmissionConfig:
         if self.block_max_ticks < 1:
             raise ValueError(
                 f"block_max_ticks must be >= 1: {self.block_max_ticks}")
+        if self.tick_token_budget is not None and self.tick_token_budget < 1:
+            raise ValueError(f"tick_token_budget must be >= 1 or None: "
+                             f"{self.tick_token_budget}")
+
+
+def latency_percentiles(samples) -> dict:
+    """p50/p95/p99/mean summary of a latency sample list, as reported for
+    TTFT and TPOT in ``ServingEngine.slo_stats()`` (DESIGN.md §15). Pure
+    host arithmetic; an empty sample set yields ``count: 0`` with ``None``
+    percentiles so JSON consumers need no special-casing."""
+    xs = [float(x) for x in samples]
+    if not xs:
+        return {"count": 0, "p50": None, "p95": None, "p99": None,
+                "mean": None}
+    xs.sort()
+
+    def pct(q: float) -> float:
+        # nearest-rank on the sorted samples: exact, no numpy dependency
+        i = max(math.ceil(q / 100.0 * len(xs)) - 1, 0)
+        return xs[i]
+
+    return {"count": len(xs), "p50": pct(50), "p95": pct(95),
+            "p99": pct(99), "mean": sum(xs) / len(xs)}
 
 
 def projected_blocks(plen: int, max_new: int, block_size: int,

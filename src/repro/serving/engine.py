@@ -64,7 +64,8 @@ from repro.serving import kv_pool
 from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
                                      FINISHED_LENGTH, FINISHED_REJECTED,
                                      FINISHED_STOP, AdmissionConfig,
-                                     WaitingQueue, projected_blocks)
+                                     WaitingQueue, latency_percentiles,
+                                     projected_blocks)
 from repro.serving.sampling import (SamplingParams, finite_rows,
                                     sample_tokens)
 
@@ -228,6 +229,12 @@ class Request:
     submit_s: float = 0.0
     ttft_by: float = math.inf       # absolute expiry times, resolved at
     deadline_by: float = math.inf   # submit() against the engine clock
+    # SLO stamps (DESIGN.md §15), taken against the engine's injectable
+    # clock: first_token_s when the first output token reaches the host,
+    # finish_s at the terminal transition. TTFT = first_token_s - submit_s;
+    # TPOT = (finish_s - first_token_s) / (len(output) - 1).
+    first_token_s: float | None = None
+    finish_s: float | None = None
 
     def __post_init__(self):
         if self.params is None:
@@ -326,6 +333,8 @@ class ServingEngine:
                  max_stop: int = 4,
                  admission: AdmissionConfig | None = None,
                  preemption: bool | str = "auto",
+                 prefill_chunk_tokens: int | None = None,
+                 tick_token_budget: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
         self.params = params
@@ -423,6 +432,30 @@ class ServingEngine:
         self._assert_kv_contract()
         self.admission = admission
         self._clock = clock
+        # Continuous batching (DESIGN.md §15): with ``prefill_chunk_tokens``
+        # set, admission binds a request to a free slot immediately and its
+        # prompt prefills in fixed-size chunks interleaved with decode
+        # ticks, at most ``tick_token_budget`` prompt tokens started per
+        # tick (default: one chunk's worth, falling back to the
+        # AdmissionConfig's budget if it carries one). ``None`` keeps the
+        # wave scheduler: whole-prompt prefill at admission.
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        if prefill_chunk_tokens is not None and prefill_chunk_tokens < 1:
+            raise ValueError(f"prefill_chunk_tokens must be >= 1 or None: "
+                             f"{prefill_chunk_tokens}")
+        if tick_token_budget is None and admission is not None:
+            tick_token_budget = admission.tick_token_budget
+        if tick_token_budget is None:
+            tick_token_budget = prefill_chunk_tokens
+        if tick_token_budget is not None and tick_token_budget < 1:
+            raise ValueError(f"tick_token_budget must be >= 1 or None: "
+                             f"{tick_token_budget}")
+        self.tick_token_budget = tick_token_budget
+        self._has_state = any(k in ("ssm", "recurrent") for k in kinds)
+        self._ssm_arch = "ssm" in kinds
+        # slot -> in-flight chunked-prefill record (PREFILLING slots); the
+        # device row stays inactive until the final chunk arms it
+        self._pending: dict[int, dict] = {}
         # host side of the prefix cache: chain-hash of full-block prompt
         # content -> physical block id, plus live-request counts per key
         self._prefix_map: dict[Any, int] = {}
@@ -488,7 +521,7 @@ class ServingEngine:
         #                          eviction, submit-time rejections, deadline
         #                          expiries, non-finite-logit failures
         self.stats = {"prefill_forwards": 0, "tail_forwards": 0,
-                      "teacher_steps": 0,
+                      "teacher_steps": 0, "prefill_chunks": 0,
                       "prompt_tokens": 0, "seed_equiv_forwards": 0,
                       "decode_ticks": 0, "generated_tokens": 0,
                       "prefix_hit_blocks": 0, "prompt_blocks": 0,
@@ -605,6 +638,24 @@ class ServingEngine:
             return cache, logits[0, -1, : cfg.vocab_size]
 
         self._prefill_tail = _prefill_tail
+
+        @jax.jit
+        def _prefill_chunk(params, qweights, cache, table, toks, clen, slot,
+                           pos0):
+            """One chunk of a chunk-resumable prefill (DESIGN.md §15): run
+            ``clen`` prompt tokens (``toks`` may be right-padded to a bucket
+            shape) into the slot's KV/state at absolute offset ``pos0``.
+            ``clen``/``slot``/``pos0`` are traced, so every chunk of every
+            admission shares one compilation per padded shape. Returns the
+            chunk's final position's logits row — only the LAST chunk's row
+            is consumed (by ``_arm``), keeping the one-sampling-seam
+            contract."""
+            logits, cache = tfm.prefill_chunk(
+                _qc(qweights), params, toks, clen, cache, slot, cfg,
+                pos0=pos0, plan=plan, block_table=table if paged else None)
+            return cache, logits[0, clen - 1, : cfg.vocab_size]
+
+        self._prefill_chunk = _prefill_chunk
 
         @jax.jit
         def _teacher_step(params, qweights, cache, state, table, tok, slot):
@@ -757,6 +808,36 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_seq), 0
 
+    def _chunk_len(self, remaining: int) -> int:
+        """Length of the next prefill chunk given ``remaining`` prompt
+        tokens (DESIGN.md §15). Chunk boundaries are canonical — a function
+        of position only, never of budget or pool pressure — so the chunked
+        forward's internal groupings (ssd_chunked's chunk scan, the
+        recurrent left fold) are identical no matter how ticks interleave.
+        SSM archs additionally align every boundary to ``ssm_chunk`` (the
+        chunked-scan grouping is length-dependent below that), with the
+        < ssm_chunk remainder as the exact-length final chunk."""
+        c = min(self.prefill_chunk_tokens, remaining)
+        if self._ssm_arch:
+            cs = self.cfg.ssm_chunk
+            if remaining >= cs:
+                c = min(max((c // cs) * cs, cs), (remaining // cs) * cs)
+            else:
+                c = remaining
+        return c
+
+    def _chunk_shape(self, clen: int) -> int:
+        """Padded device shape for a ``clen``-token chunk. Attention-only
+        archs bucket to a power of two (padding is masked and never
+        written); recurrent-state archs scan every input position
+        unconditionally, so they run at the exact chunk length."""
+        if self._has_state:
+            return clen
+        b = 8
+        while b < clen:
+            b *= 2
+        return min(b, self.max_seq)
+
     def _validate_request(self, req: Request):
         """Uniform ValueError at the API boundary (§13): malformed requests
         used to surface as shape errors or silent garbage deep in prefill.
@@ -791,6 +872,7 @@ class ServingEngine:
     def _reject(self, req: Request) -> Request:
         req.finish_reason = FINISHED_REJECTED
         req.done = True
+        req.finish_s = self._clock()
         self.finished.append(req)
         self.stats["rejected_requests"] += 1
         return req
@@ -1047,8 +1129,10 @@ class ServingEngine:
 
     def _retire(self, s: int, req: Request):
         req.done = True
+        req.finish_s = self._clock()
         self.finished.append(req)
         self.slot_req[s] = None
+        self._pending.pop(s, None)
         if self.paged:
             self.alloc = self._free_slot_op(self.alloc, s)
             self._drop_prefix_refs(req)
@@ -1062,6 +1146,7 @@ class ServingEngine:
         Returns a terminal TokenEvent if resuming is impossible."""
         req = self.slot_req[s]
         self.slot_req[s] = None
+        self._pending.pop(s, None)
         if self.paged:
             if not blocks_freed:
                 self.alloc = self._free_slot_op(self.alloc, s)
@@ -1075,6 +1160,7 @@ class ServingEngine:
         if len(req.prompt) + len(req.output) - 1 > self.max_seq:
             req.finish_reason = FINISHED_ERROR
             req.done = True
+            req.finish_s = self._clock()
             self.finished.append(req)
             return TokenEvent(rid=req.rid, token=-1, index=len(req.output),
                               done=True, finish_reason=FINISHED_ERROR)
@@ -1102,13 +1188,20 @@ class ServingEngine:
             self.waiting.remove(req)
             req.finish_reason = FINISHED_DEADLINE
             req.done = True
+            req.finish_s = now
             self.finished.append(req)
             self.stats["deadline_expired"] += 1
             events.append(TokenEvent(rid=req.rid, token=-1,
                                      index=len(req.output), done=True,
                                      finish_reason=FINISHED_DEADLINE))
         for s, req in enumerate(self.slot_req):
-            if req is None or req.deadline_by > now:
+            if req is None:
+                continue
+            # a PREFILLING slot has emitted nothing yet, so its TTFT budget
+            # still applies (same rule the waiting queue uses); armed slots
+            # only answer to the wall deadline
+            by = req.deadline_key if s in self._pending else req.deadline_by
+            if by > now:
                 continue
             self.state = self._deactivate(self.state, s)
             req.finish_reason = FINISHED_DEADLINE
@@ -1151,7 +1244,70 @@ class ServingEngine:
                 return False
         return True
 
+    def _rearm_slot(self, s: int, req: Request, k: int):
+        """Restore a resumed request's sampling state after its replay
+        prefill (§13): no new sample — the key chain continues from depth
+        ``k`` (= emitted tokens) and ``last_tok`` is the last pre-eviction
+        emission, so the next tick produces exactly the token the
+        unpreempted run would have."""
+        rows = self._param_rows(req)
+        self.state = self._rearm(
+            self.state, s, jnp.asarray(req.output[-1], jnp.int32),
+            rows[0], rows[1], rows[2],
+            self._replay_key(jnp.asarray(req.seed_used, jnp.uint32),
+                             jnp.asarray(k, jnp.int32)),
+            rows[4], jnp.asarray(req.max_new - k, jnp.int32),
+            jnp.asarray(k, jnp.int32),
+            jnp.asarray(next(self._stamp_counter), jnp.int32))
+        self.stats["resumed_admissions"] += 1
+
+    def _post_arm(self, admitted) -> list:
+        """Host side of arming: ONE batched transfer for the wave's first
+        tokens (the §13 non-finite flags ride in the same transfer), then
+        the shared bookkeeping — first-token SLO stamp, stop-at-first /
+        max_new=1 retirement, TokenEvents. Shared by the wave and
+        continuous schedulers so their per-request semantics can't drift."""
+        events = []
+        firsts = self._sync([(f, o) for _, _, f, o in admitted], "admit") \
+            if admitted else []
+        now = self._clock()
+        for (s, req, _, _), (first, ok) in zip(admitted, firsts):
+            if not bool(ok):
+                # admission logits went non-finite: the row armed inactive,
+                # so retirement just frees it; nothing was emitted
+                req.finish_reason = FINISHED_ERROR
+                self.stats["nan_failures"] += 1
+                self._retire(s, req)
+                events.append(TokenEvent(rid=req.rid, token=-1, index=0,
+                                         done=True,
+                                         finish_reason=FINISHED_ERROR))
+                continue
+            tok = int(first)
+            req.output.append(tok)
+            if req.first_token_s is None:
+                req.first_token_s = now
+            self.stats["generated_tokens"] += 1
+            stopped = tok in req.params.stop
+            if stopped or req.max_new <= 1:
+                req.finish_reason = FINISHED_STOP if stopped \
+                    else FINISHED_LENGTH
+                if stopped and req.max_new > 1:
+                    # the device armed the row for more tokens — shut it
+                    # down before retirement frees its blocks
+                    self.state = self._deactivate(self.state, s)
+                self._retire(s, req)
+            events.append(TokenEvent(rid=req.rid, token=tok,
+                                     index=len(req.output) - 1,
+                                     done=req.done,
+                                     finish_reason=req.finish_reason))
+        return events
+
     def _admit(self):
+        if self.prefill_chunk_tokens is not None:
+            return self._admit_continuous()
+        return self._admit_wave()
+
+    def _admit_wave(self):
         t0 = time.perf_counter()
         admitted = []
         resumed = 0
@@ -1180,16 +1336,7 @@ class ServingEngine:
                     self._admit_paged(s, req, replay)
                 else:
                     self._admit_ring(s, req, replay)
-                k = len(req.output)
-                self.state = self._rearm(
-                    self.state, s, jnp.asarray(req.output[-1], jnp.int32),
-                    rows[0], rows[1], rows[2],
-                    self._replay_key(jnp.asarray(req.seed_used, jnp.uint32),
-                                     jnp.asarray(k, jnp.int32)),
-                    rows[4], jnp.asarray(req.max_new - k, jnp.int32),
-                    jnp.asarray(k, jnp.int32),
-                    jnp.asarray(next(self._stamp_counter), jnp.int32))
-                self.stats["resumed_admissions"] += 1
+                self._rearm_slot(s, req, len(req.output))
                 resumed += 1
                 self.stats["prompt_tokens"] += len(replay)
                 self.stats["seed_equiv_forwards"] += len(replay)
@@ -1204,39 +1351,213 @@ class ServingEngine:
                 self.stats["prompt_tokens"] += len(prompt)
                 self.stats["seed_equiv_forwards"] += len(prompt)
                 admitted.append((s, req, first, ok))
-        events = []
-        # ONE host transfer for the whole admission wave's first tokens
-        # (the §13 non-finite flags ride in the same transfer)
-        firsts = self._sync([(f, o) for _, _, f, o in admitted], "admit") \
-            if admitted else []
-        for (s, req, _, _), (first, ok) in zip(admitted, firsts):
-            if not bool(ok):
-                # admission logits went non-finite: the row armed inactive,
-                # so retirement just frees it; nothing was emitted
-                req.finish_reason = FINISHED_ERROR
-                self.stats["nan_failures"] += 1
-                self._retire(s, req)
-                events.append(TokenEvent(rid=req.rid, token=-1, index=0,
-                                         done=True,
-                                         finish_reason=FINISHED_ERROR))
-                continue
-            tok = int(first)
-            req.output.append(tok)
-            self.stats["generated_tokens"] += 1
-            stopped = tok in req.params.stop
-            if stopped or req.max_new <= 1:
-                req.finish_reason = FINISHED_STOP if stopped \
-                    else FINISHED_LENGTH
-                if stopped and req.max_new > 1:
-                    # the device armed the row for more tokens — shut it
-                    # down before retirement frees its blocks
-                    self.state = self._deactivate(self.state, s)
-                self._retire(s, req)
-            events.append(TokenEvent(rid=req.rid, token=tok,
-                                     index=len(req.output) - 1,
-                                     done=req.done,
-                                     finish_reason=req.finish_reason))
+        events = self._post_arm(admitted)
         if admitted or resumed:
+            self.stats["prefill_time_s"] += time.perf_counter() - t0
+        return events
+
+    # ------------------------------------------------------------------
+    # Continuous batching: chunked prefill interleaved with decode
+    # (DESIGN.md §15)
+    # ------------------------------------------------------------------
+
+    def _begin_prefill(self, s: int, req: Request):
+        """Bind a request to a free slot as PREFILLING: build its pending
+        record and, in the paged layout, map any cached prompt prefix onto
+        its existing physical blocks (the chunked prefill then starts AFTER
+        the shared region — it neither recomputes nor rewrites shared
+        blocks). A fully cached prompt short-circuits exactly like the wave
+        scheduler: teacher-force the sub-block remainder now and leave the
+        record complete, so the next ``_prefill_tick`` pass arms it without
+        spending any chunk budget."""
+        prompt = np.asarray(req.prompt, np.int32)
+        resume = bool(req.output)
+        toks = prompt
+        if resume and len(req.output) > 1:
+            toks = np.concatenate(
+                [prompt, np.asarray(req.output[:-1], np.int32)])
+        st = {"req": req, "toks": toks, "resume": resume, "pos": 0,
+              "blocks": 0, "ns": 0, "keys": [], "row": None,
+              "registered": not self.paged,
+              "order": next(self._stamp_counter)}
+        self._pending[s] = st
+        if not self.paged:
+            return
+        plen = len(toks)
+        bs = self.block_size
+        fb = plen // bs
+        keys = self._block_keys(toks) if self.prefix_sharing else []
+        st["keys"] = keys
+        shared: list[int] = []
+        for key in keys:
+            if key not in self._prefix_map:
+                break
+            shared.append(self._prefix_map[key])
+        ns = len(shared)
+        st["ns"] = ns
+        if ns:
+            phys = np.zeros((self.max_blocks,), np.int32)
+            phys[:ns] = shared
+            self.alloc = self._share_prefix(self.alloc, s,
+                                            jnp.asarray(phys), ns)
+            st["blocks"] = ns
+            st["pos"] = ns * bs
+        if ns and ns == fb:
+            # fully cached: same CoW / teacher-force path as _admit_paged
+            r = plen - ns * bs
+            t0 = ns * bs if r else plen - 1
+            kept_keys = keys[:ns]
+            if r == 0:
+                self.alloc, self.cache = self._cow(self.alloc, self.cache,
+                                                   s, fb - 1)
+                self.stats["cow_copies"] += 1
+                kept_keys = keys[:ns - 1]
+            self.cache = self._set_pos(self.cache, s, t0)
+            row = None
+            for t in toks[t0:]:
+                self.cache, row = self._teacher_step(
+                    self.params, self.qweights, self.cache, self.state,
+                    self.alloc["table"], jnp.asarray(int(t), jnp.int32), s)
+                self.stats["teacher_steps"] += 1
+            self.stats["shared_admissions"] += 1
+            req.prefix_keys = kept_keys
+            for key in kept_keys:
+                self._key_refs[key] = self._key_refs.get(key, 0) + 1
+            self._touch_lru(keys)
+            self.stats["prefix_hit_blocks"] += ns
+            self.stats["prompt_blocks"] += fb
+            st.update(pos=plen, row=row, registered=True)
+
+    def _finish_prefill(self, s: int, st: dict):
+        """The slot's last chunk has run: register its prompt blocks in the
+        prefix map (paged, one admission-time sync for the table row), then
+        arm the device row. Fresh requests return an ``(s, req, first, ok)``
+        arm record for the batched ``_post_arm`` sync; resumes re-arm with
+        no sample and return None."""
+        req = st["req"]
+        del self._pending[s]
+        if self.paged and not st["registered"]:
+            keys, ns = st["keys"], st["ns"]
+            if keys:
+                trow = np.asarray(self._sync(self.alloc["table"][s],
+                                             "admit"))
+                for j, key in enumerate(keys):
+                    if key not in self._prefix_map:
+                        self._prefix_map[key] = int(trow[j])
+                        if self.lru_capacity > 0:
+                            self.alloc = self._retain_block(
+                                self.alloc, jnp.asarray(int(trow[j]),
+                                                        jnp.int32))
+                            self._cache_held.add(key)
+                req.prefix_keys = keys
+                for key in keys:
+                    self._key_refs[key] = self._key_refs.get(key, 0) + 1
+                self._touch_lru(keys)
+            self.stats["prefix_hit_blocks"] += st["ns"]
+            self.stats["prompt_blocks"] += len(st["toks"]) // self.block_size
+        total = len(st["toks"])
+        self.stats["prompt_tokens"] += total
+        self.stats["seed_equiv_forwards"] += total
+        if st["resume"]:
+            self._rearm_slot(s, req, len(req.output))
+            return None
+        rows = self._param_rows(req)
+        self.state, first, ok = self._arm(
+            self.state, s, st["row"], *rows,
+            jnp.asarray(next(self._stamp_counter), jnp.int32))
+        return (s, req, first, ok)
+
+    def _prefill_tick(self):
+        """Spend this tick's token budget on pending prefills, oldest bind
+        first. The budget gates STARTING a chunk (chunk boundaries are
+        canonical — see ``_chunk_len`` — so a budget can't reshape them);
+        slots whose incremental block allocation would overdraw an
+        oversubscribed pool skip this tick instead of corrupting the free
+        stack. Completed prefills arm; returns (armed records, whether any
+        chunk ran, whether any slot is blocked on blocks)."""
+        budget = self.tick_token_budget
+        armed, ran, blocked = [], False, False
+        for s in sorted(self._pending,
+                        key=lambda i: self._pending[i]["order"]):
+            st = self._pending[s]
+            total = len(st["toks"])
+            while st["pos"] < total:
+                if budget is not None and budget <= 0:
+                    break
+                c = self._chunk_len(total - st["pos"])
+                if self.paged:
+                    need = -(-(st["pos"] + c) // self.block_size) \
+                        - st["blocks"]
+                    if need > 0 and self.preemption:
+                        n_free = int(self._sync(self.alloc["n_free"],
+                                                "admit"))
+                        if need > n_free:
+                            blocked = True
+                            break
+                    if need > 0:
+                        self.alloc = self._alloc_range(
+                            self.alloc, s, st["blocks"], need)
+                        st["blocks"] += need
+                pad = self._chunk_shape(c)
+                toks = np.zeros((1, pad), np.int32)
+                toks[0, :c] = st["toks"][st["pos"]:st["pos"] + c]
+                self.cache, st["row"] = self._prefill_chunk(
+                    self.params, self.qweights, self.cache,
+                    self.alloc["table"] if self.paged else None,
+                    jnp.asarray(toks), jnp.asarray(c, jnp.int32),
+                    jnp.asarray(s, jnp.int32),
+                    jnp.asarray(st["pos"], jnp.int32))
+                st["pos"] += c
+                self.stats["prefill_chunks"] += 1
+                self.stats["prefill_forwards"] += 1
+                if budget is not None:
+                    budget -= c
+                ran = True
+            if st["pos"] >= total:
+                rec = self._finish_prefill(s, st)
+                if rec is not None:
+                    armed.append(rec)
+        return armed, ran, blocked
+
+    def _admit_continuous(self):
+        """Continuous admission (DESIGN.md §15): bind waiting requests to
+        free slots the moment watermark + free stack allow, then advance
+        every PREFILLING slot by up to ``tick_token_budget`` prompt tokens.
+        Unlike the wave scheduler there is no admission barrier — new
+        requests join while others decode, and a long prompt holds the tick
+        for at most one chunk forward."""
+        t0 = time.perf_counter()
+        bound = False
+        for s in range(self.slots):
+            if self.slot_req[s] is not None:
+                continue
+            req = self.waiting.peek()
+            if req is None:
+                break
+            if not self._can_start(req):
+                # head-of-line hold, same no-starvation rule as the wave
+                break
+            self.waiting.pop()
+            self.slot_req[s] = req
+            self._begin_prefill(s, req)
+            bound = True
+        armed, ran, blocked = self._prefill_tick()
+        events = self._post_arm(armed)
+        if blocked and not ran and not armed and len(self._pending) > 1 \
+                and not any(r is not None and s not in self._pending
+                            for s, r in enumerate(self.slot_req)):
+            # Deadlock breaker for an oversubscribed pool: every live slot
+            # is PREFILLING, none could place a chunk, and no decoder is
+            # left to retire or preempt — release the youngest binding's
+            # partial blocks back to the pool. The oldest survivor then
+            # always completes: _can_start admitted it against the full
+            # free stack and only younger bindings have drawn from it since.
+            victim = max(self._pending,
+                         key=lambda i: self._pending[i]["order"])
+            ev = self._requeue_slot(victim, blocks_freed=False)
+            if ev is not None:
+                events.append(ev)
+        if bound or ran or armed:
             self.stats["prefill_time_s"] += time.perf_counter() - t0
         return events
 
@@ -1254,7 +1575,11 @@ class ServingEngine:
         """
         events = self._expire_deadlines()
         events += self._admit()
-        if all(r is None for r in self.slot_req):
+        # nothing ARMED -> no decode tick: PREFILLING slots (continuous
+        # scheduler) hold inactive device rows and only consume admission
+        # work until their final chunk arms them
+        if not any(r is not None and s not in self._pending
+                   for s, r in enumerate(self.slot_req)):
             return events
         t0 = time.perf_counter()
         (self.cache, self.state, self.alloc, nxt, emitted, done, pre,
@@ -1415,6 +1740,29 @@ class ServingEngine:
                                    f"{max_ticks} ticks")
 
         return _events()
+
+    def slo_stats(self) -> dict:
+        """Per-request latency summary over every finished request
+        (DESIGN.md §15), measured against the engine's injectable clock:
+
+          * TTFT — ``first_token_s - submit_s``, each request's OWN arrival
+            stamp (not engine start), so percentiles are meaningful under
+            ragged admission;
+          * TPOT — ``(finish_s - first_token_s) / (len(output) - 1)``,
+            requests with >= 2 output tokens only.
+
+        Host arithmetic over stamps already taken on the serving path —
+        calling this costs zero device syncs."""
+        done = self.finished
+        ttft = [r.first_token_s - r.submit_s for r in done
+                if r.first_token_s is not None]
+        tpot = [(r.finish_s - r.first_token_s) / (len(r.output) - 1)
+                for r in done
+                if r.first_token_s is not None and r.finish_s is not None
+                and len(r.output) > 1]
+        return {"requests": len(done),
+                "ttft_s": latency_percentiles(ttft),
+                "tpot_s": latency_percentiles(tpot)}
 
     def pool_stats(self) -> dict:
         """Paged-pool occupancy snapshot (one small host sync, ledgered as

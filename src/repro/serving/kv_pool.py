@@ -17,7 +17,10 @@ block table — and every transition is a jitted gather/scatter:
 
   * ``alloc_range`` / ``share_prefix``  — admission-time fills of a table row
     (fresh pops, or mapping leading entries to another request's physical
-    blocks with a refcount bump: prefix sharing);
+    blocks with a refcount bump: prefix sharing). ``alloc_range`` is
+    incremental — ``(slot, start, n)`` extends an existing row — which is
+    how §15's chunked prefill allocates blocks chunk-by-chunk instead of
+    reserving a whole prompt's worth up front;
   * ``tick_alloc``       — the in-decode-tick pop: rows whose position enters
     an unallocated block each take one block off the stack *inside* the
     jitted tick, so the §8 one-host-sync-per-tick contract survives paging;

@@ -1,0 +1,223 @@
+"""Continuous-batching scheduler: property storm + trace-replay determinism.
+
+The test half of DESIGN.md §15. Two families:
+
+  * **Property storm** (hypothesis; deterministic-replay shim without it):
+    random interleavings of submits, engine ticks, stop tokens, sampled and
+    greedy requests — against both an ample pool and an undersized one that
+    forces mid-storm preemption. After every drain the scheduler must be
+    clean: no slot or pending-prefill leaks, every submitted request ends
+    in exactly one typed ``FINISHED_*`` reason, the KV pool holds only
+    prefix-cache-retained blocks, and the §8 one-host-sync-per-tick ledger
+    still balances.
+  * **Trace replay determinism**: the same seeded ``benchmarks.loadgen``
+    trace, replayed on a virtual ``TickClock``, produces identical
+    per-request streams, finish reasons AND SLO stamps across two runs —
+    and identical streams across different ``slots`` /
+    ``prefill_chunk_tokens`` settings (including the legacy wave
+    scheduler), which is the stream-equivalence property that makes the
+    ``continuous_batching`` bench row comparable across configurations.
+"""
+
+import functools
+import itertools
+import os
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tfm
+from repro.serving import (TERMINAL_REASONS, Request, SamplingParams,
+                           ServingEngine)
+
+from benchmarks.loadgen import (TickClock, make_trace, replay,  # noqa: E402
+                                stream_summary)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container without hypothesis: deterministic replay
+    from _hyp_fallback import given, settings
+    from _hyp_fallback import strategies as st
+
+ARCH = "tinyllama-1.1b"
+
+# one rid space across all storm examples so "exactly one terminal record
+# per request" is checkable against the engine's cumulative finished list
+_RID = itertools.count()
+
+
+@functools.lru_cache(maxsize=None)
+def _model():
+    cfg = get_smoke_config(ARCH)
+    return cfg, tfm.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _storm_engine(pressured: bool):
+    """One engine per pool regime, reused across hypothesis examples (each
+    example drains it back to empty, so examples stay independent while the
+    jit closures compile once)."""
+    cfg, params = _model()
+    if pressured:
+        # 11 usable blocks for 3 slots: concurrent worst-case demand
+        # overflows the pool, so the storm preempts and resumes mid-flight
+        return ServingEngine(cfg, params, slots=3, max_seq=64,
+                             num_blocks=12, prefill_chunk_tokens=4)
+    return ServingEngine(cfg, params, slots=3, max_seq=64,
+                         prefill_chunk_tokens=4)
+
+
+def _storm(eng, seed, *, plen_hi, max_new_hi):
+    """Drive one random schedule: submits interleaved with ticks, then a
+    bounded drain. Returns the submitted requests."""
+    rng = np.random.default_rng(seed)
+    cfg = eng.cfg
+    submitted = []
+    for _ in range(int(rng.integers(1, 7))):
+        plen = int(rng.integers(1, plen_hi + 1))
+        sampled = rng.random() < 0.5
+        stop = tuple(int(t) for t in
+                     rng.integers(0, cfg.vocab_size,
+                                  (int(rng.integers(0, 3)),)))
+        sp = SamplingParams(
+            max_new=int(rng.integers(1, max_new_hi + 1)),
+            temperature=0.8 if sampled else 0.0,
+            top_p=0.9 if sampled else 1.0,
+            seed=int(rng.integers(2 ** 31 - 1)) if sampled else None,
+            stop=stop)
+        req = Request(rid=next(_RID),
+                      prompt=rng.integers(0, cfg.vocab_size, (plen,)),
+                      params=sp)
+        eng.submit(req)
+        submitted.append(req)
+        for _ in range(int(rng.integers(0, 3))):
+            eng.step()
+    for _ in range(600):
+        if not eng.waiting and all(r is None for r in eng.slot_req):
+            break
+        eng.step()
+    return submitted
+
+
+def _assert_clean(eng, submitted):
+    """The §15 post-drain invariants."""
+    assert not eng.waiting and all(r is None for r in eng.slot_req), \
+        "engine did not drain"
+    assert not eng._pending, "prefill state leaked past retirement"
+    for req in submitted:
+        assert req.done and req.finish_reason in TERMINAL_REASONS, req.rid
+        assert req.finish_s is not None
+    rids = [r.rid for r in eng.finished]
+    assert len(rids) == len(set(rids)), "request finished more than once"
+    assert {r.rid for r in submitted} <= set(rids)
+    st = eng.stats
+    assert st["tick_syncs"] == st["decode_ticks"]
+    if eng.paged:
+        ps = eng.pool_stats()
+        assert ps["blocks_in_use"] == ps["retained_blocks"], \
+            "pool blocks leaked"
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_storm_random_schedules_leave_engine_clean(seed):
+    eng = _storm_engine(False)
+    submitted = _storm(eng, seed, plen_hi=20, max_new_hi=6)
+    _assert_clean(eng, submitted)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_storm_under_pool_pressure_leaves_engine_clean(seed):
+    eng = _storm_engine(True)
+    submitted = _storm(eng, seed, plen_hi=28, max_new_hi=12)
+    _assert_clean(eng, submitted)
+
+
+def test_pressure_storm_actually_preempts_and_recovers():
+    """The undersized pool really exercises preemption: a deterministic
+    heavy wave must preempt at least once and still retire every request
+    with a typed reason and zero leaked blocks. Long decode phases make
+    the chunk-staggered decoders overlap and grow concurrently (3 slots x
+    6-block worst demand > 11 usable blocks), which the budgeted prefill
+    stagger alone would otherwise spread out enough to dodge."""
+    eng = _storm_engine(True)
+    base = eng.stats["preemptions"]
+    rng = np.random.default_rng(99)
+    reqs = []
+    for _ in range(6):
+        reqs.append(Request(rid=next(_RID),
+                            prompt=rng.integers(0, eng.cfg.vocab_size, (24,)),
+                            params=SamplingParams(max_new=24)))
+        eng.submit(reqs[-1])
+    for _ in range(900):
+        if not eng.waiting and all(r is None for r in eng.slot_req):
+            break
+        eng.step()
+    _assert_clean(eng, reqs)
+    assert eng.stats["preemptions"] > base
+
+
+# ---------------------------------------------------------------------------
+# Trace replay: determinism and stream equivalence
+# ---------------------------------------------------------------------------
+
+
+def _trace(cfg, seed=5, n=24):
+    return make_trace(seed, n, cfg.vocab_size, mean_iat_s=0.004,
+                      plen_buckets=(4, 12, 24), prefix_groups=2,
+                      prefix_len=8, prefix_fraction=0.3, max_new=(2, 8))
+
+
+def test_trace_replay_identical_streams_and_slo_stamps_across_runs():
+    """Same seeded trace + same TickClock config → the replay is a pure
+    function: token streams, finish reasons, per-request SLO stamps and the
+    aggregated slo_stats() all repeat bit-for-bit."""
+    cfg, params = _model()
+    trace = _trace(cfg)
+    runs = []
+    for _ in range(2):
+        clock = TickClock(tick_s=1e-3)
+        eng = ServingEngine(cfg, params, slots=4, max_seq=64,
+                            prefill_chunk_tokens=4, clock=clock)
+        res = replay(eng, trace, clock=clock)
+        assert res["submitted"] == len(trace)
+        runs.append((stream_summary(res),
+                     {rid: (r.submit_s, r.first_token_s, r.finish_s)
+                      for rid, r in res["requests"].items()},
+                     eng.slo_stats()))
+    assert runs[0] == runs[1]
+    slo = runs[0][2]
+    assert slo["requests"] == len(trace)
+    assert slo["ttft_s"]["count"] == len(trace)
+    assert slo["ttft_s"]["p50"] > 0 and slo["ttft_s"]["p95"] >= \
+        slo["ttft_s"]["p50"]
+    assert slo["tpot_s"]["count"] > 0
+
+
+def test_trace_replay_streams_invariant_to_slots_and_chunking():
+    """Stream equivalence across scheduler configurations: the same trace
+    yields identical per-request streams and finish reasons no matter the
+    slot count or chunk size — including the legacy wave scheduler
+    (``prefill_chunk_tokens=None``). Throughput changes; tokens must not."""
+    cfg, params = _model()
+    trace = _trace(cfg, seed=7, n=20)
+    summaries = []
+    for slots, chunk in ((2, 4), (4, 4), (8, 16), (4, None)):
+        clock = TickClock(tick_s=1e-3)
+        eng = ServingEngine(cfg, params, slots=slots, max_seq=64,
+                            prefill_chunk_tokens=chunk, clock=clock)
+        res = replay(eng, trace, clock=clock)
+        if chunk is not None:
+            # fully-prefix-cached admissions legally skip chunking, so the
+            # floor here is "chunking happened", not a per-request count
+            assert eng.stats["prefill_chunks"] > 0
+        summaries.append(((slots, chunk), stream_summary(res)))
+    want = summaries[0][1]
+    for key, got in summaries[1:]:
+        assert got == want, f"streams diverged under {key}"

@@ -782,3 +782,61 @@ def test_int8_kv_prefix_shared_admission_streams_identical():
     assert eng.stats["shared_admissions"] == 1
     assert a.tokens == b.tokens == solo
     assert len(set(a.tokens)) > 1
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill ≡ whole-prompt prefill (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def _has_attention(cfg):
+    kinds = list(cfg.block_pattern) + list(cfg.remainder_kinds)
+    return any(k in ("global", "local") for k in kinds)
+
+
+def _chunk_run(cfg, params, layout, kv_dtype, chunk):
+    """One greedy + one seeded-sampled request through an engine with the
+    given ``prefill_chunk_tokens``; returns comparable terminal streams."""
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, (13,)),
+               rng.integers(0, cfg.vocab_size, (21,))]
+    sps = [SamplingParams(max_new=4),
+           SamplingParams(max_new=4, temperature=0.8, top_k=13, seed=5)]
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32, kv_layout=layout,
+                        kv_dtype=kv_dtype, prefill_chunk_tokens=chunk)
+    res = eng.generate(prompts, sps)
+    st = eng.stats
+    # the one-host-sync-per-tick ledger survives chunked admission
+    assert st["tick_syncs"] == st["decode_ticks"]
+    if chunk is not None and chunk < 13:
+        assert st["prefill_chunks"] > len(prompts)  # prompts really split
+    return [(r.tokens, r.finish_reason) for r in res]
+
+
+@pytest.mark.parametrize("arch", TOKEN_ARCHS)
+def test_chunked_prefill_streams_bit_identical_every_arch(arch):
+    """The §15 acceptance gate: token streams are BIT-IDENTICAL under
+    ``prefill_chunk_tokens`` ∈ {one KV block, ragged, ∞} on every
+    token-servable arch, in the ring layout AND (where the arch has
+    attention) the paged one, greedy and seeded-sampled alike.
+
+    bf16 KV compares every chunk setting against the legacy whole-prompt
+    engine (``prefill_chunk_tokens=None``): the bf16 round-trip is the
+    identity, so chunked and legacy attends see the same key bits. int8 KV
+    compares chunk settings against the ∞-chunk run instead — the legacy
+    prefill attends over fresh (non-round-tripped) K/V, while every chunked
+    attend reads storage-dtype codes, which is its own (chunk-invariant)
+    numeric contract."""
+    cfg, params = _model(arch=arch)
+    layouts = ["ring"] + (["paged"] if _has_attention(cfg) else [])
+    for layout in layouts:
+        want = _chunk_run(cfg, params, layout, "bf16", None)
+        for chunk in (8, 3, 1000):
+            got = _chunk_run(cfg, params, layout, "bf16", chunk)
+            assert got == want, (arch, layout, "bf16", chunk)
+        if not _has_attention(cfg):
+            continue  # attention-free arch: no KV codes to quantize
+        want = _chunk_run(cfg, params, layout, "int8", 1000)
+        for chunk in (8, 3):
+            got = _chunk_run(cfg, params, layout, "int8", chunk)
+            assert got == want, (arch, layout, "int8", chunk)
