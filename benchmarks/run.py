@@ -138,7 +138,7 @@ def bench_flash_attention():
 
 def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
                  max_new=16, nreq=8, kv_layout="auto", same_prefix=False,
-                 max_seq=64, sample=None, kv_dtype="bf16"):
+                 max_seq=64, sample=None, kv_dtype="bf16", act_bits=None):
     """One measured engine pass. Compiles on a throwaway request first so the
     numbers reflect steady-state serving, not jit tracing. With
     ``same_prefix`` every request reuses ONE prompt, exercising the paged
@@ -150,7 +150,7 @@ def _serving_run(cfg, params, *, quant_state=None, slots=4, plen=12,
 
     eng = ServingEngine(cfg, params, slots=slots, max_seq=max_seq,
                         quant_state=quant_state, kv_layout=kv_layout,
-                        kv_dtype=kv_dtype)
+                        kv_dtype=kv_dtype, act_bits=act_bits)
     rng = np.random.default_rng(7)
     warm_sp = SamplingParams(max_new=2, **(sample or {}))
     eng.generate([rng.integers(0, cfg.vocab_size, (plen,))], warm_sp)
@@ -430,6 +430,23 @@ def bench_serving(tier: str):
     print(f"serving_int8,{int8['decode_tok_s']:.0f},ttft_ms="
           f"{int8['ttft_s']*1e3:.1f};int8_sites={int8['int8_sites']}")
 
+    # fully-integer decode (DESIGN.md §16): calibrated per-tensor ``.in``
+    # activation specs route every exported site through the int8×int8
+    # integer-accumulation GEMM. CI asserts from BENCH_serving.json that the
+    # row exists, the tick still costs exactly ONE host sync, and the BOP
+    # certificate covers every activation site (acts.covered == acts.total).
+    intgemm = _serving_run(cfg, params, quant_state=qs, nreq=nreq,
+                           act_bits=8)
+    acts = intgemm["quant_report"]["acts"]
+    intgemm["bops_vs_int_weight_fp32_act"] = (
+        intgemm["quant_report"]["bops"]["model"]
+        / max(int8["quant_report"]["bops"]["model"], 1e-9))
+    print(f"serving_int_gemm_decode,{intgemm['decode_tok_s']:.0f},"
+          f"vs_fp32_act={intgemm['decode_tok_s']/max(int8['decode_tok_s'],1e-9):.2f}x;"
+          f"act_sites={acts['covered']}/{acts['total']};"
+          f"bops_model={intgemm['quant_report']['bops']['model']:.3g};"
+          f"host_syncs_per_tick={intgemm['host_syncs_per_tick']:.2f}")
+
     # mixed 2/4/8-bit export: packed sub-byte storage (DESIGN.md §11). The
     # quant_report ledger in BENCH_serving.json is CI-asserted: packed
     # bytes/weight must land strictly below the uniform-int8 baseline.
@@ -509,11 +526,12 @@ def bench_serving(tier: str):
           f"tpot_p95_ms={cont['tpot_s']['p95']*1e3:.1f};"
           f"host_syncs_per_tick={cont['host_syncs_per_tick']:.2f};"
           f"blocks_leaked={cont['blocks_leaked']}")
-    total_reqs = (4 * nreq + 2 * hi_slots + nreq + chaos["requests"]
+    total_reqs = (5 * nreq + 2 * hi_slots + nreq + chaos["requests"]
                   + cont["requests"])
     print(f"serving_total,{(time.time()-t0)*1e6:.0f},"
           f"requests={total_reqs}")
     return {"fp32": fp32, "fp32_ring": ring, "int8": int8,
+            "int_gemm_decode": intgemm,
             "mixed_sub_byte": mixed, "sampled_decode": sampled,
             "paged_high_slots": high, "prefix_sharing": prefix,
             **kv_rows, "chaos": chaos, "continuous_batching": cont}

@@ -6,6 +6,7 @@ CGMQ mixed-precision packed-int decode path (DESIGN.md §8/§11/§12).
     PYTHONPATH=src python examples/serve_quantized.py --arch tinyllama-1.1b
     PYTHONPATH=src python examples/serve_quantized.py --mixed  # 2/4/8-bit
     PYTHONPATH=src python examples/serve_quantized.py --fp32   # skip int
+    PYTHONPATH=src python examples/serve_quantized.py --act-bits 8  # int8×int8
     PYTHONPATH=src python examples/serve_quantized.py \\
         --temperature 0.8 --top-p 0.9 --seed 7 --stream
 """
@@ -38,6 +39,10 @@ def main():
     ap.add_argument("--mixed", action="store_true",
                     help="mixed 2/4/8-bit gates (packed sub-byte storage) "
                          "instead of uniform 8-bit")
+    ap.add_argument("--act-bits", default="none", choices=["8", "4", "none"],
+                    help="quantize GEMM input activations at this width and "
+                         "serve fully-integer int8×int8 MACs (DESIGN.md "
+                         "§16); none = int-weight × fp32-act GEMMs")
     ap.add_argument("--kv-layout", default="auto",
                     choices=["auto", "paged", "ring"],
                     help="KV cache substrate (DESIGN.md §10); auto = paged "
@@ -79,8 +84,12 @@ def main():
         qs = make_mixed_quant_state(cfg, params)
     else:
         qs = make_uniform_quant_state(cfg, params)
+    act_bits = None if args.act_bits == "none" else int(args.act_bits)
+    if act_bits is not None and qs is None:
+        ap.error("--act-bits requires a quantized export (drop --fp32)")
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
-                        quant_state=qs, kv_layout=args.kv_layout,
+                        quant_state=qs, act_bits=act_bits,
+                        kv_layout=args.kv_layout,
                         prefix_lru_blocks=args.prefix_lru_blocks,
                         prefill_chunk_tokens=args.prefill_chunk)
     if eng.qweights:
@@ -94,6 +103,12 @@ def main():
               f"{t['uniform_int8_bytes_per_weight']:.3f}, fp32 = 4.0); "
               f"{t['fallback_sites']} fake-quant fallback sites; "
               f"RBOP {rep['bops']['rbop']*100:.2f}%")
+        if act_bits is not None:
+            a = rep["acts"]
+            print(f"  fully-integer GEMMs: {a['covered']}/{a['total']} "
+                  f"activation sites calibrated at {act_bits}-bit "
+                  f"(int8×int8 integer accumulation; "
+                  f"{len(a['fallback_sites'])} float-input fallbacks)")
     print(f"kv layout: {eng.kv_layout}"
           + (f" ({eng.num_blocks} blocks x {eng.block_size} tokens, "
              f"prefix sharing {'on' if eng.prefix_sharing else 'off'}, "

@@ -106,6 +106,22 @@ def site_bop(
     return total * float(site.positions) * float(site.active_frac)
 
 
+def activation_gate(
+    gates: dict[str, jnp.ndarray], name: str
+) -> jnp.ndarray | None:
+    """The gate carrying a site's GEMM activation width (DESIGN.md §16).
+
+    Resolution order: the ``.in`` input-activation gate (the operand the
+    MACs actually consume — with it the certificate is TRUE BOPs), else the
+    ``.a`` output gate (the historical proxy, kept so weight-only and
+    output-act configs reproduce their numbers exactly), else None (fp32).
+    """
+    ag = gates.get(name + ".in")
+    if ag is None:
+        ag = gates.get(name + ".a")
+    return ag
+
+
 def model_bop(
     sites: dict[str, SiteInfo], gates: dict[str, jnp.ndarray]
 ) -> jnp.ndarray:
@@ -113,7 +129,7 @@ def model_bop(
     total = jnp.asarray(0.0, jnp.float32)
     for s in sites.values():
         wg = gates.get(s.name + ".w")
-        ag = gates.get(s.name + ".a")
+        ag = activation_gate(gates, s.name)
         total = total + site_bop(s, wg, ag)
     return total
 

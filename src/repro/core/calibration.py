@@ -47,7 +47,9 @@ def calibrate_activations(
         stats = jax.device_get(_run(batch))
         for key, st in stats.items():
             per_ch = cfg.act_granularity == PER_CHANNEL
-            mx = st["max_per_ch"] if per_ch else st["max"]
+            # ``.in`` (GEMM-input) sites are per-tensor by contract and
+            # record no per-channel max (DESIGN.md §16).
+            mx = st["max_per_ch"] if per_ch and "max_per_ch" in st else st["max"]
             neg = bool(np.any(np.asarray(st["min"]) < 0))
             if key not in running:
                 running[key] = {"beta": np.asarray(mx, np.float32), "signed": neg}

@@ -133,6 +133,25 @@ def _fq_bwd(signed, res, ct):
 fake_quant.defvjp(_fq_fwd, _fq_bwd)
 
 
+def affine_grid(
+    bits, beta: jnp.ndarray, signed: bool
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The ``(scale, bias)`` of ``quantize_to_int``'s centered-code grid.
+
+    ``codes * scale + bias`` reconstructs the fake-quant value for codes on
+    this grid; the integer zero-point is ``-bias / scale``. Exposed so
+    activation specs can export their affine terms (and the integer GEMM
+    can fold them into its epilogue) without quantizing anything.
+    """
+    beta = jnp.maximum(jnp.asarray(beta, jnp.float32), 1e-8)
+    alpha = -beta if signed else jnp.zeros_like(beta)
+    bits_f = jnp.asarray(bits, jnp.float32)
+    n = jnp.exp2(bits_f) - 1.0
+    s = (beta - alpha) / n
+    offset = jnp.exp2(bits_f - 1.0)
+    return s, alpha + offset * s
+
+
 def quantize_to_int(
     x: jnp.ndarray, bits, beta: jnp.ndarray, signed: bool
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -151,8 +170,7 @@ def quantize_to_int(
     beta = jnp.maximum(jnp.asarray(beta, jnp.float32), 1e-8)
     alpha = -beta if signed else jnp.zeros_like(beta)
     bits_f = jnp.asarray(bits, jnp.float32)
-    n = jnp.exp2(bits_f) - 1.0
-    s = (beta - alpha) / n
+    s, bias = affine_grid(bits, beta, signed)
     x = jnp.asarray(x, jnp.float32)
     raw = jnp.round((jnp.clip(x, alpha, beta) - alpha) / s)  # in [0, 2^b-1]
     offset = jnp.exp2(bits_f - 1.0)
@@ -160,5 +178,4 @@ def quantize_to_int(
     max_bits = int(np.asarray(jax.device_get(bits_f)).max()) if not isinstance(
         bits, int) else bits
     dtype = jnp.int8 if max_bits <= 8 else jnp.int32
-    bias = alpha + offset * s
     return codes.astype(dtype), s, bias

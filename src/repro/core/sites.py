@@ -93,6 +93,11 @@ class QuantConfig:
     input_bits: int = 8             # fixed input quantization (paper §4.2)
     quantize_acts: bool = True
     act_granularity: str | None = None   # defaults to `granularity`
+    # Gate the matmul INPUT activations too (".in" sites, DESIGN.md §16):
+    # per-tensor affine, so the cost certificate covers compute
+    # (w_bits x a_bits x MACs) and serving can run integer GEMMs. Off by
+    # default: weight-only configs keep their exact pytree structure.
+    quantize_inputs: bool = False
 
     def __post_init__(self):
         if self.act_granularity is None:
@@ -307,6 +312,61 @@ class QuantContext:
             a = a + jnp.broadcast_to(self.probes[key], a.shape).astype(a.dtype)
         return self._fq(a, self._expand_act_gate(g, a), self._expand_act_gate(beta, a), signed)
 
+    def input_spec(self, name: str):
+        """Activation spec for this matmul's INPUT, or None (serve only).
+
+        Serve-mode ``layers.qmatmul`` consults this next to
+        ``serving_weight``: an exported int-code weight PLUS a calibrated
+        input spec dispatches the int8×int8 integer-accumulation kernel
+        (DESIGN.md §16).
+        """
+        if self.mode != "serve":
+            return None
+        return self.specs.get(self._full(name) + ".in")
+
+    def act_in(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+        """Quantize a matmul INPUT activation (the ``.in`` site, §16).
+
+        Per-tensor affine, gated like any other site so gate descent trades
+        weight vs activation precision and the BOP certificate covers
+        compute. In serve mode the integer GEMM quantizes its own tile
+        (``quant_matmul_qt``); this path fake-quants only the fp-fallback
+        sites that still carry a spec, keeping their logits on the same
+        grid as the integer path.
+        """
+        key = self._full(name) + ".in"
+        if not self.cfg.enabled:
+            return x
+        if self.mode == "serve":
+            spec = self.specs.get(key)
+            if spec is None:
+                return x
+            return fake_quant(x, jnp.asarray(spec.bits, jnp.float32),
+                              jnp.asarray(spec.beta, jnp.float32),
+                              spec.signed)
+        if self.mode in ("off", "collect", "export") \
+                or not self.cfg.quantize_inputs:
+            return x
+        if self.mode == "calibrate":
+            # Per-tensor running-range stats (same EMA loop as ``.a`` sites).
+            self.act_stats[key] = {
+                "max": jnp.max(jnp.abs(x)),
+                "min": jnp.min(x),
+                "mean_abs": jnp.mean(jnp.abs(x)),
+            }
+            return x
+        # train mode — tolerate states trained before ``.in`` gates existed.
+        g = self.gates.get(key)
+        if g is None:
+            return x
+        beta = self.ranges[key]["beta"]
+        signed = self.ranges[key]["signed"]
+        self.act_stats[key] = {"mean_abs": self._act_group_stat(x, g)}
+        if key in self.probes:
+            x = x + jnp.broadcast_to(self.probes[key], x.shape).astype(x.dtype)
+        return self._fq(x, self._expand_act_gate(g, x),
+                        self._expand_act_gate(beta, x), signed)
+
     def input(self, x: jnp.ndarray) -> jnp.ndarray:
         """Fixed-width input quantization (paper: 8-bit sensor data)."""
         if self.mode not in ("train", "serve") or not self.cfg.enabled:
@@ -400,6 +460,11 @@ def init_gates(
         if s.act_quantized:
             ashape = _group_shape(cfg.act_granularity, (s.out_features,), s.out_features)
             out[s.name + ".a"] = jnp.full(_stacked(ashape, s.stack), init, jnp.float32)
+        if cfg.quantize_inputs and s.act_quantized:
+            # ``.in`` sites are per-tensor by contract: the integer GEMM
+            # quantizes the whole input tile against ONE affine grid (§16).
+            out[s.name + ".in"] = jnp.full(_stacked((), s.stack), init,
+                                           jnp.float32)
     return out
 
 
@@ -410,6 +475,8 @@ def init_probes(sites: dict[str, SiteInfo], cfg: QuantConfig) -> dict[str, jnp.n
         if s.act_quantized:
             ashape = _group_shape(cfg.act_granularity, (s.out_features,), s.out_features)
             out[s.name + ".a"] = jnp.zeros(_stacked(ashape, s.stack), jnp.float32)
+        if cfg.quantize_inputs and s.act_quantized:
+            out[s.name + ".in"] = jnp.zeros(_stacked((), s.stack), jnp.float32)
     return out
 
 
@@ -452,6 +519,11 @@ def init_ranges_from_weights(
             ashape = _group_shape(cfg.act_granularity, (s.out_features,), s.out_features)
             ranges[s.name + ".a"] = {
                 "beta": jnp.ones(_stacked(ashape, s.stack), jnp.float32),
+                "signed": True,
+            }
+        if cfg.quantize_inputs and s.act_quantized:
+            ranges[s.name + ".in"] = {
+                "beta": jnp.ones(_stacked((), s.stack), jnp.float32),
                 "signed": True,
             }
     return ranges

@@ -1,0 +1,80 @@
+"""Shared Mosaic-friendly tile layout for the quant_matmul kernel family.
+
+Two things every kernel in this package (fp-epilogue dequant GEMM, packed
+sub-byte variant, int8×int8 integer-accumulation GEMM) needs and used to
+duplicate:
+
+  * **Block-size selection.** TPU vector registers are (8, 128) sublane ×
+    lane tiles; the MXU wants 128-aligned operands. ``gemm_blocks`` clamps
+    the requested (bm, bn, bk) to the problem size while keeping any block
+    that spans a full lane dimension a multiple of ``LANE`` — so a caller
+    passing an odd ``block_n`` still hands Mosaic aligned tiles, and small
+    (decode, M=1) problems degrade to their exact size instead of padding.
+    ``packed_blocks`` is the packed twin: the K block is counted in
+    UNPACKED columns and forced to a whole number of packed rows, so the
+    packed and unpacked kernels share one grid/masking scheme.
+
+  * **Interleave-free sub-byte unpack.** ``quant.pack`` stores byte ``i``
+    of a column as codes ``i*per + j`` (``j`` little-endian in the byte).
+    The old in-kernel decode shifted out the ``per`` fields, stacked them
+    on a new axis and reshaped — a sublane interleave Mosaic lowers as a
+    cross-lane shuffle (the ROADMAP carry-over). ``unpack_tile`` instead
+    widens the packed tile with a sublane ``repeat`` (row ``r`` holds byte
+    ``r // per``) and applies one elementwise shift/mask keyed off the row
+    index — repeat + iota + elementwise only, no reshape, same codes.
+
+CPU-interpret-mode equivalence against ``quant.pack.unpack_codes`` is
+property-tested in ``tests/test_int_gemm.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# TPU register tile geometry: (SUBLANE, LANE) fp32 vregs; MXU is LANE×LANE.
+LANE = 128
+SUBLANE = 8
+
+
+def _align_lane(block: int, dim: int) -> int:
+    """Clamp ``block`` to ``dim``; keep it LANE-aligned while it spans one."""
+    b = min(block, dim)
+    if b >= LANE:
+        b = (b // LANE) * LANE
+    return b
+
+
+def gemm_blocks(m: int, n: int, k: int, *, block_m: int, block_n: int,
+                block_k: int) -> tuple[int, int, int]:
+    """(bm, bn, bk) for an (M, K) × (K, N) kernel: clamped, lane-aligned."""
+    return min(block_m, m), _align_lane(block_n, n), min(block_k, k)
+
+
+def packed_blocks(m: int, n: int, kp: int, per: int, *, block_m: int,
+                  block_n: int, block_k: int) -> tuple[int, int, int, int]:
+    """(bm, bn, bkp, bk): K block in unpacked columns, whole packed rows.
+
+    ``kp`` is the packed K length (``ceil(K / per)``); ``bk = bkp * per`` is
+    the unpacked block the activation tile and the masking scheme see.
+    """
+    bm, bn = min(block_m, m), _align_lane(block_n, n)
+    bkp = min(max(block_k // per, 1), kp)
+    return bm, bn, bkp, bkp * per
+
+
+def unpack_tile(p: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Decode a packed (bkp, bn) int32 tile to (bkp*per, bn) centered codes.
+
+    Row ``r`` of the result is field ``r % per`` of packed row ``r // per``
+    — identical to ``quant.pack.unpack_codes`` on the tile, but built from
+    a sublane repeat plus elementwise shift/mask (no stack+reshape sublane
+    interleave), which Mosaic lowers without cross-lane data movement.
+    Returns int32; callers cast to the dtype their dot wants.
+    """
+    per = 8 // bits
+    offset = 1 << (bits - 1)
+    mask = (1 << bits) - 1
+    widened = jnp.repeat(p, per, axis=0)             # row r = byte r // per
+    rows = jax.lax.broadcasted_iota(jnp.int32, widened.shape, 0)
+    return ((widened >> ((rows % per) * bits)) & mask) - offset

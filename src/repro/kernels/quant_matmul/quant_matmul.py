@@ -25,10 +25,12 @@ bound, so roofline decode time drops proportionally to the certified
 bit-width, not to a uniform int8 floor.
 
 Tiling: grid (M/bm, N/bn, K/bk); accumulation in the fp32 output tile across
-the K grid dimension (output revisiting), 128-aligned tiles for the MXU.
-For the packed kernel the K block is counted in UNPACKED columns (``bk``
-must be a multiple of ``8 // bits``; the packed block is ``bk * bits / 8``
-rows), so the two kernels share one grid/masking scheme.
+the K grid dimension (output revisiting), 128-aligned tiles for the MXU
+picked by the shared ``layout`` helper. For the packed kernels the K block
+is counted in UNPACKED columns (``bk`` is a whole number of packed rows),
+so all kernels share one grid/masking scheme, and the in-register sub-byte
+decode is ``layout.unpack_tile`` — repeat + shift/mask, no sublane
+interleave.
 
 Kernel contract (DESIGN.md §8/§11):
     x:      (M, K)  fp32/bf16 activations
@@ -38,6 +40,22 @@ Kernel contract (DESIGN.md §8/§11):
                     grids; exactly zero only for symmetric signed grids)
     rowsum: (M,)    fp32 ``sum_k x[m, k]``
     out:    (M, N)  fp32 ``x @ (codes * scale + bias)``, exact in fp32
+
+The INTEGER variants (`int_matmul_pallas` / `int_matmul_packed_pallas`,
+DESIGN.md §16) take int8 activation CODES instead of float activations and
+accumulate on the MXU in **int32** (an int32 VMEM scratch tile persists
+across the sequential K grid steps). The affine epilogue is the same rank-1
+structure with the activation's per-tensor affine folded in: with
+``x = qx*sx + bx`` and ``w[k, n] = codes[k, n]*scale[n] + bias[n]``,
+
+    y[m, n] = (sx*scale[n]) * acc[m, n]            # int32 MXU accumulator
+            + (sx*bias[n])  * rowsum(qx)[m]        # rank-1, like the fp path
+            + bx * (scale[n]*colsum(codes)[n] + K*bias[n])   # constant (N,)
+
+so the wrapper passes ``eff_scale = sx*scale``, ``eff_bias = sx*bias``,
+integer ``rowsum(qx)`` and the precomputed ``const`` vector (``colsum`` is
+exported once with the weights — recomputing it per decode tick would cost
+a second GEMM-sized reduction).
 """
 
 from __future__ import annotations
@@ -47,6 +65,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .layout import gemm_blocks, packed_blocks, unpack_tile
 
 
 def _kernel(x_ref, c_ref, s_ref, b_ref, r_ref, o_ref, *, k_steps: int,
@@ -98,7 +119,8 @@ def quant_matmul_pallas(
     """
     m, k = x.shape
     _, n = codes.shape
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    bm, bn, bk = gemm_blocks(m, n, k, block_m=block_m, block_n=block_n,
+                             block_k=block_k)
     k_steps = pl.cdiv(k, bk)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps)
     return pl.pallas_call(
@@ -124,10 +146,6 @@ def quant_matmul_pallas(
 
 def _packed_kernel(x_ref, p_ref, s_ref, b_ref, r_ref, o_ref, *, bits: int,
                    k_steps: int, k_total: int, bk: int):
-    per = 8 // bits
-    offset = 1 << (bits - 1)
-    mask = (1 << bits) - 1
-
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -139,10 +157,7 @@ def _packed_kernel(x_ref, p_ref, s_ref, b_ref, r_ref, o_ref, *, bits: int,
     kx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + k0
     x = jnp.where(kx < k_total, x, 0.0)
     p = p_ref[...].astype(jnp.int32)                  # (bk // per, bn)
-    # In-register unpack: byte i holds codes i*per + j (j little-endian).
-    cols = [((p >> (j * bits)) & mask) - offset for j in range(per)]
-    stacked = jnp.stack(cols, axis=1)                 # (bk//per, per, bn)
-    codes = stacked.reshape(bk, stacked.shape[-1]).astype(jnp.float32)
+    codes = unpack_tile(p, bits).astype(jnp.float32)  # (bk, bn)
     o_ref[...] += jax.lax.dot(x, codes, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
@@ -177,10 +192,9 @@ def quant_matmul_packed_pallas(
     per = 8 // bits
     m = x.shape[0]
     kp, n = packed.shape
-    bm, bn = min(block_m, m), min(block_n, n)
     # K block in unpacked columns, forced to a whole number of packed rows.
-    bkp = min(max(block_k // per, 1), kp)
-    bk = bkp * per
+    bm, bn, bkp, bk = packed_blocks(m, n, kp, per, block_m=block_m,
+                                    block_n=block_n, block_k=block_k)
     k_steps = pl.cdiv(kp, bkp)
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps)
     return pl.pallas_call(
@@ -198,3 +212,154 @@ def quant_matmul_packed_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         interpret=interpret,
     )(x, packed, scale, bias, rowsum)
+
+
+# ---------------------------------------------------------------------------
+# Integer variants: int8 x int8 GEMM with int32 MXU accumulation (§16)
+# ---------------------------------------------------------------------------
+
+
+def _int_kernel(x_ref, c_ref, s_ref, b_ref, r_ref, cst_ref, o_ref, acc_ref,
+                *, k_steps: int, k_total: int, bk: int):
+    # acc_ref: int32 VMEM scratch — TPU grids execute sequentially per core,
+    # so the accumulator persists across the K grid steps of one (i, j) tile.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                    # (bm, bk) int8 codes
+    codes = c_ref[...]                                # (bk, bn) int8 codes
+    if k_total % bk:
+        # Ragged K: zero the activation tail; a zeroed int8 operand makes
+        # the out-of-bounds products exact zeros in the int32 accumulator.
+        k0 = pl.program_id(2) * bk
+        kx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + k0
+        x = jnp.where(kx < k_total, x, jnp.zeros_like(x))
+    acc_ref[...] += jax.lax.dot(x, codes, preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        # One cast of the int32 accumulator, then the zero-point-corrected
+        # affine: y = eff_scale*acc + eff_bias*rowsum(qx) + const.
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * s_ref[...][None, :]
+            + r_ref[...][:, None] * b_ref[...][None, :]
+            + cst_ref[...][None, :]
+        )
+
+
+def int_matmul_pallas(
+    qx: jnp.ndarray,
+    codes: jnp.ndarray,
+    eff_scale: jnp.ndarray,
+    eff_bias: jnp.ndarray,
+    rowsum: jnp.ndarray,
+    const: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """qx: (M, K) int8 activation codes; codes: (K, N) int8 weight codes.
+
+    Returns (M, N) fp32
+    ``eff_scale * (qx @ codes) + eff_bias * rowsum + const`` with the GEMM
+    accumulated in int32 (see module docstring for how the wrapper folds
+    the two affine grids into these vectors). ``rowsum``: (M,) fp32
+    ``sum_k qx[m, k]``; ``const``: (N,) fp32.
+    """
+    m, k = qx.shape
+    _, n = codes.shape
+    bm, bn, bk = gemm_blocks(m, n, k, block_m=block_m, block_n=block_n,
+                             block_k=block_k)
+    k_steps = pl.cdiv(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps)
+    return pl.pallas_call(
+        functools.partial(_int_kernel, k_steps=k_steps, k_total=k, bk=bk),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(qx, codes, eff_scale, eff_bias, rowsum, const)
+
+
+def _int_packed_kernel(x_ref, p_ref, s_ref, b_ref, r_ref, cst_ref, o_ref,
+                       acc_ref, *, bits: int, k_steps: int, k_total: int,
+                       bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                    # (bm, bk) int8 codes
+    # Mask activation columns past K: pack-padding words and ragged tails
+    # then multiply a zeroed operand (same scheme as the float kernel).
+    k0 = pl.program_id(2) * bk
+    kx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + k0
+    x = jnp.where(kx < k_total, x, jnp.zeros_like(x))
+    p = p_ref[...].astype(jnp.int32)                  # (bk // per, bn)
+    codes = unpack_tile(p, bits).astype(jnp.int8)     # (bk, bn)
+    acc_ref[...] += jax.lax.dot(x, codes, preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * s_ref[...][None, :]
+            + r_ref[...][:, None] * b_ref[...][None, :]
+            + cst_ref[...][None, :]
+        )
+
+
+def int_matmul_packed_pallas(
+    qx: jnp.ndarray,
+    packed: jnp.ndarray,
+    eff_scale: jnp.ndarray,
+    eff_bias: jnp.ndarray,
+    rowsum: jnp.ndarray,
+    const: jnp.ndarray,
+    *,
+    bits: int,
+    k: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Packed twin of ``int_matmul_pallas``: 2/4-bit weight codes are
+    decoded to int8 in-register (``layout.unpack_tile``) and fed to the
+    same int32-accumulating dot — sub-byte weight bandwidth AND integer
+    MACs in one kernel."""
+    assert bits in (2, 4), bits
+    per = 8 // bits
+    m = qx.shape[0]
+    kp, n = packed.shape
+    bm, bn, bkp, bk = packed_blocks(m, n, kp, per, block_m=block_m,
+                                    block_n=block_n, block_k=block_k)
+    k_steps = pl.cdiv(kp, bkp)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps)
+    return pl.pallas_call(
+        functools.partial(_int_packed_kernel, bits=bits, k_steps=k_steps,
+                          k_total=k, bk=bk),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkp, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(qx, packed, eff_scale, eff_bias, rowsum, const)

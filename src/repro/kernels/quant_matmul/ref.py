@@ -1,7 +1,9 @@
-"""Pure-jnp oracles for the fused dequant GEMM (int8 and packed)."""
+"""Pure-jnp oracles for the fused dequant GEMM (int8 and packed) and the
+int8×int8 integer-accumulation GEMM (DESIGN.md §16)."""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -28,3 +30,35 @@ def quant_matmul_packed_ref(x: jnp.ndarray, packed: jnp.ndarray,
     from repro.quant.pack import unpack_codes
 
     return quant_matmul_ref(x, unpack_codes(packed, bits, k), scale, bias)
+
+
+def int_matmul_ref(qx: jnp.ndarray, codes: jnp.ndarray,
+                   eff_scale: jnp.ndarray, eff_bias: jnp.ndarray,
+                   rowsum: jnp.ndarray, const: jnp.ndarray) -> jnp.ndarray:
+    """qx: (M, K) int8 act codes; codes: (K, N) int8 weight codes.
+
+    ``eff_scale * (qx @ codes) + eff_bias * rowsum + const`` with the GEMM
+    accumulated in int32 — the jnp oracle the Pallas integer kernel is
+    property-tested against (exact: same int32 accumulator, same fp32
+    epilogue expression). The wrapper (ops.py) derives the three affine
+    vectors from the weight's and activation's per-tensor/per-channel grids
+    so this equals ``(qx*sx + bx) @ (codes*scale + bias)`` in exact
+    arithmetic.
+    """
+    acc = jax.lax.dot(qx.astype(jnp.int32), codes.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * eff_scale[None, :]
+            + rowsum[:, None] * eff_bias[None, :] + const[None, :])
+
+
+def int_matmul_packed_ref(qx: jnp.ndarray, packed: jnp.ndarray,
+                          eff_scale: jnp.ndarray, eff_bias: jnp.ndarray,
+                          rowsum: jnp.ndarray, const: jnp.ndarray, *,
+                          bits: int, k: int) -> jnp.ndarray:
+    """Packed oracle: unpack the sub-byte weight codes, then
+    ``int_matmul_ref`` — so packed integer serving is bit-for-bit the int8
+    integer path whenever the pack round-trip is exact."""
+    from repro.quant.pack import unpack_codes
+
+    return int_matmul_ref(qx, unpack_codes(packed, bits, k), eff_scale,
+                          eff_bias, rowsum, const)

@@ -47,12 +47,17 @@ def qmatmul(qc: QuantContext, name: str, x, w, *, positions: int = 1,
     if qw is not None:
         from repro.kernels.quant_matmul.ops import quant_matmul_qt
 
+        # With a calibrated ``.in`` spec the GEMM goes fully integer: the
+        # kernel quantizes the activation tile on the fly and accumulates
+        # int8×int8 in int32 (DESIGN.md §16). Without one, the int-weight ×
+        # fp32-act fused-dequant path runs — the asserted oracle.
         y = quant_matmul_qt(
-            x, qw,
+            x, qw, act_spec=qc.input_spec(name),
             use_pallas=qc.matmul_impl != "ref",
             interpret=qc.matmul_impl != "pallas",
         )
         return y.astype(COMPUTE_DTYPE)
+    x = qc.act_in(name, x)
     wq = qc.weight(name, w)
     y = jax.lax.dot_general(
         x.astype(COMPUTE_DTYPE), wq.astype(COMPUTE_DTYPE),

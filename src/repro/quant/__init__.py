@@ -26,12 +26,13 @@ re-deriving bit-widths from gates. They are consolidated here:
                               vs uniform int8.
 """
 
-from .export import ExportLedger, export_sites  # noqa: F401
+from .export import (ActExportEntry, ExportLedger,  # noqa: F401
+                     export_act_sites, export_sites)
 from .kv import (KVQuantSpec, bytes_per_cached_token,  # noqa: F401
                  dequantize_kv, kv_cache_report, quantize_kv,
                  spec_from_cache)
 from .pack import (blockwise_int8_decode, blockwise_int8_encode,  # noqa: F401
                    pack_codes, unpack_codes)
 from .report import quant_report  # noqa: F401
-from .spec import (QuantSpec, QuantizedTensor,  # noqa: F401
-                   specs_from_state)
+from .spec import (ActQuantSpec, QuantSpec,  # noqa: F401
+                   QuantizedTensor, specs_from_state)

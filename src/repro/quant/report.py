@@ -84,9 +84,22 @@ def quant_report(ledger, gates: dict, kv: dict | None = None) -> dict:
         "fallback_sites": len(ledger.fallbacks()),
         "exported_sites": len(ledger.exported()),
     }
+    # Activation (".in") coverage (DESIGN.md §16): which GEMMs run integer
+    # MACs vs float inputs. ``covered == total`` means every quantized-output
+    # matmul serves int8×int8 — the condition CI's int-serving gate asserts.
+    act_entries = getattr(ledger, "act_entries", None) or {}
+    acts = {
+        "total": sum(1 for e in act_entries.values() if e.served != "excluded"),
+        "covered": len(ledger.act_exported()) if act_entries else 0,
+        "fallback_sites": sorted(k for k, e in act_entries.items()
+                                 if e.served == "fake_quant"),
+        "bits": {k: e.bits for k, e in act_entries.items()
+                 if e.served == "int"},
+    }
     out = {
         "per_site": per_site,
         "totals": totals,
+        "acts": acts,
         "bops": {
             "model": bops_model,
             "fp32": bops_fp32,

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gates import gate_to_bits
-from repro.core.quantizer import quantize_to_int
+from repro.core.quantizer import affine_grid, quantize_to_int
 
 from .pack import pack_codes, unpack_codes
 
@@ -100,6 +100,50 @@ class QuantSpec:
         return storage_class_for(self.max_bits())
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ActQuantSpec:
+    """Per-TENSOR affine activation spec: the ``.in`` sites (DESIGN.md §16).
+
+    The activation variant of ``QuantSpec``: ``bits`` and ``signed`` are
+    STATIC (python scalars, pytree aux data), so the integer-GEMM dispatch
+    and the int8 code dtype specialize per site under jit/scan; ``beta`` is
+    the EMA-calibrated range (a traced leaf, with a leading stack axis for
+    scan-stacked sites, sliced per layer exactly like weight specs). The
+    serve path quantizes the incoming activation tile on the fly against
+    this grid and hands int8 codes to the int8×int8 kernel.
+    """
+
+    bits: int
+    beta: jnp.ndarray
+    signed: bool = True
+
+    def tree_flatten(self):
+        return (self.beta,), (self.bits, self.signed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(bits=aux[0], beta=children[0], signed=aux[1])
+
+    @classmethod
+    def from_gate(cls, gate, beta, signed: bool) -> "ActQuantSpec":
+        """Freeze a concrete activation gate (host sync, export-time only)."""
+        bits = int(np.asarray(
+            jax.device_get(gate_to_bits(jnp.asarray(gate)))).max())
+        return cls(bits=bits, beta=jnp.asarray(beta, jnp.float32),
+                   signed=bool(signed))
+
+    def affine(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """``(scale, bias)`` of the stored grid: dequant = codes*scale+bias.
+        """
+        return affine_grid(self.bits, self.beta, self.signed)
+
+    def zero_point(self) -> jnp.ndarray:
+        """Integer zero-point ``z`` with ``x ~ scale * (codes - z)``."""
+        scale, bias = self.affine()
+        return -bias / scale
+
+
 def specs_from_state(gates: dict, betas: dict, signed: dict) -> dict:
     """Controller state -> spec pytree: one ``QuantSpec`` per gated key.
 
@@ -121,7 +165,10 @@ class QuantizedTensor:
     layout). ``scale``/``bias`` broadcast to the unpacked code shape;
     ``codes * scale + bias`` equals the fake-quant forward exactly.
     ``storage_bits`` and the logical fan-in ``k`` are static, so jit/scan
-    specialization dispatches the right kernel per site.
+    specialization dispatches the right kernel per site. ``colsum`` is the
+    precomputed ``(..., N)`` int32 K-axis sum of the (unpacked) codes — the
+    zero-point correction term of the integer GEMM (DESIGN.md §16), frozen
+    at export so decode never recomputes a GEMM-sized reduction per tick.
     """
 
     codes: jnp.ndarray
@@ -129,15 +176,17 @@ class QuantizedTensor:
     bias: jnp.ndarray
     storage_bits: int
     k: int
+    colsum: jnp.ndarray | None = None
 
     def tree_flatten(self):
-        return (self.codes, self.scale, self.bias), (self.storage_bits, self.k)
+        return ((self.codes, self.scale, self.bias, self.colsum),
+                (self.storage_bits, self.k))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        codes, scale, bias = children
+        codes, scale, bias, colsum = children
         return cls(codes=codes, scale=scale, bias=bias,
-                   storage_bits=aux[0], k=aux[1])
+                   storage_bits=aux[0], k=aux[1], colsum=colsum)
 
     @property
     def packed(self) -> bool:
@@ -156,17 +205,29 @@ class QuantizedTensor:
         """
         codes, scale, bias = quantize_to_int(w, bits, beta, signed)
         k = int(w.shape[-2])
+        colsum = jnp.sum(codes.astype(jnp.int32), axis=-2)
         if pack and storage_bits < 8:
             return cls(codes=pack_codes(codes, storage_bits), scale=scale,
-                       bias=bias, storage_bits=storage_bits, k=k)
+                       bias=bias, storage_bits=storage_bits, k=k,
+                       colsum=colsum)
         return cls(codes=codes.astype(jnp.int8), scale=scale, bias=bias,
-                   storage_bits=8, k=k)
+                   storage_bits=8, k=k, colsum=colsum)
 
     def int8_codes(self) -> jnp.ndarray:
         """Unpacked centered codes ``(..., K, N)`` int8 (oracle layout)."""
         if not self.packed:
             return self.codes
         return unpack_codes(self.codes, self.storage_bits, self.k)
+
+    def code_colsum(self) -> jnp.ndarray:
+        """``(..., N)`` int32 K-sum of the unpacked codes (§16 correction).
+
+        Uses the exported leaf when present; falls back to reducing the
+        unpacked codes for tensors frozen before the leaf existed.
+        """
+        if self.colsum is not None:
+            return self.colsum
+        return jnp.sum(self.int8_codes().astype(jnp.int32), axis=-2)
 
     def dequantize(self) -> jnp.ndarray:
         """fp32 weight on the exact fake-quant grid."""

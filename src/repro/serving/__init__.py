@@ -31,7 +31,8 @@ from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
                                      latency_percentiles)
 from repro.serving.engine import (GenerationResult, Request, ServingEngine,
                                   TokenEvent, export_int_codes,
-                                  export_int_model, make_mixed_quant_state,
+                                  export_int_model, make_act_specs,
+                                  make_mixed_quant_state,
                                   make_uniform_quant_state)
 from repro.serving.faults import (FaultInjector, InjectedFault,
                                   ServingSupervisor)
@@ -44,6 +45,6 @@ __all__ = [
     "GenerationResult", "InjectedFault", "Request", "SamplingParams",
     "ServingEngine", "ServingSupervisor", "TERMINAL_REASONS", "TokenEvent",
     "WaitingQueue", "export_int_codes", "export_int_model", "finite_rows",
-    "latency_percentiles", "make_mixed_quant_state",
+    "latency_percentiles", "make_act_specs", "make_mixed_quant_state",
     "make_uniform_quant_state", "mask_logits", "sample_tokens",
 ]

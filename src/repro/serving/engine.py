@@ -57,8 +57,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.sites import QuantContext
 from repro.models import transformer as tfm
-from repro.quant import (KVQuantSpec, QuantizedTensor, QuantSpec,
-                         export_sites, quant_report, specs_from_state)
+from repro.core.calibration import calibrate_activations
+from repro.quant import (ActQuantSpec, KVQuantSpec, QuantizedTensor,
+                         QuantSpec, export_act_sites, export_sites,
+                         quant_report, specs_from_state)
 from repro.quant.kv import kv_cache_report
 from repro.serving import kv_pool
 from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
@@ -158,6 +160,51 @@ def make_uniform_quant_state(cfg: ModelConfig, params, *, gate_init=2.2,
 
 # Gate values landing exactly on T(g) = 2 / 4 / 8 bits (core.gates Eq. 4).
 MIXED_GATE_LEVELS = (0.8, 1.5, 2.5)
+
+# bits -> the gate value whose T(g) is exactly that width; used to fold
+# served activation widths back into the BOP certificate (DESIGN.md §16).
+ACT_GATE_LEVELS = {2: 0.8, 4: 1.5, 8: 2.5}
+
+
+def make_act_specs(cfg: ModelConfig, params, act_bits: int, *, plan=None,
+                   batches: int = 2, seq: int = 16, seed: int = 0) -> dict:
+    """Calibrate per-tensor ``.in`` activation specs for serving (§16).
+
+    Runs a few seeded random batches through the SAME calibrate-mode
+    forward training uses (``QuantConfig(quantize_inputs=True)`` turns the
+    ``.in`` recording on), EMA-aggregates the per-batch ranges via
+    ``core.calibration.calibrate_activations``, and freezes each GEMM-input
+    site into an ``ActQuantSpec`` at ``act_bits``. Scan-stacked sites come
+    back with a leading layer axis on ``beta`` — the layout the decode scan
+    re-slices. Returns {"<site>.in": ActQuantSpec}; merge into a serve
+    context's ``specs`` (the engine's ``act_bits=`` knob does this) to run
+    the int8×int8 integer GEMM path end to end.
+    """
+    from repro.core.sites import QuantConfig
+
+    qcfg = QuantConfig(quantize_inputs=True)
+    rng = np.random.default_rng(seed)
+    if cfg.embed_input:
+        data = [jnp.asarray(rng.integers(0, cfg.vocab_size, (1, seq)),
+                            jnp.int32) for _ in range(batches)]
+    else:
+        data = [jnp.asarray(rng.normal(size=(1, seq, cfg.d_model)),
+                            jnp.float32) for _ in range(batches)]
+    mrope = None
+    if cfg.mrope_sections is not None:
+        mrope = jnp.broadcast_to(jnp.arange(seq)[None, None, :], (3, 1, seq))
+
+    def _fwd(qc, batch):
+        tfm.forward_train(qc, params, batch, cfg, plan=plan, mrope_pos=mrope,
+                          moe_impl="dense_all", remat=False)
+
+    act_ranges = calibrate_activations(_fwd, data, qcfg)
+    return {
+        key: ActQuantSpec(bits=int(act_bits),
+                          beta=jnp.asarray(v["beta"], jnp.float32),
+                          signed=bool(v["signed"]))
+        for key, v in act_ranges.items() if key.endswith(".in")
+    }
 
 
 def make_mixed_quant_state(cfg: ModelConfig, params, *,
@@ -325,7 +372,7 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 256, quant_state: dict | None = None,
-                 plan=None, use_int8: bool = True,
+                 plan=None, use_int8: bool = True, act_bits: int | None = None,
                  matmul_impl: str | None = None, kv_layout: str = "auto",
                  kv_dtype: str = "bf16",
                  block_size: int = 8, num_blocks: int | None = None,
@@ -368,6 +415,19 @@ class ServingEngine:
         if quant_state is not None and use_int8:
             self.qweights, self.export_ledger = export_int_model(
                 params, cfg, quant_state, plan=plan)
+        # Fully-integer GEMMs (DESIGN.md §16): calibrate per-tensor ``.in``
+        # activation specs and merge them into the serve specs — every site
+        # with an int-code export then dispatches the int8×int8 kernel.
+        self.act_bits = act_bits
+        self.act_specs: dict[str, ActQuantSpec] = {}
+        if act_bits is not None:
+            if quant_state is None:
+                raise ValueError("act_bits requires a quant_state")
+            self.act_specs = make_act_specs(cfg, params, act_bits, plan=plan)
+            self.specs = {**self.specs, **self.act_specs}
+            if self.export_ledger is not None:
+                self.export_ledger.act_entries = export_act_sites(
+                    self.act_specs, self.export_ledger.sites)
 
         kinds = list(cfg.block_pattern) + list(cfg.remainder_kinds)
         has_attn = any(k in ("global", "local") for k in kinds)
@@ -1820,8 +1880,17 @@ class ServingEngine:
         uniform-int8 baselines, plus the §14 KV-cache section. Requires an
         int export (use ``kv_report`` alone for float-weight engines)."""
         assert self.export_ledger is not None, "no quantized export to report"
-        return quant_report(self.export_ledger, self.quant_state["gates"],
-                            kv=self.kv_report())
+        gates = self.quant_state["gates"]
+        if self.act_specs:
+            # Fold the SERVED activation widths into the certificate: each
+            # ``.in`` spec contributes a per-tensor gate at the level whose
+            # T(g) is exactly its bit-width, so ``model_bop`` certifies
+            # true w_bits × a_bits × MACs compute (DESIGN.md §16).
+            gates = dict(gates)
+            for key, spec in self.act_specs.items():
+                gates[key] = jnp.asarray(ACT_GATE_LEVELS[int(spec.bits)],
+                                         jnp.float32)
+        return quant_report(self.export_ledger, gates, kv=self.kv_report())
 
     def run_to_completion(self, max_ticks: int = 1000):
         ticks = 0

@@ -1,0 +1,427 @@
+"""Fully-integer inference tests (DESIGN.md §16).
+
+Covers the ``.in`` activation-site machinery end to end:
+  * site plumbing — ``QuantConfig(quantize_inputs=True)`` creates per-tensor
+    ``.in`` gates/probes/ranges, calibrate-mode forwards record their
+    ranges, train-mode forwards fake-quantize through them;
+  * the BOP certificate — ``activation_gate`` resolves ``.in`` before
+    ``.a``, dropping an input gate's width drops ``model_bop``, and
+    weight-only states reproduce the historical numbers exactly;
+  * the integer GEMM — ``quant_matmul_qt`` with an ``ActQuantSpec`` equals
+    ``fake_quant(x) @ dequant(qt)`` within fp32 epilogue rounding (2e-5),
+    the Pallas int kernels match the int32-accumulating oracle BITWISE when
+    the affine epilogue is the identity, and the shared tile unpack equals
+    ``quant.pack.unpack_codes``;
+  * serving — decode logits of the int8×int8 path match the
+    int-weight × fp32-act oracle on every arch and both KV layouts, and the
+    engine's ``act_bits=`` knob serves integer end to end at one host sync
+    per tick with full ledger coverage.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container without hypothesis: deterministic replay
+    from _hyp_fallback import given, settings
+    from _hyp_fallback import strategies as st
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core import bop as bop_lib
+from repro.core.calibration import calibrate_activations
+from repro.core.quantizer import fake_quant, quantize_to_int
+from repro.core.sites import (QuantConfig, QuantContext, collect_sites,
+                              init_gates, init_probes,
+                              init_ranges_from_weights)
+from repro.kernels.quant_matmul.layout import unpack_tile
+from repro.kernels.quant_matmul.ops import quant_matmul_qt
+from repro.kernels.quant_matmul.quant_matmul import (int_matmul_packed_pallas,
+                                                     int_matmul_pallas)
+from repro.kernels.quant_matmul.ref import int_matmul_ref
+from repro.models import transformer as tfm
+from repro.quant import ActQuantSpec, QuantizedTensor, specs_from_state
+from repro.quant.export import export_act_sites
+from repro.quant.pack import pack_codes, unpack_codes
+from repro.serving import (SamplingParams, ServingEngine, export_int_model,
+                           make_act_specs, make_uniform_quant_state)
+from repro.serving import kv_pool
+
+ARCH = "tinyllama-1.1b"
+
+# Decode-logits gap vs the int-weight × fp32-act oracle (max |Δlogit| over a
+# prefill + 3 greedy decode steps, measured per arch, both layouts
+# identical). The gap is requantization error on every GEMM input — ~1e-2
+# relative on random smoke weights — NOT accumulator error (that path is
+# tested bitwise below). recurrentgemma's RG-LRU recurrence compounds the
+# per-step perturbation a little harder than attention archs.
+DECODE_ATOL = 0.1
+DECODE_ATOL_ARCH = {"recurrentgemma-2b": 0.25}
+
+
+def _model(arch=ARCH, seed=0):
+    cfg = get_smoke_config(arch)
+    return cfg, tfm.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _in_cfg():
+    return QuantConfig(quantize_inputs=True)
+
+
+# ---------------------------------------------------------------------------
+# ``.in`` site plumbing: creation, calibration, train-mode fake quant
+# ---------------------------------------------------------------------------
+
+
+def test_in_sites_created_and_calibrated():
+    cfg, params = _model()
+    qcfg = _in_cfg()
+    toks = jnp.zeros((1, 8), jnp.int32)
+    sites = collect_sites(
+        lambda qc, x: tfm.forward_train(qc, params, x, cfg), toks, cfg=qcfg)
+
+    gates = init_gates(sites, qcfg)
+    probes = init_probes(sites, qcfg)
+    ranges = init_ranges_from_weights(sites, qcfg, lambda name: None)
+    in_keys = sorted(k for k in gates if k.endswith(".in"))
+    assert in_keys, "quantize_inputs=True must create .in gates"
+    for key in in_keys:
+        site = sites[key[: -len(".in")]]
+        assert site.act_quantized  # fp-output sites carry no .in gate
+        # per-tensor by contract: scalar, or (stack,) for scanned layers
+        expected = (site.stack,) if site.stack > 1 else ()
+        assert gates[key].shape == expected
+        assert probes[key].shape == expected
+        assert ranges[key]["beta"].shape == expected
+        assert ranges[key]["signed"] is True
+    # the default config creates none of this (exact pytree compatibility)
+    assert not any(k.endswith(".in") for k in init_gates(sites, QuantConfig()))
+
+    # calibrate-mode forward records per-tensor ranges for every .in site
+    act_ranges = calibrate_activations(
+        lambda qc, x: tfm.forward_train(qc, params, x, cfg), [toks], qcfg)
+    for key in in_keys:
+        assert key in act_ranges
+        assert float(np.asarray(act_ranges[key]["beta"]).min()) > 0.0
+
+    # train-mode forward fake-quantizes through the .in gates and taps stats
+    qc = QuantContext(mode="train", cfg=qcfg, gates=gates, ranges=ranges,
+                      probes=probes)
+    tfm.forward_train(qc, params, toks, cfg)
+    for key in in_keys:
+        assert "mean_abs" in qc.act_stats[key]
+
+
+# ---------------------------------------------------------------------------
+# BOP certificate: true w_bits x a_bits x MACs
+# ---------------------------------------------------------------------------
+
+
+def test_bop_certificate_covers_activation_sites():
+    cfg, params = _model()
+    qcfg = _in_cfg()
+    toks = jnp.zeros((1, 8), jnp.int32)
+    sites = collect_sites(
+        lambda qc, x: tfm.forward_train(qc, params, x, cfg), toks, cfg=qcfg)
+    gates = init_gates(sites, qcfg, init=2.5)          # everything 8-bit
+
+    # resolution order: .in wins over .a; .a is the fallback; else fp32
+    name = next(s.name for s in sites.values() if s.act_quantized)
+    ag = bop_lib.activation_gate(gates, name)
+    assert ag is gates[name + ".in"]
+    no_in = {k: v for k, v in gates.items() if not k.endswith(".in")}
+    assert bop_lib.activation_gate(no_in, name) is gates[name + ".a"]
+    assert bop_lib.activation_gate({}, name) is None
+
+    # halving every GEMM-input width halves the certified BOPs — the .a
+    # output gates stay untouched, so the drop can only come from .in
+    b8 = float(bop_lib.model_bop(sites, gates))
+    g4 = {k: (jnp.full_like(v, 1.5) if k.endswith(".in") else v)
+          for k, v in gates.items()}
+    b4 = float(bop_lib.model_bop(sites, g4))
+    assert b4 == pytest.approx(b8 / 2.0, rel=1e-6)
+
+
+def test_weight_only_bop_unchanged_without_in_gates():
+    """No ``.in`` keys -> model_bop is exactly the historical .w/.a sum."""
+    cfg, params = _model()
+    toks = jnp.zeros((1, 8), jnp.int32)
+    sites = collect_sites(
+        lambda qc, x: tfm.forward_train(qc, params, x, cfg), toks,
+        cfg=QuantConfig())
+    gates = init_gates(sites, QuantConfig(), init=2.3)
+    legacy = sum(
+        float(bop_lib.site_bop(s, gates.get(s.name + ".w"),
+                               gates.get(s.name + ".a")))
+        for s in sites.values())
+    assert float(bop_lib.model_bop(sites, gates)) == pytest.approx(
+        legacy, rel=0, abs=0)
+
+
+# ---------------------------------------------------------------------------
+# ActQuantSpec grid properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]),
+       beta=st.floats(min_value=0.05, max_value=20.0),
+       signed=st.booleans(),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_act_quantize_dequantize_idempotent(bits, beta, signed, seed):
+    """Requantizing a dequantized activation reproduces the codes bitwise,
+    and the spec's affine/zero-point views agree with the stored grid."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=beta, size=(5, 33)), jnp.float32)
+    spec = ActQuantSpec(bits=bits, beta=jnp.asarray(beta, jnp.float32),
+                        signed=signed)
+
+    codes, scale, bias = quantize_to_int(x, spec.bits, spec.beta, spec.signed)
+    deq = codes.astype(jnp.float32) * scale + bias
+    codes2, scale2, bias2 = quantize_to_int(deq, spec.bits, spec.beta,
+                                            spec.signed)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes2))
+
+    s, b = spec.affine()
+    assert float(s) == float(scale) and float(b) == float(bias)
+    # x ~ scale * (codes - zero_point), by definition of the zero point
+    z = spec.zero_point()
+    np.testing.assert_allclose(
+        np.asarray(s * (codes.astype(jnp.float32) - z)), np.asarray(deq),
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Integer GEMM vs the fake-quant oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(min_value=1, max_value=5),
+       k=st.integers(min_value=3, max_value=70),
+       n=st.integers(min_value=1, max_value=40),
+       storage=st.sampled_from([2, 4, 8]),
+       act_bits=st.sampled_from([4, 8]),
+       act_signed=st.booleans(),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_int_path_equals_fake_quant_oracle(m, k, n, storage, act_bits,
+                                           act_signed, seed):
+    """quant_matmul_qt(x, qt, act_spec) == fake_quant(x) @ dequant(qt) up to
+    fp32 epilogue rounding — ragged K, packed sub-byte weights, signed and
+    unsigned activation grids."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(scale=0.2, size=(k, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    if not act_signed:
+        x = jnp.abs(x)
+    qt = QuantizedTensor.from_float(
+        w, storage, jnp.max(jnp.abs(w), axis=0), True, storage_bits=storage)
+    beta = jnp.maximum(jnp.max(jnp.abs(x)), 1e-3)
+    spec = ActQuantSpec(bits=act_bits, beta=beta, signed=act_signed)
+
+    y = quant_matmul_qt(x, qt, act_spec=spec, use_pallas=False)
+    oracle = fake_quant(x, jnp.asarray(float(act_bits)), beta,
+                        act_signed) @ qt.dequantize()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(min_value=1, max_value=4),
+       k=st.integers(min_value=5, max_value=90),
+       n=st.integers(min_value=1, max_value=20),
+       bits=st.sampled_from([2, 4, 8]),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_int_kernel_accumulator_bitwise_vs_oracle(m, k, n, bits, seed):
+    """With an identity epilogue (eff_scale=1, eff_bias=0, const=0) the
+    Pallas kernels ARE the int32 matmul — bitwise, both storage classes.
+    (int8 x int8 over K <= 90 keeps |acc| < 2^24, exactly held by fp32.)"""
+    rng = np.random.default_rng(seed)
+    qx = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    ones, zeros = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+    rowsum = jnp.asarray(rng.normal(size=(m,)), jnp.float32)  # must not leak
+
+    lo = -(1 << (bits - 1))
+    codes = jnp.asarray(rng.integers(lo, -lo, size=(k, n)), jnp.int8)
+    acc = np.asarray(jax.lax.dot(qx.astype(jnp.int32), codes.astype(jnp.int32),
+                                 preferred_element_type=jnp.int32),
+                     np.float32)
+    ref = np.asarray(int_matmul_ref(qx, codes, ones, zeros, rowsum, zeros))
+    np.testing.assert_array_equal(ref, acc)
+
+    if bits == 8:
+        y = int_matmul_pallas(qx, codes, ones, zeros, rowsum, zeros,
+                              interpret=True)
+    else:
+        y = int_matmul_packed_pallas(qx, pack_codes(codes, bits), ones, zeros,
+                                     rowsum, zeros, bits=bits, k=k,
+                                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), acc)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([2, 4]),
+       k=st.integers(min_value=1, max_value=70),
+       n=st.integers(min_value=1, max_value=24),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_unpack_tile_matches_unpack_codes(bits, k, n, seed):
+    """The kernels' repeat+shift tile decode == quant.pack.unpack_codes
+    (ragged K: rows past K are pack padding and are dropped)."""
+    rng = np.random.default_rng(seed)
+    lo = -(1 << (bits - 1))
+    codes = jnp.asarray(rng.integers(lo, -lo, size=(k, n)), jnp.int8)
+    packed = pack_codes(codes, bits)
+    tile = unpack_tile(packed.astype(jnp.int32), bits)[:k]
+    np.testing.assert_array_equal(np.asarray(tile),
+                                  np.asarray(unpack_codes(packed, bits, k)))
+    np.testing.assert_array_equal(np.asarray(tile), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# Activation export ledger
+# ---------------------------------------------------------------------------
+
+
+def test_act_export_ledger_flags_fallbacks():
+    cfg, params = _model()
+    qs = make_uniform_quant_state(cfg, params)
+    _, ledger = export_int_model(params, cfg, qs)
+    act = make_act_specs(cfg, params, 8)
+
+    # full calibration: every site served integer, nothing hidden
+    entries = export_act_sites(act, ledger.sites)
+    assert set(entries) == {name + ".in" for name in ledger.sites}
+    assert all(e.served == "int" for e in entries.values())
+    for e in entries.values():
+        assert e.bits == 8
+        assert e.scale is not None and e.zero_point is not None
+
+    # a site without a spec must surface as a fake-quant fallback + warning
+    victim = next(name + ".in" for name, s in ledger.sites.items()
+                  if s.act_quantized)
+    partial = {k: v for k, v in act.items() if k != victim}
+    with pytest.warns(UserWarning, match="float GEMM inputs"):
+        entries = export_act_sites(partial, ledger.sites)
+    assert entries[victim].served == "fake_quant"
+    assert entries[victim].reason == "no_act_spec"
+
+    # fp-output sites with no spec are excluded by design, not fallbacks
+    fp_sites = [name for name, s in ledger.sites.items()
+                if not s.act_quantized]
+    if fp_sites:
+        entries = export_act_sites(
+            {k: v for k, v in act.items()
+             if k[: -len(".in")] not in fp_sites}, ledger.sites, warn=False)
+        assert entries[fp_sites[0] + ".in"].served == "excluded"
+
+
+# ---------------------------------------------------------------------------
+# Serving: integer decode vs the int-weight x fp32-act oracle
+# ---------------------------------------------------------------------------
+
+_BS, _MAXSEQ = 8, 32
+_PLEN = 8  # SSD chunked prefill needs plen % chunk_size == 0
+
+
+def _mrope(cfg, s):
+    if cfg.mrope_sections is None:
+        return None
+    return jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, 1, s))
+
+
+def _decode_rows(cfg, params, qc, layout, steps=3):
+    """Last prefill logits row + ``steps`` greedy-free decode rows."""
+    k = jax.random.PRNGKey(1)
+    if cfg.embed_input:
+        x = jax.random.randint(k, (1, _PLEN), 0, cfg.vocab_size)
+    else:
+        x = jax.random.normal(k, (1, _PLEN, cfg.d_model), jnp.float32) * 0.3
+    if layout == "ring":
+        cache, alloc = tfm.init_cache(cfg, 1, _MAXSEQ), None
+    else:
+        mb = _MAXSEQ // _BS
+        cache = tfm.init_paged_cache(cfg, 1, mb + 1, _BS)
+        alloc = kv_pool.init_alloc(mb + 1, 1, mb)
+        alloc = kv_pool.alloc_range(alloc, 0, 0, -(-_PLEN // _BS))
+    table = None if alloc is None else alloc["table"]
+    lg, cache = tfm.prefill_slot(qc, params, x, _PLEN, cache, 0, cfg,
+                                 mrope_pos=_mrope(cfg, _PLEN),
+                                 block_table=table)
+    rows = [np.asarray(lg[0, _PLEN - 1, : cfg.vocab_size])]
+    adv = jnp.ones((1,), jnp.int32)
+    rng = np.random.default_rng(2)
+    for t in range(steps):
+        if cfg.embed_input:
+            tok = jnp.asarray([int(rng.integers(0, cfg.vocab_size))],
+                              jnp.int32)
+        else:
+            tok = jax.random.normal(jax.random.PRNGKey(10 + t),
+                                    (1, 1, cfg.d_model), jnp.float32) * 0.3
+        if alloc is not None:
+            alloc = kv_pool.tick_alloc(alloc, cache["pos"], adv, _BS)
+        lg, cache = tfm.decode_step(
+            qc, params, cache, tok, cfg, advance=adv,
+            block_table=None if alloc is None else alloc["table"])
+        rows.append(np.asarray(lg[0, 0, : cfg.vocab_size]))
+    return np.stack(rows)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_logits_match_oracle_all_archs_both_layouts(arch):
+    cfg, params = _model(arch)
+    qs = make_uniform_quant_state(cfg, params)
+    qw, _ = export_int_model(params, cfg, qs)
+    specs = specs_from_state(qs["gates"], qs["betas"], qs["signed"])
+    act = make_act_specs(cfg, params, 8)
+    assert act, "every arch must calibrate at least one .in site"
+    qc_int = QuantContext(mode="serve", cfg=qs["qcfg"],
+                          specs={**specs, **act}, qweights=qw,
+                          matmul_impl="ref")
+    qc_oracle = QuantContext(mode="serve", cfg=qs["qcfg"], specs=specs,
+                             qweights=qw, matmul_impl="ref")
+    kinds = list(cfg.block_pattern) + list(cfg.remainder_kinds)
+    layouts = ["ring"] + (
+        ["paged"] if any(kk in ("global", "local") for kk in kinds) else [])
+    atol = DECODE_ATOL_ARCH.get(arch, DECODE_ATOL)
+    for layout in layouts:
+        got = _decode_rows(cfg, params, qc_int, layout)
+        want = _decode_rows(cfg, params, qc_oracle, layout)
+        np.testing.assert_allclose(got, want, atol=atol,
+                                   err_msg=f"{arch}/{layout}")
+
+
+def test_engine_act_bits_serves_integer_end_to_end():
+    cfg, params = _model()
+    qs = make_uniform_quant_state(cfg, params)
+    prompts = [np.arange(1, 5), np.arange(2, 9), np.arange(3, 7)]
+
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32, quant_state=qs,
+                        act_bits=8)
+    res = eng.generate(prompts, SamplingParams(max_new=6))
+    assert [len(r.tokens) for r in res] == [6, 6, 6]
+    assert eng.stats["tick_syncs"] == eng.stats["decode_ticks"]
+
+    rep = eng.quant_report()
+    acts = rep["acts"]
+    assert acts["total"] > 0
+    assert acts["covered"] == acts["total"]
+    assert acts["fallback_sites"] == []
+    assert set(acts["bits"].values()) == {8}
+    # the certificate now prices activations at their SERVED width: uniform
+    # 8-bit weights x 8-bit inputs == the uniform-int8 BOP baseline exactly
+    assert rep["bops"]["model"] == pytest.approx(rep["bops"]["uniform_int8"])
+
+    eng4 = ServingEngine(cfg, params, slots=2, max_seq=32, quant_state=qs,
+                         act_bits=4)
+    rep4 = eng4.quant_report()
+    assert set(rep4["acts"]["bits"].values()) == {4}
+    assert rep4["bops"]["model"] == pytest.approx(
+        rep["bops"]["model"] / 2.0, rel=1e-6)
+    assert len(eng4.generate(prompts, SamplingParams(max_new=4))) == \
+        len(prompts)
+
+    with pytest.raises(ValueError, match="act_bits"):
+        ServingEngine(cfg, params, act_bits=8)
