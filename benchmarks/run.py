@@ -356,6 +356,70 @@ def _continuous_batching_run(cfg, params, *, slots=40, n_requests=48,
     }
 
 
+def _long_context_run(cfg, params, *, prompt_tokens=32_768, window=1024,
+                      sink_blocks=1, block_size=8, chunk=512, max_new=8):
+    """Long-context serving on a window-sized pool (DESIGN.md §17): one
+    32k-token synthetic prompt decodes through a pool holding only the
+    window demand — ~1/25th of the block-table width — because chunked
+    prefill evicts out-of-window KV blocks in-tick as it streams forward.
+    ``peak_blocks_in_use`` is sampled every engine step (prefill ticks
+    included, where residency peaks at live-set + one chunk); CI asserts
+    ``peak <= bound``, the one-sync-per-tick ledger and a drained pool."""
+    from repro.serving import (SamplingParams, ServingEngine, WindowSpec,
+                               window_demand_blocks)
+    from repro.serving.engine import Request
+
+    spec = WindowSpec(window=window, sink_blocks=sink_blocks)
+    max_seq = prompt_tokens + max_new + block_size
+    max_blocks = -(-max_seq // block_size)
+    demand = window_demand_blocks(spec.bind(block_size), max_blocks,
+                                  chunk, block_size)
+    num_blocks = demand + 1  # + garbage block: the engine's floor exactly
+    eng = ServingEngine(cfg, params, slots=1, max_seq=max_seq,
+                        block_size=block_size, num_blocks=num_blocks,
+                        prefill_chunk_tokens=chunk,
+                        attention_window=spec)
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(0, cfg.vocab_size, (prompt_tokens,))
+    eng.submit(Request(rid=0, prompt=prompt,
+                       params=SamplingParams(temperature=0.0,
+                                             max_new=max_new)))
+    t0 = time.perf_counter()
+    peak = 0
+    steps = 0
+    # drive tick-by-tick so residency is sampled DURING chunked prefill,
+    # where the §17 peak (live set + one chunk) actually occurs
+    while eng.waiting or any(r is not None for r in eng.slot_req):
+        eng.step()
+        peak = max(peak, eng.pool_stats()["blocks_in_use"])
+        steps += 1
+        assert steps < 10_000
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    ps = eng.pool_stats()
+    req = eng.finished[-1]
+    assert len(req.output) == max_new, req.finish_reason
+    return {
+        "prompt_tokens": prompt_tokens,
+        "window": window,
+        "sink_blocks": sink_blocks,
+        "num_blocks": num_blocks,
+        "table_blocks": max_blocks,
+        "peak_blocks_in_use": peak,
+        "bound": demand,
+        "window_report": ps["window"],
+        "prefill_chunks": st["prefill_chunks"],
+        "wall_s": wall,
+        "decode_tok_s": (st["generated_tokens"] - 1)
+        / max(st["decode_time_s"], 1e-9),
+        "prefill_tok_s":
+            st["prompt_tokens"] / max(st["prefill_time_s"], 1e-9),
+        "host_syncs_per_tick":
+            st["tick_syncs"] / max(st["decode_ticks"], 1),
+        "blocks_leaked": ps["blocks_in_use"] - ps["retained_blocks"],
+    }
+
+
 def _kv_oracle_err(cfg, params, kv_dtype, plen=9, steps=4):
     """Max |logit| gap of a teacher-forced paged decode under quantized KV
     vs the fp32 float-pool oracle — same tokens, same block geometry, so
@@ -526,15 +590,31 @@ def bench_serving(tier: str):
           f"tpot_p95_ms={cont['tpot_s']['p95']*1e3:.1f};"
           f"host_syncs_per_tick={cont['host_syncs_per_tick']:.2f};"
           f"blocks_leaked={cont['blocks_leaked']}")
+    # long-context serving (DESIGN.md §17): a 32k-token prompt decodes on a
+    # pool sized for the attention window — in-tick out-of-window eviction
+    # keeps residency O(window) while the block table spans the full prompt.
+    # CI asserts peak_blocks_in_use <= bound, one host sync per tick, and a
+    # drained pool from BENCH_serving.json.
+    longctx = _long_context_run(cfg, params)
+    print(f"serving_long_context,{longctx['decode_tok_s']:.0f},"
+          f"prompt_tokens={longctx['prompt_tokens']};"
+          f"window={longctx['window']};"
+          f"peak_blocks_in_use={longctx['peak_blocks_in_use']}"
+          f"/{longctx['bound']};"
+          f"table_blocks={longctx['table_blocks']};"
+          f"prefill_tok_s={longctx['prefill_tok_s']:.0f};"
+          f"host_syncs_per_tick={longctx['host_syncs_per_tick']:.2f};"
+          f"blocks_leaked={longctx['blocks_leaked']}")
     total_reqs = (5 * nreq + 2 * hi_slots + nreq + chaos["requests"]
-                  + cont["requests"])
+                  + cont["requests"] + 1)
     print(f"serving_total,{(time.time()-t0)*1e6:.0f},"
           f"requests={total_reqs}")
     return {"fp32": fp32, "fp32_ring": ring, "int8": int8,
             "int_gemm_decode": intgemm,
             "mixed_sub_byte": mixed, "sampled_decode": sampled,
             "paged_high_slots": high, "prefix_sharing": prefix,
-            **kv_rows, "chaos": chaos, "continuous_batching": cont}
+            **kv_rows, "chaos": chaos, "continuous_batching": cont,
+            "long_context": longctx}
 
 
 # ---------------------------------------------------------------------------

@@ -24,8 +24,9 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import transformer as tfm
-from repro.serving import (SamplingParams, ServingEngine, export_int_codes,
-                           make_mixed_quant_state, make_uniform_quant_state)
+from repro.serving import (SamplingParams, ServingEngine, WindowSpec,
+                           export_int_codes, make_mixed_quant_state,
+                           make_uniform_quant_state)
 
 
 def main():
@@ -74,7 +75,19 @@ def main():
                          "prompt into chunks of this many tokens and "
                          "interleave them with decode ticks (DESIGN.md "
                          "§15; default = legacy whole-prompt waves)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="long-context sliding attention window in tokens "
+                         "(DESIGN.md §17): every attention site masks to "
+                         "the last WINDOW positions and, on the paged "
+                         "layout, out-of-window KV blocks are evicted "
+                         "in-tick so residency stays O(window)")
+    ap.add_argument("--sink-blocks", type=int, default=0,
+                    help="with --window: leading paged KV blocks pinned "
+                         "forever (attention sinks) — always attended, "
+                         "never evicted")
     args = ap.parse_args()
+    if args.sink_blocks and args.window is None:
+        ap.error("--sink-blocks requires --window")
 
     cfg = get_smoke_config(args.arch)
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
@@ -87,11 +100,16 @@ def main():
     act_bits = None if args.act_bits == "none" else int(args.act_bits)
     if act_bits is not None and qs is None:
         ap.error("--act-bits requires a quantized export (drop --fp32)")
+    window = None
+    if args.window is not None:
+        window = WindowSpec(window=args.window,
+                            sink_blocks=args.sink_blocks)
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
                         quant_state=qs, act_bits=act_bits,
                         kv_layout=args.kv_layout,
                         prefix_lru_blocks=args.prefix_lru_blocks,
-                        prefill_chunk_tokens=args.prefill_chunk)
+                        prefill_chunk_tokens=args.prefill_chunk,
+                        attention_window=window)
     if eng.qweights:
         storages = sorted({qt.storage_bits for qt in eng.qweights.values()})
         print(f"serving quantized export: {len(eng.qweights)} sites at "
@@ -159,6 +177,13 @@ def main():
               f"{st['cow_copies']} CoW copies, "
               f"{ps['blocks_in_use']} blocks still in use "
               f"({ps['retained_blocks']} LRU-retained)")
+        if "window" in ps:
+            w = ps["window"]
+            print(f"  attention window: {w['window']} tokens + "
+                  f"{w['sink_blocks']} sink blocks -> "
+                  f"{w['live_blocks_per_slot']} live blocks/slot of "
+                  f"{w['table_blocks_per_slot']} table blocks "
+                  f"(residency {w['residency_ratio']:.2f}x)")
     if results is not None:
         for i, r in enumerate(results):
             print(f"  req {i}: {r.tokens} [{r.finish_reason}]")

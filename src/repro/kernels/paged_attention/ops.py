@@ -12,9 +12,11 @@ from .ref import paged_attention_ref
 
 
 @functools.partial(
-    jax.jit, static_argnames=("window", "softcap", "use_pallas", "interpret"))
+    jax.jit,
+    static_argnames=("window", "sinks", "softcap", "use_pallas", "interpret"))
 def paged_attention_op(q, k_pool, v_pool, block_table, pos, *,
                        window: int | None = None,
+                       sinks: int = 0,
                        softcap: float | None = None,
                        use_pallas: bool = False,
                        interpret: bool = True,
@@ -32,8 +34,8 @@ def paged_attention_op(q, k_pool, v_pool, block_table, pos, *,
     if use_pallas:
         return paged_attention_pallas(
             q, k_pool, v_pool, block_table, pos,
-            window=window, softcap=softcap, interpret=interpret,
+            window=window, sinks=sinks, softcap=softcap, interpret=interpret,
             k_scale=k_scale, v_scale=v_scale)
     return paged_attention_ref(
-        q, k_pool, v_pool, block_table, pos, window=window, softcap=softcap,
-        k_scale=k_scale, v_scale=v_scale)
+        q, k_pool, v_pool, block_table, pos, window=window, sinks=sinks,
+        softcap=softcap, k_scale=k_scale, v_scale=v_scale)

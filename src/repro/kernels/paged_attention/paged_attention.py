@@ -23,6 +23,16 @@ Layout and TPU mapping:
   * blocks wholly past the row's position (and, for sliding-window layers,
     wholly fallen out of the window) are pruned with ``pl.when`` before any
     compute.
+  * long-context windows (DESIGN.md §17) add a third scalar-prefetch
+    operand: the per-slot **first-live-block index** ``fl``. The K/V
+    index_map routes every dead block (``j < fl[b]`` and not a pinned sink
+    block) to the garbage block 0, so out-of-window blocks are never DMA'd
+    at all — the window walk touches O(window/bs + sinks) blocks per slot
+    regardless of prompt length, on all KV dtypes (the quantized scale
+    operands share the same routed index_map). ``sinks`` (leading token
+    count, block-aligned by the engine) re-admits the pinned prefix in both
+    the block prune and the in-block mask: the §17 rule is
+    ``kp <= p and (p - kp < window or kp < sinks)``.
 
 Quantized pools (DESIGN.md §14) add a **fused dequant-on-block-load**: the
 per-group fp16 scales ride in as two extra block-mapped operands whose
@@ -49,10 +59,10 @@ from repro.quant.kv import dequant_codes, unpack_int4
 NEG_INF = -1e30
 
 
-def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+def _kernel(table_ref, pos_ref, fl_ref, q_ref, k_ref, v_ref, *rest,
             block_size: int, blocks: int,
             kv_heads: int, groups: int, window: int | None,
-            softcap: float | None, scale: float,
+            sinks: int, softcap: float | None, scale: float,
             head_dim: int, group_size: int = 0, bits: int = 8):
     if group_size:  # quantized: two scale operands precede the output
         ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
@@ -71,7 +81,13 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
     start = j * block_size
     run = (start <= p) & (table_ref[b, j] >= 0)
     if window is not None:
-        run = jnp.logical_and(run, p - (start + block_size - 1) < window)
+        in_win = p - (start + block_size - 1) < window
+        if sinks:
+            in_win = jnp.logical_or(in_win, start < sinks)
+        run = jnp.logical_and(run, in_win)
+        # mirror the index_map's dead-block routing: j < fl[b] never ran DMA
+        run = jnp.logical_and(
+            run, jnp.logical_or(j >= fl_ref[b], start < sinks))
 
     @pl.when(run)
     def _compute():
@@ -98,7 +114,10 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
         cols = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
         mask = cols <= p
         if window is not None:
-            mask &= (p - cols) < window
+            in_win = (p - cols) < window
+            if sinks:
+                in_win |= cols < sinks
+            mask &= in_win
         s = jnp.where(mask, s, NEG_INF).reshape(kv_heads * groups, -1)
 
         m_prev = m_scr[...]
@@ -123,13 +142,18 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
 
 def paged_attention_pallas(q, k_pool, v_pool, block_table, pos, *,
                            window: int | None = None,
+                           sinks: int = 0,
                            softcap: float | None = None,
                            interpret: bool = True,
                            k_scale=None, v_scale=None):
     """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd) float or
     (num_blocks, bs, KV, packed_head) codes + ``k_scale``/``v_scale``
     (num_blocks, bs, KV, num_groups) fp16 per-group scales;
-    block_table: (B, max_blocks); pos: (B,). Returns (B, KV, G, hd)."""
+    block_table: (B, max_blocks); pos: (B,). Returns (B, KV, G, hd).
+
+    ``window``/``sinks`` (both static) enable the §17 block-sparse walk:
+    the per-slot first-live-block index is derived from ``pos`` here and
+    scalar-prefetched so dead blocks are never loaded (module docstring)."""
     b, kvh, g, hd = q.shape
     bs = k_pool.shape[1]
     mb = block_table.shape[1]
@@ -143,12 +167,23 @@ def paged_attention_pallas(q, k_pool, v_pool, block_table, pos, *,
     else:
         ng, group_size, bits = 0, 0, 8
     qf = q.reshape(b, kvh * g, hd)
+    sink_blocks = -(-sinks // bs)
+    if window is not None:
+        # first block the sliding window still reaches; sink blocks pinned
+        fl = jnp.maximum((pos - window + 1) // bs,
+                         sink_blocks).astype(jnp.int32)
+    else:
+        fl = jnp.zeros_like(pos, dtype=jnp.int32)
 
-    def table_map(bi, j, tbl, ps):
-        return (jnp.maximum(tbl[bi, j], 0), 0, 0, 0)
+    def table_map(bi, j, tbl, ps, fl):
+        live = (j >= fl[bi]) | (j < sink_blocks)
+        return (jnp.where(live, jnp.maximum(tbl[bi, j], 0), 0), 0, 0, 0)
+
+    def row_map(bi, j, tbl, ps, fl):
+        return (bi, 0, 0)
 
     in_specs = [
-        pl.BlockSpec((1, kvh * g, hd), lambda bi, j, tbl, ps: (bi, 0, 0)),
+        pl.BlockSpec((1, kvh * g, hd), row_map),
         pl.BlockSpec((1, bs, kvh, hdp), table_map),
         pl.BlockSpec((1, bs, kvh, hdp), table_map),
     ]
@@ -158,11 +193,10 @@ def paged_attention_pallas(q, k_pool, v_pool, block_table, pos, *,
         in_specs += [pl.BlockSpec((1, bs, kvh, ng), table_map)] * 2
         operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, mb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, kvh * g, hd),
-                               lambda bi, j, tbl, ps: (bi, 0, 0)),
+        out_specs=pl.BlockSpec((1, kvh * g, hd), row_map),
         scratch_shapes=[
             pltpu.VMEM((kvh * g, 1), jnp.float32),   # running max m
             pltpu.VMEM((kvh * g, 1), jnp.float32),   # running denom l
@@ -172,11 +206,11 @@ def paged_attention_pallas(q, k_pool, v_pool, block_table, pos, *,
     out = pl.pallas_call(
         functools.partial(
             _kernel, block_size=bs, blocks=mb, kv_heads=kvh, groups=g,
-            window=window, softcap=softcap, scale=hd ** -0.5,
+            window=window, sinks=sinks, softcap=softcap, scale=hd ** -0.5,
             head_dim=hd, group_size=group_size, bits=bits,
         ),
         out_shape=jax.ShapeDtypeStruct((b, kvh * g, hd), jnp.float32),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(block_table, pos, *operands)
+    )(block_table, pos, fl, *operands)
     return out.reshape(b, kvh, g, hd)

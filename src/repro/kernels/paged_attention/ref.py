@@ -31,6 +31,7 @@ def _dequant_gathered(codes, scale, hd):
 
 def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
                         window: int | None = None,
+                        sinks: int = 0,
                         softcap: float | None = None,
                         k_scale=None, v_scale=None):
     """q: (B, KV, G, hd); pools: (num_blocks, bs, KV, hd) float, or
@@ -40,6 +41,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
 
     Unallocated table entries gather the garbage block 0; every logical
     position they cover is > ``pos`` for that row, so the mask discards them.
+    With a ``window``, evicted (out-of-window) entries are also ``-1`` and
+    their positions fail the window test, so they gather garbage AND mask
+    out. ``sinks`` (token count, block-aligned by the engine) re-admits the
+    pinned leading positions regardless of window age — the §17 mask rule
+    ``kp <= qp and (qp - kp < window or kp < sinks)``.
     """
     b, kvh, g, hd = q.shape
     bs = k_pool.shape[1]
@@ -64,7 +70,10 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
     posb = pos[:, None]
     valid = sids <= posb
     if window is not None:
-        valid &= (posb - sids) < window
+        in_win = (posb - sids) < window
+        if sinks:
+            in_win |= sids < sinks
+        valid &= in_win
     logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(q.dtype),

@@ -84,6 +84,23 @@ def _repeat_kv(t, groups: int):
     return t.reshape(b, s, kv * groups, hd)
 
 
+def _resolve_window(window, kind: str, cfg: ModelConfig):
+    """Resolve the engine's static ``(window, sink_tokens)`` mask tuple
+    (DESIGN.md §17) for one layer. Local layers tighten their architectural
+    window and drop sinks — the ring layout physically overwrites positions
+    older than ``cfg.window``, so a sink there would be unservable; the
+    sink contract covers full-history layers only. Global layers take the
+    tuple verbatim. Returns ``(effective_window | None, sink_tokens)``;
+    ``None`` means causal-only. The tuple (not a WindowSpec) keeps
+    ``repro.models`` free of serving imports."""
+    if window is None:
+        return (cfg.window if kind == "local" else None, 0)
+    w, sinks = window
+    if kind == "local":
+        return (min(cfg.window, w), 0)
+    return (w, sinks)
+
+
 def attention_train(
     qc: QuantContext,
     p,
@@ -94,8 +111,12 @@ def attention_train(
     positions=None,
     mrope_pos=None,
     plan=None,
+    window=None,
 ):
-    """Causal (optionally sliding-window) attention. Returns (y, (k, v))."""
+    """Causal (optionally sliding-window) attention. Returns (y, (k, v)).
+
+    ``window``: optional engine ``(window, sink_tokens)`` tuple (§17) layered
+    on top of the architectural mask via ``_resolve_window``."""
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s)[None, :]
@@ -114,8 +135,12 @@ def attention_train(
     qi = jnp.arange(s)[:, None]
     ki = jnp.arange(s)[None, :]
     mask = qi >= ki
-    if kind == "local":
-        mask &= (qi - ki) < cfg.window
+    eff, sinks = _resolve_window(window, kind, cfg)
+    if eff is not None:
+        in_win = (qi - ki) < eff
+        if sinks:
+            in_win |= ki < sinks
+        mask &= in_win
     logits = jnp.where(mask[None, None], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_r,
@@ -166,6 +191,7 @@ def attention_decode(
     *,
     mrope_pos=None,
     plan=None,
+    window=None,
 ):
     """One-token decode. x: (B, 1, d); pos: (B,) int32 per-row positions
     (tokens so far) — scalars broadcast, so single-sequence callers can pass
@@ -175,6 +201,9 @@ def attention_decode(
     batched step.
 
     Local layers treat the cache as a ring buffer of ``window`` slots.
+    ``window``: optional engine ``(window, sink_tokens)`` tuple (§17) — the
+    contiguous global cache masks to it by absolute position (rows past the
+    window stay resident here; only the paged layout evicts them).
     Returns (y, new_cache).
     """
     b = x.shape[0]
@@ -226,13 +255,19 @@ def attention_decode(
     logits = softcap(logits, cfg.attn_softcap)
     sids = jnp.arange(slots)[None, :]
     posb = pos[:, None]
+    eff, sinks = _resolve_window(window, kind, cfg)
     if kind == "local":
         # ring buffer: slot s holds absolute position ap with ap % slots == s
         # and ap <= pos; valid iff pos - ap < window and ap <= pos.
         ap = posb - ((posb - sids) % slots)
-        valid = (ap >= 0) & (ap <= posb) & ((posb - ap) < cfg.window)
+        valid = (ap >= 0) & (ap <= posb) & ((posb - ap) < eff)
     else:
         valid = sids <= posb
+        if eff is not None:
+            in_win = (posb - sids) < eff
+            if sinks:
+                in_win |= sids < sinks
+            valid &= in_win
     logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, cv,
@@ -256,6 +291,7 @@ def attention_decode_paged(
     mrope_pos=None,
     plan=None,
     write_mask=None,
+    window=None,
 ):
     """One-token decode through a paged KV pool (DESIGN.md §10).
 
@@ -271,6 +307,10 @@ def attention_decode_paged(
     Pallas kernel per ``qc.matmul_impl``). Local layers keep full history in
     blocks and mask to the window — the ring buffer's O(window) residency is
     traded for block-granular allocation.
+
+    ``window``: optional engine ``(window, sink_tokens)`` tuple (§17),
+    resolved per layer kind and forwarded as static args so the kernel's
+    first-live-block walk skips dead blocks entirely.
 
     Returns (y, new_pool).
     """
@@ -324,10 +364,11 @@ def attention_decode_paged(
     groups = cfg.n_heads // cfg.n_kv_heads
     qg = q[:, 0].reshape(b, cfg.n_kv_heads, groups, cfg.head_dim)
     impl = qc.matmul_impl
+    eff, sinks = _resolve_window(window, kind, cfg)
     out = paged_attention_op(
         qg.astype(COMPUTE_DTYPE), new_pool["k"], new_pool["v"],
         block_table, pos,
-        window=cfg.window if kind == "local" else None,
+        window=eff, sinks=sinks,
         softcap=cfg.attn_softcap,
         use_pallas=impl != "ref", interpret=impl != "pallas",
         **scales,
@@ -353,6 +394,7 @@ def attention_prefill_chunk(
     positions=None,
     mrope_pos=None,
     plan=None,
+    window=None,
 ):
     """Chunk-resumable prefill attention for ONE serving slot (DESIGN.md §15).
 
@@ -372,8 +414,15 @@ def attention_prefill_chunk(
     writes. Paged: ``block_table`` is the slot's (max_blocks,) physical row;
     unallocated/padding lanes route to the reserved garbage block 0.
 
-    ``pos0``/``clen``/``slot`` may be traced scalars. Returns
-    (y (1, C, d), new_cache_entry).
+    ``pos0``/``clen``/``slot`` may be traced scalars. ``window``: optional
+    engine ``(window, sink_tokens)`` tuple (§17). On the paged path a
+    binding window switches the key gather from the whole table to a
+    bounded O(sinks + window + C) two-segment gather — the sink prefix
+    blocks plus the blocks the sliding window can reach from this chunk —
+    so long-context chunked prefill never materializes dead blocks. When
+    the window cannot bind (small tables, or ``window=None``) the gather
+    stays whole-table so logits remain bit-identical to the unwindowed
+    path. Returns (y (1, C, d), new_cache_entry).
     """
     b, c, _ = x.shape
     pos0 = jnp.asarray(pos0, jnp.int32)
@@ -391,6 +440,7 @@ def attention_prefill_chunk(
     q, k, v = _project_qkv(qc, p, x, cfg, positions, mp)
     kc, vc = k[0], v[0]  # (C, KV, hd)
     qpos = positions[0]  # (C,) absolute query positions (garbage past clen)
+    eff, sinks = _resolve_window(window, kind, cfg)
     spec = kv_codec.spec_from_cache(cache, cfg.head_dim)
     if spec is not None:
         # write-site quantization (§14): the whole chunk quantizes before it
@@ -434,6 +484,8 @@ def attention_prefill_chunk(
             src = jnp.where(kp >= pos0, jnp.clip(kp - pos0, 0, c - 1),
                             c + (kp % ring))
             valid = kp >= 0
+            if eff != cfg.window:  # engine window tightens the local layer
+                valid &= (qpos[:, None] - kp) < eff
             keys_k = allk[src]  # (C, W, KV, hd)
             keys_v = allv[src]
             # now land the chunk: ring slot r ends holding absolute position
@@ -476,7 +528,13 @@ def attention_prefill_chunk(
             for name, xv in entries.items():
                 new_cache[name] = cache[name].at[slot, idx].set(
                     xv.astype(cache[name].dtype))
-            valid = jnp.arange(ring)[None, :] <= qpos[:, None]
+            sids = jnp.arange(ring)[None, :]
+            valid = sids <= qpos[:, None]
+            if eff is not None:
+                in_win = (qpos[:, None] - sids) < eff
+                if sinks:
+                    in_win |= sids < sinks
+                valid &= in_win
         if spec is not None:
             keys_k = kv_codec.dequantize_kv(
                 new_cache["k"][slot], new_cache["k_scale"][slot], spec)
@@ -498,7 +556,38 @@ def attention_prefill_chunk(
         for name, xv in entries.items():
             new_cache[name] = cache[name].at[tgt, off].set(
                 xv.astype(cache[name].dtype))
-        rowb = jnp.clip(block_table, 0, nb - 1)
+        sb = -(-sinks // bs)
+        nw = min(mb, -(-(eff + c) // bs) + 1) if eff is not None else mb
+        if window is not None and eff is not None and sb + nw < mb:
+            # Bounded two-segment gather (docstring): the pinned sink blocks
+            # plus the `nw` blocks the sliding window can reach from any
+            # query in this chunk — O(sinks + window + C) keys however long
+            # the prompt. `fl0` is the first window-reachable block, clamped
+            # so the segment stays inside the table; when it clamps low the
+            # segments overlap, and the window lanes' `kp >= sinks` term
+            # de-duplicates them (sink positions count exactly once).
+            fl0 = jnp.clip((pos0 - eff + 1) // bs, 0, mb - nw)
+            blks = jnp.concatenate(
+                [jnp.arange(sb), fl0 + jnp.arange(nw)])  # (sb + nw,)
+            rowt = block_table[blks]
+            rowb = jnp.clip(rowt, 0, nb - 1)
+            kpos = (blks[:, None] * bs + jnp.arange(bs)[None, :]).reshape(-1)
+            alloc_ok = jnp.repeat(rowt >= 0, bs)
+            win_lane = jnp.repeat(jnp.arange(sb + nw) >= sb, bs)
+            valid = alloc_ok[None, :] & (kpos[None, :] <= qpos[:, None])
+            win_ok = (((qpos[:, None] - kpos[None, :]) < eff)
+                      & (kpos[None, :] >= sinks))
+            valid &= win_ok | ~win_lane[None, :]
+        else:
+            rowb = jnp.clip(block_table, 0, nb - 1)
+            kpos = jnp.arange(mb * bs)
+            alloc_ok = (block_table >= 0)[kpos // bs]
+            valid = alloc_ok[None, :] & (kpos[None, :] <= qpos[:, None])
+            if eff is not None:
+                in_win = (qpos[:, None] - kpos[None, :]) < eff
+                if sinks:
+                    in_win |= kpos[None, :] < sinks
+                valid &= in_win
         if spec is not None:
             gk = kv_codec.dequantize_kv(
                 new_cache["k"][rowb], new_cache["k_scale"][rowb], spec)
@@ -507,13 +596,8 @@ def attention_prefill_chunk(
         else:
             gk = new_cache["k"][rowb]
             gv = new_cache["v"][rowb]
-        keys_k = gk.reshape(mb * bs, cfg.n_kv_heads, cfg.head_dim)
-        keys_v = gv.reshape(mb * bs, cfg.n_kv_heads, cfg.head_dim)
-        kpos = jnp.arange(mb * bs)
-        alloc_ok = (block_table >= 0)[kpos // bs]
-        valid = alloc_ok[None, :] & (kpos[None, :] <= qpos[:, None])
-        if kind == "local":
-            valid &= (qpos[:, None] - kpos[None, :]) < cfg.window
+        keys_k = gk.reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+        keys_v = gv.reshape(-1, cfg.n_kv_heads, cfg.head_dim)
 
     groups = cfg.n_heads // cfg.n_kv_heads
     qg = q[0].reshape(c, cfg.n_kv_heads, groups, cfg.head_dim)

@@ -120,7 +120,8 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 
 def _apply_block_full(qc, bp, h, cfg: ModelConfig, kind: str, *, positions,
-                      mrope_pos, plan, moe_impl, init_entry=None):
+                      mrope_pos, plan, moe_impl, init_entry=None,
+                      window=None):
     """Full-sequence block application. Returns (h, cache_entry).
 
     ``init_entry`` threads a slot's carried recurrent state into the chunked
@@ -137,6 +138,7 @@ def _apply_block_full(qc, bp, h, cfg: ModelConfig, kind: str, *, positions,
             y, (k, v) = attn.attention_train(
                 qc, bp["attn"], hn, cfg, kind,
                 positions=positions, mrope_pos=mrope_pos, plan=plan,
+                window=window,
             )
         if cfg.post_norm:
             y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
@@ -188,7 +190,8 @@ def _apply_block_full(qc, bp, h, cfg: ModelConfig, kind: str, *, positions,
 
 
 def _apply_block_decode(qc, bp, h, cache, pos, cfg: ModelConfig, kind: str, *,
-                        mrope_pos, plan, block_table=None, write_mask=None):
+                        mrope_pos, plan, block_table=None, write_mask=None,
+                        window=None):
     resid = h
     hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
     if kind in ("global", "local"):
@@ -197,11 +200,12 @@ def _apply_block_decode(qc, bp, h, cache, pos, cfg: ModelConfig, kind: str, *,
                 y, new_cache = attn.attention_decode_paged(
                     qc, bp["attn"], hn, cache, block_table, pos, cfg, kind,
                     mrope_pos=mrope_pos, plan=plan, write_mask=write_mask,
+                    window=window,
                 )
             else:
                 y, new_cache = attn.attention_decode(
                     qc, bp["attn"], hn, cache, pos, cfg, kind,
-                    mrope_pos=mrope_pos, plan=plan,
+                    mrope_pos=mrope_pos, plan=plan, window=window,
                 )
         if cfg.post_norm:
             y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
@@ -320,12 +324,14 @@ def _head(qc: QuantContext, params, h, cfg: ModelConfig):
 def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
                   plan=None, mrope_pos=None, moe_impl="capacity",
                   want_cache=False, remat=True, scan_unroll=False,
-                  init_state=None, positions=None):
+                  init_state=None, positions=None, window=None):
     """``init_state``: optional per-layer list (pattern entries stacked along
     the scan axis) of recurrent-state entries to resume from — the SSM
     prefill-tail path (see ``prefill_slot_tail``); ``None`` per layer (or
     entirely) means a fresh sequence. ``positions``: (1, S) absolute
-    positions override for continued prefills (attention layers only)."""
+    positions override for continued prefills (attention layers only).
+    ``window``: optional static engine ``(window, sink_tokens)`` mask tuple
+    (DESIGN.md §17), applied per attention layer kind."""
     h = _embed(qc, params, batch, cfg)
     s = h.shape[1]
     if positions is None:
@@ -351,7 +357,7 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
                 hh, cache_entry = _apply_block_full(
                     sub, bp, hh, cfg, _kind, positions=positions,
                     mrope_pos=mrope_pos, plan=plan, moe_impl=moe_impl,
-                    init_entry=init_s,
+                    init_entry=init_s, window=window,
                 )
             out = (sub.act_stats, sub.weight_stats)
             if want_cache:
@@ -402,7 +408,7 @@ def _forward_full(qc: QuantContext, params, batch, cfg: ModelConfig, *,
             h, cache_entry = _apply_block_full(
                 qc, params["rem"][i], h, cfg, kind, positions=positions,
                 mrope_pos=mrope_pos, plan=plan, moe_impl=moe_impl,
-                init_entry=init_s,
+                init_entry=init_s, window=window,
             )
         if want_cache:
             caches.append(cache_entry)
@@ -473,7 +479,7 @@ def _write_state_slot(lc, entry, slot, stacked: bool):
 def prefill_slot(qc: QuantContext, params, tokens, plen, cache, slot,
                  cfg: ModelConfig, *, plan=None, mrope_pos=None,
                  moe_impl="dense_all", scan_unroll=False, block_table=None,
-                 start_blk=0):
+                 start_blk=0, window=None):
     """True batched prefill for one serving slot (DESIGN.md §8).
 
     Runs the whole (right-padded) prompt through ONE causal forward and
@@ -496,7 +502,7 @@ def prefill_slot(qc: QuantContext, params, tokens, plen, cache, slot,
     logits, raw = _forward_full(
         qc, params, tokens, cfg, plan=plan, mrope_pos=mrope_pos,
         moe_impl=moe_impl, want_cache=True, remat=False,
-        scan_unroll=scan_unroll,
+        scan_unroll=scan_unroll, window=window,
     )
     plen = jnp.asarray(plen, jnp.int32)
     pat = cfg.block_pattern
@@ -582,7 +588,7 @@ def prefill_slot_tail(qc: QuantContext, params, tokens, cache, slot,
 
 def _apply_block_chunk(qc, bp, h, lc, cfg: ModelConfig, kind: str, *, slot,
                        pos0, clen, fresh, positions, mrope_pos, plan,
-                       block_row):
+                       block_row, window=None):
     """One block of a chunk-resumable prefill (DESIGN.md §15).
 
     Attention blocks write the chunk's K/V into the slot's cache at its
@@ -599,7 +605,7 @@ def _apply_block_chunk(qc, bp, h, lc, cfg: ModelConfig, kind: str, *, slot,
             y, nc = attn.attention_prefill_chunk(
                 qc, bp["attn"], hn, lc, pos0, clen, cfg, kind, slot=slot,
                 block_table=block_row, positions=positions,
-                mrope_pos=mrope_pos, plan=plan,
+                mrope_pos=mrope_pos, plan=plan, window=window,
             )
         if cfg.post_norm:
             y = rms_norm(y, bp["ln1_post"], cfg.norm_eps)
@@ -660,7 +666,7 @@ def _apply_block_chunk(qc, bp, h, lc, cfg: ModelConfig, kind: str, *, slot,
 
 def prefill_chunk(qc: QuantContext, params, tokens, clen, cache, slot,
                   cfg: ModelConfig, *, pos0=0, plan=None, mrope_pos=None,
-                  scan_unroll=False, block_table=None):
+                  scan_unroll=False, block_table=None, window=None):
     """Chunk-resumable prefill (DESIGN.md §15): run ``clen`` prompt tokens at
     absolute positions ``pos0 .. pos0+clen-1`` through the full stack for ONE
     serving slot, writing attention K/V into the slot's cache at its offset
@@ -707,6 +713,7 @@ def prefill_chunk(qc: QuantContext, params, tokens, clen, cache, slot,
                     sub, bp, hh, lc, cfg, _kind, slot=slot, pos0=pos0,
                     clen=clen, fresh=fresh, positions=positions,
                     mrope_pos=mp, plan=plan, block_row=block_row,
+                    window=window,
                 )
             return hh, nc
 
@@ -741,7 +748,7 @@ def prefill_chunk(qc: QuantContext, params, tokens, clen, cache, slot,
                 qc, params["rem"][i], h, cache["layers"][len(pat) + i], cfg,
                 kind, slot=slot, pos0=pos0, clen=clen, fresh=fresh,
                 positions=positions, mrope_pos=mp, plan=plan,
-                block_row=block_row,
+                block_row=block_row, window=window,
             )
         new_layers.append(nc)
 
@@ -823,7 +830,7 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
 
 def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
                 plan=None, mrope_pos=None, scan_unroll=False, advance=None,
-                block_table=None):
+                block_table=None, window=None):
     """One decode step for the whole batch. tokens: (B,) int32 or (B,1,d)
     embeddings for stub-modality models. ``cache["pos"]`` is per-row (B,), so
     slots of a continuous-batching engine decode at independent positions.
@@ -867,6 +874,7 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
                     sub, bp, hh, lc, pos, cfg, _kind,
                     mrope_pos=mrope_pos, plan=plan,
                     block_table=block_table, write_mask=write_mask,
+                    window=window,
                 )
             return hh, nc
 
@@ -901,6 +909,7 @@ def decode_step(qc: QuantContext, params, cache, tokens, cfg: ModelConfig, *,
                 qc, params["rem"][i], h, cache["layers"][len(pat) + i], pos,
                 cfg, kind, mrope_pos=mrope_pos, plan=plan,
                 block_table=block_table, write_mask=write_mask,
+                window=window,
             )
         new_layers.append(nc)
 

@@ -22,6 +22,11 @@ prefill_chunk_tokens=N)`` interleaves chunked prefill with decode ticks,
 ``slo_stats()`` reports arrival-anchored TTFT/TPOT percentiles
 (``latency_percentiles`` is the shared summary helper), and
 ``benchmarks/loadgen.py`` replays seeded traces against the same API.
+§17's long-context serving is the same shape of knob:
+``ServingEngine(..., attention_window=W)`` — or a ``WindowSpec`` carrying
+pinned sink blocks — applies a sliding-window mask at every attention site
+and, on the paged layout, evicts out-of-window KV blocks in-tick so
+residency stays bounded by the window, not the prompt length.
 """
 
 from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
@@ -38,13 +43,16 @@ from repro.serving.faults import (FaultInjector, InjectedFault,
                                   ServingSupervisor)
 from repro.serving.sampling import (SamplingParams, finite_rows, mask_logits,
                                     sample_tokens)
+from repro.serving.window import (WindowSpec, as_window_spec,
+                                  window_demand_blocks, window_report)
 
 __all__ = [
     "AdmissionConfig", "FINISHED_DEADLINE", "FINISHED_ERROR",
     "FINISHED_LENGTH", "FINISHED_REJECTED", "FINISHED_STOP", "FaultInjector",
     "GenerationResult", "InjectedFault", "Request", "SamplingParams",
     "ServingEngine", "ServingSupervisor", "TERMINAL_REASONS", "TokenEvent",
-    "WaitingQueue", "export_int_codes", "export_int_model", "finite_rows",
-    "latency_percentiles", "make_act_specs", "make_mixed_quant_state",
-    "make_uniform_quant_state", "mask_logits", "sample_tokens",
+    "WaitingQueue", "WindowSpec", "as_window_spec", "export_int_codes",
+    "export_int_model", "finite_rows", "latency_percentiles",
+    "make_act_specs", "make_mixed_quant_state", "make_uniform_quant_state",
+    "mask_logits", "sample_tokens", "window_demand_blocks", "window_report",
 ]

@@ -154,11 +154,21 @@ def latency_percentiles(samples) -> dict:
 
 
 def projected_blocks(plen: int, max_new: int, block_size: int,
-                     max_blocks: int) -> int:
+                     max_blocks: int,
+                     window_blocks: int | None = None) -> int:
     """Worst-case pool blocks one request can ever hold: KV is written for
     the prompt plus every generated token except the last emitted one (the
-    final token is never decoded), capped at the table width."""
-    return min(math.ceil(max(plen + max_new - 1, 1) / block_size), max_blocks)
+    final token is never decoded), capped at the table width.
+
+    ``window_blocks`` (DESIGN.md §17) caps the projection for windowed
+    engines: with in-tick out-of-window eviction a slot's residency never
+    exceeds its window demand (sink + live-window + one-chunk blocks), so
+    projecting the full sequence length would make the watermark reject
+    long-context requests the pool can in fact serve."""
+    blk = math.ceil(max(plen + max_new - 1, 1) / block_size)
+    if window_blocks is not None:
+        blk = min(blk, window_blocks)
+    return min(blk, max_blocks)
 
 
 class WaitingQueue:

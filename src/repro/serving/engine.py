@@ -70,6 +70,8 @@ from repro.serving.admission import (FINISHED_DEADLINE, FINISHED_ERROR,
                                      projected_blocks)
 from repro.serving.sampling import (SamplingParams, finite_rows,
                                     sample_tokens)
+from repro.serving.window import (WindowSpec, as_window_spec,
+                                  window_demand_blocks, window_report)
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +384,7 @@ class ServingEngine:
                  preemption: bool | str = "auto",
                  prefill_chunk_tokens: int | None = None,
                  tick_token_budget: int | None = None,
+                 attention_window: "int | WindowSpec | None" = None,
                  clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
         self.params = params
@@ -444,18 +447,35 @@ class ServingEngine:
             and all(k in ("global", "local") for k in kinds))
         self.lru_capacity = prefix_lru_blocks if self.prefix_sharing else 0
         assert preemption in ("auto", True, False), preemption
+        # Long-context window (DESIGN.md §17): None keeps dense attention
+        # bit-identical to an unwindowed engine; an int or WindowSpec caps
+        # every global layer's reach (local layers clip to min(cfg.window,
+        # W)) and, on the paged layout, bounds KV residency via in-tick
+        # out-of-window eviction. The spec binds the engine block size so
+        # sink_tokens is block-aligned.
+        self.window_spec = as_window_spec(attention_window, block_size)
+        self._window = (self.window_spec.mask
+                       if self.window_spec is not None else None)
         if self.paged:
             self.block_size = block_size
             self.max_blocks = -(-max_seq // block_size)
+            # Per-slot worst-case residency: the full table without a
+            # window; with a window AND chunked prefill (between-chunk
+            # eviction, §17) only live-window + sink + one-chunk blocks.
+            self._slot_demand = window_demand_blocks(
+                self.window_spec, self.max_blocks, prefill_chunk_tokens,
+                block_size)
             # Retained (LRU) prefix blocks live in pool surplus BEYOND the
             # worst-case slot reservation, so the in-tick allocator can
             # never be starved by the cache (DESIGN.md §10).
-            min_blocks = slots * self.max_blocks + 1 + self.lru_capacity
+            min_blocks = slots * self._slot_demand + 1 + self.lru_capacity
             # An undersized pool is legal WITH preemption (§13): the pool
-            # only has to back one slot at max_seq, so a preempted request
-            # can always be replayed once the others drain. Below that
-            # floor not even a lone request fits and no policy can help.
-            floor_blocks = self.max_blocks + 1 + self.lru_capacity
+            # only has to back one slot's worst-case residency, so a
+            # preempted request can always be replayed once the others
+            # drain. Below that floor not even a lone request fits and no
+            # policy can help. (Windowed + chunked engines shrink the floor
+            # to window + chunk blocks: §17 long-context sizing.)
+            floor_blocks = self._slot_demand + 1 + self.lru_capacity
             if num_blocks is not None and num_blocks < floor_blocks:
                 raise ValueError(
                     f"num_blocks={num_blocks} can't back even one slot at "
@@ -609,6 +629,15 @@ class ServingEngine:
 
         paged = self.paged
         preemption = self.preemption
+        # §17 closure constants: the (window, sink_tokens) tuple threads
+        # into every model entry point; the block-granular split drives the
+        # in-tick eviction pass.
+        wmask = self._window
+        if wmask is not None:
+            win_w, win_sinks = wmask
+            win_sink_blocks = win_sinks // block_size
+        else:
+            win_w = win_sink_blocks = 0
 
         @jax.jit
         def _tick(params, qweights, cache, state, alloc):
@@ -631,6 +660,18 @@ class ServingEngine:
             live = state["active"]
             pre = jnp.zeros_like(live)
             if paged:
+                if wmask is not None:
+                    # §17 out-of-window eviction: release every block wholly
+                    # behind the sliding window (sink blocks pinned) BEFORE
+                    # preemption/allocation, so freed blocks relieve pool
+                    # pressure within the same tick. ``fl`` matches the
+                    # kernel's first-live-block walk exactly, so no evicted
+                    # block is ever read.
+                    fl = jnp.maximum(
+                        (cache["pos"] - win_w + 1) // block_size,
+                        win_sink_blocks)
+                    alloc = kv_pool.evict_out_of_window(
+                        alloc, fl, live, win_sink_blocks)
                 if preemption:
                     alloc, pre = kv_pool.preempt_for_free(
                         alloc, cache["pos"], live, state["gen"],
@@ -641,7 +682,7 @@ class ServingEngine:
                 table = alloc["table"]
             logits, cache = tfm.decode_step(
                 _qc(qweights), params, cache, state["last_tok"], cfg,
-                plan=plan, advance=live, block_table=table)
+                plan=plan, advance=live, block_table=table, window=wmask)
             pair = jax.vmap(jax.random.split)(state["key"])
             rows = logits[:, 0, : cfg.vocab_size] + state["bomb"][:, None]
             ok = finite_rows(rows)
@@ -683,7 +724,7 @@ class ServingEngine:
             logits, cache = tfm.prefill_slot(
                 _qc(qweights), params, toks, plen, cache, slot, cfg,
                 plan=plan, block_table=table if paged else None,
-                start_blk=start_blk)
+                start_blk=start_blk, window=wmask)
             return cache, logits[0, plen - 1, : cfg.vocab_size]
 
         self._prefill = _prefill
@@ -712,7 +753,8 @@ class ServingEngine:
             contract."""
             logits, cache = tfm.prefill_chunk(
                 _qc(qweights), params, toks, clen, cache, slot, cfg,
-                pos0=pos0, plan=plan, block_table=table if paged else None)
+                pos0=pos0, plan=plan,
+                block_table=table if paged else None, window=wmask)
             return cache, logits[0, clen - 1, : cfg.vocab_size]
 
         self._prefill_chunk = _prefill_chunk
@@ -731,7 +773,8 @@ class ServingEngine:
             adv = jnp.zeros((slots,), jnp.int32).at[slot].set(1)
             logits, cache = tfm.decode_step(
                 _qc(qweights), params, cache, toks, cfg, plan=plan,
-                advance=adv, block_table=table if paged else None)
+                advance=adv, block_table=table if paged else None,
+                window=wmask)
             return cache, logits[slot, 0, : cfg.vocab_size]
 
         self._teacher_step = _teacher_step
@@ -824,6 +867,8 @@ class ServingEngine:
 
         if self.paged:
             self._alloc_range = jax.jit(kv_pool.alloc_range)
+            self._evict_window = jax.jit(kv_pool.evict_out_of_window,
+                                         static_argnums=(3,))
             self._share_prefix = jax.jit(kv_pool.share_prefix)
             self._free_slot_op = jax.jit(kv_pool.free_slot)
             self._retain_block = jax.jit(kv_pool.retain_block)
@@ -1007,10 +1052,20 @@ class ServingEngine:
         key_{j-1} with block j's tokens, so it commits to the entire content
         of blocks 0..j and equal keys imply equal prefixes — at O(1) key
         size and O(plen) total work per admission (a nested-tuple chain
-        would re-hash the whole prefix on every map probe)."""
+        would re-hash the whole prefix on every map probe).
+
+        §17 sink-block contract: under a windowed engine, sharing and
+        registration are restricted to the pinned sink region — sink blocks
+        are the only blocks the out-of-window eviction pass can never free,
+        so a ``_prefix_map`` entry can't go stale pointing at a recycled
+        physical block. (A windowed engine with ``sink_blocks=0`` therefore
+        does no prefix sharing at all.)"""
         bs = self.block_size
+        nmax = len(prompt) // bs
+        if self.window_spec is not None:
+            nmax = min(nmax, self.window_spec.sink_blocks)
         keys, h = [], b""
-        for j in range(len(prompt) // bs):
+        for j in range(nmax):
             h = hashlib.blake2b(
                 h + np.ascontiguousarray(prompt[j * bs:(j + 1) * bs],
                                          np.int32).tobytes(),
@@ -1285,17 +1340,25 @@ class ServingEngine:
         if not self.paged:
             return True
         ad = self.admission
+        # §17: a windowed engine's worst-case residency per slot is the
+        # window demand (live-window + sink + one-chunk blocks), not the
+        # full sequence — the in-tick eviction pass keeps every slot at or
+        # below it, so both the watermark projection and the exact
+        # free-stack check cap at ``self._slot_demand``.
         nblk = -(-(len(req.prompt) + max(len(req.output) - 1, 0))
                  // self.block_size)
+        nblk = min(nblk, self._slot_demand)
         if ad is not None and ad.watermark is not None:
             usable = (self.num_blocks - 1 - len(self._lru)
                       - ad.reserve_blocks)
             committed = sum(
                 projected_blocks(len(r.prompt), r.max_new, self.block_size,
-                                 self.max_blocks)
+                                 self.max_blocks,
+                                 window_blocks=self._slot_demand)
                 for r in self.slot_req if r is not None)
             mine = projected_blocks(len(req.prompt), req.max_new,
-                                    self.block_size, self.max_blocks)
+                                    self.block_size, self.max_blocks,
+                                    window_blocks=self._slot_demand)
             if committed + mine > ad.watermark * usable:
                 return False
         if self.preemption:
@@ -1545,6 +1608,23 @@ class ServingEngine:
                 if budget is not None and budget <= 0:
                     break
                 c = self._chunk_len(total - st["pos"])
+                if self.paged and self.window_spec is not None:
+                    # §17 between-chunk eviction: before drawing blocks for
+                    # the next chunk, release this slot's blocks that the
+                    # window can no longer reach (queries resume at
+                    # st["pos"]). This is what bounds a long prompt's
+                    # residency to window + chunk blocks on a window-sized
+                    # pool. st["blocks"] stays the logical high-water count:
+                    # alloc_range keeps appending at fresh logical indices.
+                    w, sink_t = self._window
+                    sb = sink_t // self.block_size
+                    fl = max((st["pos"] - w + 1) // self.block_size, sb)
+                    if fl > sb:
+                        one = jnp.zeros((self.slots,), bool).at[s].set(True)
+                        flv = jnp.zeros((self.slots,),
+                                        jnp.int32).at[s].set(fl)
+                        self.alloc = self._evict_window(
+                            self.alloc, flv, one, sb)
                 if self.paged:
                     need = -(-(st["pos"] + c) // self.block_size) \
                         - st["blocks"]
@@ -1833,13 +1913,17 @@ class ServingEngine:
         n_free = int(self._sync(self.alloc["n_free"], "stat"))
         hits, total = self.stats["prefix_hit_blocks"], self.stats[
             "prompt_blocks"]
-        return {
+        out = {
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,
             "blocks_in_use": self.num_blocks - 1 - n_free,
             "retained_blocks": len(self._lru),
             "prefix_hit_rate": hits / total if total else 0.0,
         }
+        if self.window_spec is not None:
+            out["window"] = window_report(self.window_spec, self.max_blocks,
+                                          self.block_size)
+        return out
 
     def _assert_kv_contract(self):
         """The §10/§14 storage contract, asserted at construction: every

@@ -164,6 +164,82 @@ def free_slot(alloc, slot):
     }
 
 
+def release_range(alloc, slot, start, n):
+    """Release ``table[slot, start : start+n]`` back toward the pool: decref
+    every valid entry in the span, clear it to ``-1``, and push blocks whose
+    refcount hits 0 onto the free stack (DESIGN.md §17).
+
+    This is ``free_slot`` restricted to a logical span — the primitive under
+    out-of-window eviction. The refcount rules make it safe by construction
+    against every sharing mechanism: a block mapped by another slot
+    (``share_prefix``), retained by the prefix-LRU cache
+    (``retain_block``), or held by the fault injector (``steal_blocks``)
+    keeps a positive refcount and therefore never reaches the stack; only
+    the *reference* is dropped. Cleared entries are skipped by a later
+    ``free_slot`` (it only decrefs entries ``>= 0``), so eviction followed
+    by retirement never double-frees. ``slot``/``start``/``n`` may be
+    traced scalars."""
+    nb = alloc["free"].shape[0]
+    mb = alloc["table"].shape[1]
+    row = alloc["table"][slot]
+    j = jnp.arange(mb)
+    take = (j >= start) & (j < start + n) & (row >= 0)
+    safe = jnp.where(take, row, 0)
+    ref = alloc["ref"].at[safe].add(-take.astype(jnp.int32))
+    freed = take & (ref[safe] == 0)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    idx = jnp.where(freed, alloc["n_free"] + rank, nb - 1)
+    vals = jnp.where(freed, safe, alloc["free"][nb - 1])
+    return {
+        "free": alloc["free"].at[idx].set(vals),
+        "n_free": alloc["n_free"] + jnp.sum(freed.astype(jnp.int32)),
+        "ref": ref,
+        "table": alloc["table"].at[slot].set(jnp.where(take, -1, row)),
+    }
+
+
+def evict_out_of_window(alloc, first_live, live, sink_blocks: int):
+    """In-tick out-of-window eviction (DESIGN.md §17): for every row in
+    ``live``, release logical blocks ``sink_blocks <= j < first_live[row]``
+    — the blocks the sliding window can no longer reach (the per-row
+    ``first_live`` comes from ``serving.window.first_live_block``). Runs
+    INSIDE the jitted decode tick: all gather/scatter, no host round-trip,
+    so the §8 one-sync-per-tick ledger is untouched.
+
+    Unlike ``release_range`` this is vectorized over rows, and two rows may
+    drop the *same* physical block in one call (a shared out-of-window
+    prefix), so decrements are accumulated per physical block first and
+    each block is pushed at most once — exactly when its refcount reaches
+    0. Sink blocks (``j < sink_blocks``) and any block with a surviving
+    reference (another slot, the prefix-LRU cache) are never freed.
+    """
+    nb = alloc["free"].shape[0]
+    tbl = alloc["table"]
+    mb = tbl.shape[1]
+    cols = jnp.arange(mb)[None, :]
+    ev = (live.astype(bool)[:, None]
+          & (cols >= sink_blocks) & (cols < first_live[:, None])
+          & (tbl >= 0))
+    ids = jnp.where(ev, tbl, 0)
+    dec = jnp.zeros((nb,), jnp.int32).at[ids.reshape(-1)].add(
+        ev.reshape(-1).astype(jnp.int32))
+    dec = dec.at[0].set(0)  # junk lanes accumulate on the pinned garbage id
+    ref = alloc["ref"] - dec
+    freed = (dec > 0) & (ref == 0)
+    rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+    # same junk-lane trick as free_slot: index nb-1 is never a live stack
+    # slot (the stack tops out at nb-1 entries occupying [0, nb-2])
+    idx = jnp.where(freed, alloc["n_free"] + rank, nb - 1)
+    vals = jnp.where(freed, jnp.arange(nb, dtype=jnp.int32),
+                     alloc["free"][nb - 1])
+    return {
+        "free": alloc["free"].at[idx].set(vals),
+        "n_free": alloc["n_free"] + jnp.sum(freed.astype(jnp.int32)),
+        "ref": ref,
+        "table": jnp.where(ev, -1, tbl),
+    }
+
+
 def retain_block(alloc, blk):
     """Take a cache-side reference on one physical block (prefix-cache LRU
     retention, DESIGN.md §10): the block survives every live user retiring

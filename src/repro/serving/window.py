@@ -1,0 +1,170 @@
+"""Attention windows for long-context serving (DESIGN.md §17).
+
+A ``WindowSpec`` bounds how much KV history a request's attention may read:
+a sliding window of the last ``window`` token positions, plus an optional
+block-aligned "sink" prefix (the first ``sink_blocks`` paged blocks) that is
+*always* attended and never evicted. Together they induce a block-sparse
+pattern over the paged block table — the live set of a slot at position
+``p`` is exactly
+
+    blocks [0, sink_blocks)  ∪  blocks [first_live_block(p), p // bs]
+
+and every other block is dead: no current or future query can attend any
+position inside it, so the engine's in-tick eviction
+(``kv_pool.evict_out_of_window``) releases it back to the pool. That is
+what makes KV residency O(window) instead of O(prompt length) — the
+CGMQ resource-budget story (PAPER.md) extended to cache memory.
+
+The mask rule, shared bit-exactly by every attend path (dense prefill,
+ring decode, paged oracle + Pallas kernel, chunked prefill):
+
+    key position kp is valid for query position qp  iff
+        kp <= qp  AND  (qp - kp < window  OR  kp < sink_blocks * bs)
+
+Per-layer composition: a ``kind == "local"`` layer already carries its own
+architectural window (``cfg.window``); the engine window tightens it to
+``min(cfg.window, spec.window)`` and sinks do NOT apply (the ring layout
+physically overwrites positions older than ``cfg.window``, so a sink there
+would be unservable — the sink contract covers full-history layers only).
+``kind == "global"`` layers get ``(spec.window, sink_tokens)`` verbatim.
+
+``WindowSpec`` is a frozen (hashable) dataclass so it can ride through
+``jax.jit`` static arguments unchanged; attention forwards receive the
+resolved ``(window, sink_tokens)`` tuple instead of the spec to keep
+``repro.models`` free of serving imports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """Sliding-window + sink-block attention pattern for one engine.
+
+    ``window``: how many trailing token positions stay attendable (>= 1).
+    ``sink_blocks``: leading paged blocks pinned forever — attended by every
+    query of a full-history layer and exempt from eviction (the
+    "attention sink" prefix). ``block_size`` is bound by the engine at
+    construction (``bind``); it converts ``sink_blocks`` to token units and
+    is required before ``sink_tokens``/``live_blocks`` are meaningful.
+    """
+
+    window: int
+    sink_blocks: int = 0
+    block_size: int | None = None
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1: {self.window}")
+        if self.sink_blocks < 0:
+            raise ValueError(
+                f"sink_blocks must be >= 0: {self.sink_blocks}")
+        if self.block_size is not None and self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1: {self.block_size}")
+
+    def bind(self, block_size: int) -> "WindowSpec":
+        """The engine-resolved spec: sink units fixed to its block size."""
+        return dataclasses.replace(self, block_size=int(block_size))
+
+    @property
+    def sink_tokens(self) -> int:
+        if self.block_size is None:
+            raise ValueError("WindowSpec is unbound; call bind(block_size)")
+        return self.sink_blocks * self.block_size
+
+    @property
+    def mask(self) -> tuple[int, int]:
+        """The static ``(window, sink_tokens)`` tuple attention forwards
+        take (hashable, so it rides jit static args)."""
+        return (self.window, self.sink_tokens)
+
+    def live_blocks(self, max_blocks: int) -> int:
+        """Worst-case resident blocks per slot under eviction: the sinks
+        plus the window span, which straddles one extra partially-live
+        block whenever the window boundary is block-interior."""
+        if self.block_size is None:
+            raise ValueError("WindowSpec is unbound; call bind(block_size)")
+        span = -(-self.window // self.block_size) + 1
+        return min(max_blocks, self.sink_blocks + span)
+
+
+def as_window_spec(window, block_size: int | None = None):
+    """Coerce the engine's ``attention_window`` knob: ``None`` (off), a bare
+    int (sliding window, no sinks), or a ``WindowSpec``."""
+    if window is None:
+        return None
+    spec = window if isinstance(window, WindowSpec) \
+        else WindowSpec(window=int(window))
+    return spec.bind(block_size) if block_size is not None else spec
+
+
+def first_live_block(pos, window: int, sink_blocks: int, block_size: int):
+    """First logical block the sliding window still reaches at query
+    position ``pos`` (jnp or python ints). Block ``j`` is dead iff its last
+    key position ``(j+1)*bs - 1 <= pos - window``; the floor below is that
+    bound solved for ``j``, clamped so the pinned sink prefix is never
+    counted dead."""
+    fl = (pos - window + 1) // block_size  # jnp // floors negatives too
+    return jnp.clip(fl, sink_blocks, None) if hasattr(fl, "dtype") \
+        else max(int(fl), sink_blocks)
+
+
+def window_demand_blocks(spec: WindowSpec | None, max_blocks: int,
+                         chunk_tokens: int | None,
+                         block_size: int) -> int:
+    """Worst-case pool blocks one slot can hold at any instant.
+
+    Without a window (or without chunked prefill, which allocates the whole
+    prompt before eviction can run) the bound is the full table width. With
+    both, residency peaks between chunk evictions: the live set plus one
+    chunk's worth of freshly written blocks."""
+    if spec is None or chunk_tokens is None:
+        return max_blocks
+    chunk_blk = -(-chunk_tokens // block_size) + 1
+    return min(max_blocks, spec.live_blocks(max_blocks) + chunk_blk)
+
+
+def layer_mask(window: tuple[int, int] | None, kind: str,
+               cfg_window: int | None):
+    """Resolve the engine mask tuple for one attention layer: local layers
+    tighten their architectural window (no sinks — see module docstring),
+    global layers take the spec verbatim. Returns ``(window, sink_tokens)``
+    with ``window=None`` meaning unmasked."""
+    if window is None:
+        return (cfg_window if kind == "local" else None, 0)
+    w, sink = window
+    if kind == "local":
+        return (min(cfg_window, w), 0)
+    return (w, sink)
+
+
+def sink_block_count(sink_tokens: int, block_size: int) -> int:
+    return -(-sink_tokens // block_size)
+
+
+def window_report(spec: WindowSpec | None, max_blocks: int,
+                  block_size: int) -> dict:
+    """JSON-able summary for benchmarks/examples."""
+    if spec is None:
+        return {"enabled": False}
+    return {
+        "enabled": True,
+        "window": spec.window,
+        "sink_blocks": spec.sink_blocks,
+        "block_size": block_size,
+        "live_blocks_per_slot": spec.live_blocks(max_blocks),
+        "table_blocks_per_slot": max_blocks,
+        "residency_ratio":
+            spec.live_blocks(max_blocks) / max(max_blocks, 1),
+    }
+
+
+def max_live_blocks(window: int, sink_blocks: int, block_size: int) -> int:
+    """Ceiling for the bench/CI assert: sinks + the window span including
+    the one partially-live boundary block."""
+    return sink_blocks + math.ceil(window / block_size) + 1

@@ -239,14 +239,16 @@ except ImportError:  # hypothesis not installed: deterministic shim
 _NB, _SLOTS, _MB = 17, 4, 4     # 16 usable blocks, 4 slots, 4 blocks/slot
 
 
-def _check_alloc_invariants(alloc):
+def _check_alloc_invariants(alloc, nb=_NB):
     """The §13 pool-safety contract, checked after EVERY operation:
     refcounts never negative, the free stack never double-pops, and no
     block is ever lost or aliased — in_use + free == num_blocks - 1
-    (block 0 is the pinned garbage lane)."""
+    (block 0 is the pinned garbage lane). ``in_use`` counts device refs,
+    so LRU-style retained blocks (ref without a table entry) are covered
+    too."""
     a = _snap(alloc)
     n_free = int(a["n_free"])
-    assert 0 <= n_free <= _NB - 1
+    assert 0 <= n_free <= nb - 1
     assert (a["ref"] >= 0).all(), "negative refcount"
     assert a["ref"][0] >= 1, "garbage block must stay pinned"
     head = a["free"][:n_free].tolist()
@@ -255,7 +257,7 @@ def _check_alloc_invariants(alloc):
     assert (a["ref"][a["free"][:n_free]] == 0).all(), \
         "free block still referenced"
     in_use = int((a["ref"][1:] > 0).sum())
-    assert in_use + n_free == _NB - 1, "blocks leaked or aliased"
+    assert in_use + n_free == nb - 1, "blocks leaked or aliased"
     live = a["table"][a["table"] >= 0]
     assert (a["ref"][live] > 0).all(), "table points at a dead block"
 
@@ -788,3 +790,329 @@ def test_quantized_prefix_sharing_cow_streams_unaffected():
     assert fin[0] == _solo_output(cfg, params, shared, 6, kv_dtype="int8"), \
         "registrant stream perturbed by a sharer's CoW"
     assert fin[1] == _solo_output(cfg, params, shared, 12, kv_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# §17 long-context: windowed kernel vs dense masked oracle
+# ---------------------------------------------------------------------------
+
+from repro.serving.window import (WindowSpec, as_window_spec,
+                                  first_live_block, max_live_blocks,
+                                  window_demand_blocks)
+
+
+def _kernel_fixture(seed=0):
+    rng = np.random.default_rng(seed)
+    b, kvh, g, hd, bs, mb, nb = 3, 2, 4, 16, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), jnp.float32)
+    table = np.full((b, mb), -1, np.int32)
+    phys = rng.permutation(np.arange(1, nb))
+    pos = np.asarray([5, 12, 25], np.int32)
+    k = 0
+    for r in range(b):
+        for j in range(int(pos[r]) // bs + 1):
+            table[r, j] = phys[k]
+            k += 1
+    return q, kp, vp, table, jnp.asarray(pos)
+
+
+def _dense_window_oracle(q, kp, vp, table, pos, window, sinks):
+    """Gather-to-dense + masked softmax in numpy: the §17 acceptance
+    oracle (``kp <= p and (p - kp < window or kp < sinks)``). Only
+    positions the mask admits are gathered, so evicted (-1) out-of-window
+    table entries never need to exist."""
+    qn, kpn, vpn = map(np.asarray, (q, kp, vp))
+    tn, pn = np.asarray(table), np.asarray(pos)
+    b, kvh, g, hd = qn.shape
+    bs = kpn.shape[1]
+    out = np.zeros((b, kvh, g, hd), np.float32)
+    scale = hd ** -0.5
+    for r in range(b):
+        p = int(pn[r])
+        sel = []
+        for kpos in range(p + 1):
+            if window is not None and not ((p - kpos) < window
+                                           or kpos < sinks):
+                continue
+            blk = int(tn[r, kpos // bs])
+            assert blk >= 0, "mask admits an unbacked position"
+            sel.append((kpos, blk))
+        ks = np.stack([kpn[blk, kpos % bs] for kpos, blk in sel])
+        vs = np.stack([vpn[blk, kpos % bs] for kpos, blk in sel])
+        for h in range(kvh):
+            s = qn[r, h] @ ks[:, h].T * scale
+            e = np.exp(s - s.max(axis=1, keepdims=True))
+            out[r, h] = (e / e.sum(axis=1, keepdims=True)) @ vs[:, h]
+    return out
+
+
+# ragged window x sink x block-size interactions: windows below / straddling
+# / beyond one block, sinks covering none / one / two blocks, a window so
+# large it never binds, and a one-token window pinned entirely to sinks
+WINDOW_CASES = [(8, 0), (3, 0), (5, 8), (8, 8), (3, 16), (1, 16), (100, 0)]
+
+
+@pytest.mark.parametrize("window,sinks", WINDOW_CASES)
+def test_windowed_paged_attention_matches_dense_masked_oracle(window, sinks):
+    """§17 acceptance oracle: the windowed jnp path AND the Pallas
+    first-live-block walk both reproduce a dense gather with the causal
+    window+sink mask, across ragged window/sink/block-size combos."""
+    q, kp, vp, table, pos = _kernel_fixture()
+    want = _dense_window_oracle(q, kp, vp, table, pos, window, sinks)
+    got_ref = paged_attention_ref(q, kp, vp, jnp.asarray(table), pos,
+                                  window=window, sinks=sinks)
+    np.testing.assert_allclose(np.asarray(got_ref), want,
+                               rtol=1e-5, atol=1e-5)
+    got_pl = paged_attention_op(q, kp, vp, jnp.asarray(table), pos,
+                                window=window, sinks=sinks,
+                                use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_pl), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window,sinks", [(8, 0), (5, 8), (8, 8), (1, 16)])
+def test_windowed_kernel_bit_identical_on_evicted_tables(window, sinks):
+    """Out-of-window eviction is invisible to attention: clearing every
+    table entry below the first live block (the exact set the engine's
+    eviction pass frees) leaves windowed logits BIT-identical on both the
+    jnp oracle and the Pallas kernel — proof no evicted block is read."""
+    q, kp, vp, table, pos = _kernel_fixture()
+    bs = kp.shape[1]
+    sb = -(-sinks // bs)
+    ev = table.copy()
+    for r in range(table.shape[0]):
+        fl = max((int(pos[r]) - window + 1) // bs, sb)
+        ev[r, sb:fl] = -1
+    for use_pallas in (False, True):
+        full = paged_attention_op(q, kp, vp, jnp.asarray(table), pos,
+                                  window=window, sinks=sinks,
+                                  use_pallas=use_pallas, interpret=True)
+        evd = paged_attention_op(q, kp, vp, jnp.asarray(ev), pos,
+                                 window=window, sinks=sinks,
+                                 use_pallas=use_pallas, interpret=True)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(evd))
+
+
+@pytest.mark.parametrize("bits,window,sinks",
+                         [(8, 5, 8), (8, 8, 0), (4, 5, 8), (4, 1, 16)])
+def test_windowed_pallas_matches_ref_quantized(bits, window, sinks):
+    """§17 x §14: the first-live-block walk routes the quantized scale
+    operands through the same dead-block index_map as the codes — windowed
+    int8/int4 Pallas must match the windowed quantized jnp oracle."""
+    spec, q, kf, vf, table, pos = _quant_kernel_fixture(bits)
+    kp, ks = quantize_kv(kf, spec)
+    vp, vs = quantize_kv(vf, spec)
+    want = paged_attention_ref(q, kp, vp, table, pos, window=window,
+                               sinks=sinks, k_scale=ks, v_scale=vs)
+    got = paged_attention_op(q, kp, vp, table, pos, window=window,
+                             sinks=sinks, use_pallas=True, interpret=True,
+                             k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# §17 eviction ops: release_range / evict_out_of_window state machine
+# ---------------------------------------------------------------------------
+
+
+def test_release_range_frees_only_unshared_blocks():
+    alloc = kv_pool.init_alloc(9, 2, 4)
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 4)
+    row0 = np.asarray(jax.device_get(alloc["table"][0]))
+    alloc = kv_pool.share_prefix(alloc, 1, jnp.asarray(row0), 2)
+    alloc = kv_pool.release_range(alloc, 0, 0, 3)
+    a = _snap(alloc)
+    assert (a["table"][0, :3] == -1).all()
+    assert a["table"][0, 3] == row0[3], "untouched tail cleared"
+    assert (a["table"][1, :2] == row0[:2]).all(), "sharer's row perturbed"
+    assert a["ref"][row0[0]] == 1 and a["ref"][row0[1]] == 1, \
+        "shared block freed under the sharer"
+    assert a["ref"][row0[2]] == 0
+    assert row0[2] in a["free"][: int(a["n_free"])].tolist()
+    _check_alloc_invariants(alloc, nb=9)
+
+
+def test_evict_out_of_window_respects_refcounts_sinks_and_retention():
+    """The §17 eviction contract: sink blocks are pinned, a block shared
+    with another slot (ref > 1) or retained by the LRU cache is decremented
+    but NEVER freed, rows with live=False are untouched, and a second
+    eviction at the same first-live index is a no-op."""
+    alloc = kv_pool.init_alloc(17, 3, 4)
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 4)
+    alloc = kv_pool.alloc_range(alloc, 2, 0, 3)
+    row0 = np.asarray(jax.device_get(alloc["table"][0]))
+    row2 = np.asarray(jax.device_get(alloc["table"][2]))
+    alloc = kv_pool.share_prefix(alloc, 1, jnp.asarray(row0), 2)
+    alloc = kv_pool.retain_block(alloc, int(row0[1]))  # LRU-held
+    free0 = int(_snap(alloc)["n_free"])
+    fl = jnp.asarray([3, 0, 0], jnp.int32)
+    live = jnp.asarray([True, False, False])
+    alloc = kv_pool.evict_out_of_window(alloc, fl, live, 1)
+    a = _snap(alloc)
+    # col 0 is a sink block: pinned, still mapped
+    assert a["table"][0, 0] == row0[0] and a["ref"][row0[0]] == 2
+    # col 1 was shared + retained: unmapped here, but never freed
+    assert a["table"][0, 1] == -1
+    assert a["ref"][row0[1]] == 2, "shared/retained block lost refs"
+    assert row0[1] not in a["free"][: int(a["n_free"])].tolist()
+    # col 2 was exclusive: freed
+    assert a["table"][0, 2] == -1 and a["ref"][row0[2]] == 0
+    assert row0[2] in a["free"][: int(a["n_free"])].tolist()
+    # col 3 is at/above first-live: untouched
+    assert a["table"][0, 3] == row0[3] and a["ref"][row0[3]] == 1
+    # live=False rows untouched even though fl would evict nothing anyway
+    assert (a["table"][1, :2] == row0[:2]).all()
+    assert (a["table"][2] == row2).all()
+    assert int(a["n_free"]) == free0 + 1
+    _check_alloc_invariants(alloc)
+    # idempotence: same first-live again evicts nothing
+    again = _snap(kv_pool.evict_out_of_window(alloc, fl, live, 1))
+    for k in ("table", "ref", "n_free"):
+        np.testing.assert_array_equal(again[k], a[k])
+
+
+def test_evict_out_of_window_dedups_a_block_shared_within_one_row():
+    """A physical block mapped at TWO evicted columns of the same row (the
+    self-share degenerate case) must lose both refs in one pass without
+    being pushed to the free stack twice."""
+    alloc = kv_pool.init_alloc(9, 2, 4)
+    alloc = kv_pool.alloc_range(alloc, 0, 0, 1)
+    row0 = np.asarray(jax.device_get(alloc["table"][0]))
+    phys = np.full((4,), -1, np.int32)
+    phys[0] = phys[1] = row0[0]
+    alloc = kv_pool.share_prefix(alloc, 1, jnp.asarray(phys), 2)
+    assert int(_snap(alloc)["ref"][row0[0]]) == 3
+    alloc = kv_pool.evict_out_of_window(
+        alloc, jnp.asarray([0, 2], jnp.int32),
+        jnp.asarray([False, True]), 0)
+    a = _snap(alloc)
+    assert (a["table"][1, :2] == -1).all()
+    assert a["ref"][row0[0]] == 1, "row-internal double-count"
+    head = a["free"][: int(a["n_free"])].tolist()
+    assert head.count(int(row0[0])) == 0
+    _check_alloc_invariants(alloc, nb=9)
+    alloc = kv_pool.free_slot(alloc, 0)
+    a = _snap(alloc)
+    assert int(a["n_free"]) == 8 and (a["ref"][1:] == 0).all()
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_window_eviction_invariants_under_random_op_storms(seed):
+    """§17 storm: random WINDOW SIZES crossed with evict / release-range /
+    retain / CoW-share / preempt / steal sequences. After every op the §13
+    pool contract holds (``in_use + free == num_blocks - 1``), eviction
+    never frees a block another slot still references (pre-op ref > 1) or
+    a prefix-LRU-retained block, and after draining, the pool is whole."""
+    rng = np.random.default_rng(seed)
+    alloc = kv_pool.init_alloc(_NB, _SLOTS, _MB)
+    stolen = None
+    retained: list[int] = []        # host mirror of LRU-held device refs
+    for _ in range(30):
+        a = _snap(alloc)
+        n_free = int(a["n_free"])
+        occ = [s for s in range(_SLOTS) if (a["table"][s] >= 0).any()]
+        empty = [s for s in range(_SLOTS) if s not in occ]
+        op = rng.choice(["alloc", "share", "evict", "release", "retain",
+                         "free", "preempt", "steal"])
+        if op == "alloc" and empty:
+            n = int(rng.integers(1, _MB + 1))
+            if n <= n_free:
+                alloc = kv_pool.alloc_range(alloc, int(rng.choice(empty)),
+                                            0, n)
+        elif op == "share" and occ and empty:
+            # share_prefix's contract is a CONTIGUOUS valid prefix (the
+            # engine only shares at admission, before any eviction can
+            # punch holes in a row) — mirror that here
+            src = int(rng.choice(occ))
+            row = a["table"][src]
+            lead = int(np.argmax(row < 0)) if (row < 0).any() else _MB
+            if lead >= 1:
+                alloc = kv_pool.share_prefix(
+                    alloc, int(rng.choice(empty)), jnp.asarray(row),
+                    int(rng.integers(1, lead + 1)))
+        elif op == "evict" and occ:
+            # random window geometry: the engine's eviction shape is
+            # fl = max((pos - W + 1) // BS, sink_blocks); here fl and
+            # sink_blocks are drawn directly to cover every ragged case
+            sb = int(rng.integers(0, _MB))
+            fl = np.zeros(_SLOTS, np.int32)
+            live = np.zeros(_SLOTS, bool)
+            for s in occ:
+                if rng.random() < 0.8:
+                    fl[s] = int(rng.integers(sb, _MB + 1))
+                    live[s] = True
+            ref_before = a["ref"].copy()
+            alloc = kv_pool.evict_out_of_window(
+                alloc, jnp.asarray(fl), jnp.asarray(live), sb)
+            a2 = _snap(alloc)
+            head = set(a2["free"][: int(a2["n_free"])].tolist())
+            for s in np.where(live)[0]:
+                for j in range(sb, fl[s]):
+                    blk = int(a["table"][s, j])
+                    if blk < 0:
+                        continue
+                    assert a2["table"][s, j] == -1
+                    if ref_before[blk] > 1 or blk in retained:
+                        assert blk not in head or a2["ref"][blk] == 0, \
+                            "freed a block with live references"
+                        if blk in retained:
+                            assert a2["ref"][blk] >= 1, \
+                                "freed an LRU-retained block"
+                            assert blk not in head
+        elif op == "release" and occ:
+            s = int(rng.choice(occ))
+            k = int((a["table"][s] >= 0).sum())
+            start = int(rng.integers(0, k))
+            alloc = kv_pool.release_range(
+                alloc, s, start, int(rng.integers(1, k - start + 1)))
+        elif op == "retain":
+            mapped = np.unique(a["table"][a["table"] >= 0])
+            cand = [int(b) for b in mapped if b not in retained]
+            if cand and rng.random() < 0.7:
+                blk = int(rng.choice(cand))
+                alloc = kv_pool.retain_block(alloc, blk)
+                retained.append(blk)
+            elif retained:
+                blk = retained.pop(int(rng.integers(0, len(retained))))
+                alloc = kv_pool.release_block(alloc, blk)
+        elif op == "free" and occ:
+            alloc = kv_pool.free_slot(alloc, int(rng.choice(occ)))
+        elif op == "preempt" and occ:
+            pos = np.zeros(_SLOTS, np.int32)
+            active = np.zeros(_SLOTS, bool)
+            for s in occ:
+                k = int((a["table"][s] >= 0).sum())
+                if k < _MB:
+                    pos[s], active[s] = k * BS, True
+            alloc, _pre = kv_pool.preempt_for_free(
+                alloc, jnp.asarray(pos), jnp.asarray(active),
+                jnp.asarray(rng.integers(1, 20, _SLOTS), jnp.int32),
+                jnp.asarray(rng.permutation(_SLOTS) + 1, jnp.int32), BS)
+        elif op == "steal":
+            if stolen is None and n_free > 0:
+                alloc, stolen = kv_pool.steal_blocks(
+                    alloc, int(rng.integers(1, n_free + 1)))
+            elif stolen is not None:
+                alloc = kv_pool.unsteal_blocks(alloc, stolen)
+                stolen = None
+        _check_alloc_invariants(alloc)
+        a3 = _snap(alloc)
+        head = set(a3["free"][: int(a3["n_free"])].tolist())
+        assert not (head & set(retained)), "retained block on free stack"
+    # drain: give back steals and retention, free every slot -> pool whole
+    if stolen is not None:
+        alloc = kv_pool.unsteal_blocks(alloc, stolen)
+    for blk in retained:
+        alloc = kv_pool.release_block(alloc, blk)
+    a = _snap(alloc)
+    for s in range(_SLOTS):
+        if (a["table"][s] >= 0).any():
+            alloc = kv_pool.free_slot(alloc, s)
+    a = _snap(alloc)
+    assert int(a["n_free"]) == _NB - 1
+    assert set(a["free"][: _NB - 1].tolist()) == set(range(1, _NB))
+    assert (a["ref"][1:] == 0).all()
